@@ -1,0 +1,110 @@
+"""Shared benchmark scaffolding.
+
+Simulations reproduce the paper's *structure* at CPU-tractable scale: the
+paper's 20 GB guests with 2 MB/4 KB pages become ``n_logical`` base pages with
+``hp_ratio`` subpages per huge page; each workload's skew shape comes from
+``repro.data.traces`` (calibrated against Fig. 2/16). Near-memory sizes,
+CLs and near:far ratios scale proportionally. Results are written to
+experiments/benchmarks/<name>.json and summarized by benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GpacConfig, gpac, init_state, metrics, start_all_far
+from repro.core import address_space as asp
+from repro.core import telemetry as tele
+from repro.data import traces as tr
+
+OUT_DIR = os.path.join("experiments", "benchmarks")
+
+# CPU-scale stand-in for the paper's 2 MB / 4 KB geometry
+HP_RATIO = 64
+N_LOGICAL = 32 * 1024  # base pages per guest (-> 512 huge pages)
+WINDOWS = 24
+ACCESSES = 16 * 1024
+
+# paper CL values scaled by (HP_RATIO / 512)
+def scaled_cl(workload: str) -> int:
+    cl512 = tr.PAPER_CL.get(workload, 64)
+    return max(2, int(round(cl512 * HP_RATIO / 512)))
+
+
+def guest_config(near_fraction: float = 0.5, cl: int | None = None,
+                 n_logical: int = N_LOGICAL) -> GpacConfig:
+    need_hp = -(-n_logical // HP_RATIO)
+    # 100% GPA slack: the paper's far tier (1.6 TB NVMM vs 20 GB guests) never
+    # starves demotion of free blocks; a tight GPA space would cap demotions
+    n_hp = need_hp + max(4, need_hp)
+    return GpacConfig(
+        n_logical=n_logical,
+        hp_ratio=HP_RATIO,
+        n_gpa_hp=n_hp,
+        n_near=max(1, int(near_fraction * need_hp)),
+        base_elems=2,
+        cl=cl or HP_RATIO // 2,
+        ipt_min_hits=1,
+    )
+
+
+def workload_trace(workload: str, n_windows: int = WINDOWS,
+                   accesses: int = ACCESSES, seed: int = 0,
+                   n_logical: int = N_LOGICAL) -> np.ndarray:
+    return tr.generate(tr.TraceSpec(
+        workload, n_logical=n_logical, hp_ratio=HP_RATIO,
+        n_windows=n_windows, accesses_per_window=accesses, seed=seed))
+
+
+def run_single_guest(workload: str, use_gpac: bool, policy: str = "memtierd",
+                     near_fraction: float = 0.5, cl: int | None = None,
+                     start_far: bool = True, seed: int = 0,
+                     n_windows: int = WINDOWS, tier_pair: str = "dram_nvmm"):
+    """Paper §5.2 setting: one guest, tiering active, optional GPAC.
+
+    Returns (final state snapshot, per-window series dict).
+    """
+    cfg = guest_config(near_fraction, cl or scaled_cl(workload))
+    state = init_state(cfg)
+    if start_far:
+        state = start_all_far(cfg, state)
+    trace = workload_trace(workload, n_windows=n_windows, seed=seed)
+    series = dict(near_usage=[], near_capacity=[], hit_rate=[], tput=[],
+                  promoted=[], demoted=[])
+    for w in range(trace.shape[0]):
+        state = gpac.window_step(
+            cfg, state, jnp.asarray(trace[w]), policy=policy,
+            use_gpac=use_gpac, max_batches=16, budget=256)
+        series["near_usage"].append(float(metrics.near_usage(cfg, state)))
+        series["near_capacity"].append(
+            float(metrics.near_capacity_used(cfg, state)))
+        series["hit_rate"].append(float(metrics.hit_rate(state)))
+        series["tput"].append(
+            float(metrics.modeled_throughput(state, tier_pair)))
+        series["promoted"].append(int(state.stats["promoted_blocks"]))
+        series["demoted"].append(int(state.stats["demoted_blocks"]))
+    return cfg, state, series
+
+
+def steady(xs: list, tail: int = 6) -> float:
+    return float(np.mean(xs[-tail:]))
+
+
+def save(name: str, payload: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return payload
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.ms = (time.perf_counter() - self.t0) * 1e3

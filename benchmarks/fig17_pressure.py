@@ -1,0 +1,51 @@
+"""Fig. 17: benefit of GPAC under varying near:far capacity ratios.
+
+Paper: big wins at 10:90 / 20:80 / 30:70, shrinking as near memory grows
+(at 70:30 nearly everything fits near and GPAC's edge vanishes).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.simulate import make_multi_guest, run_multi_guest
+from repro.data import traces as tr
+
+N_GUESTS = 6
+LOGICAL_PER_GUEST = 8 * 1024
+RATIOS = (0.1, 0.2, 0.3, 0.5, 0.7)
+
+
+def run():
+    traces = np.stack([
+        tr.generate(tr.TraceSpec(
+            "redis", n_logical=LOGICAL_PER_GUEST, hp_ratio=common.HP_RATIO,
+            n_windows=20, accesses_per_window=8192, seed=g))
+        for g in range(N_GUESTS)])
+    out = {}
+    for ratio in RATIOS:
+        res = {}
+        for use_gpac in (False, True):
+            mg, state = make_multi_guest(
+                n_guests=N_GUESTS, logical_per_guest=LOGICAL_PER_GUEST,
+                hp_ratio=common.HP_RATIO, near_fraction=ratio,
+                base_elems=2, cl=common.scaled_cl("redis"), ipt_min_hits=1,
+                gpa_slack=1.0)
+            _, series = run_multi_guest(
+                mg, state, traces, policy="memtierd", use_gpac=use_gpac,
+                cl=common.scaled_cl("redis"))
+            res["gpac" if use_gpac else "baseline"] = float(
+                series["throughput"][-5:].mean())
+        res["delta"] = res["gpac"] / res["baseline"] - 1
+        out[f"{int(ratio*100)}:{100-int(ratio*100)}"] = res
+    deltas = [out[k]["delta"] for k in out]
+    out["benefit_shrinks_with_more_near"] = bool(deltas[0] > deltas[-1])
+    return common.save("fig17_pressure", out)
+
+
+if __name__ == "__main__":
+    r = run()
+    for k, d in r.items():
+        if isinstance(d, dict):
+            print(f"near:far {k:6s} delta {d['delta']:+.1%}")
+    print("benefit shrinks as near grows:", r["benefit_shrinks_with_more_near"])

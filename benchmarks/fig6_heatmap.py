@@ -1,0 +1,60 @@
+"""Fig. 6: hot-region view of the (host) address space before/after GPAC.
+
+DAMON-style dump: per huge page, the host-visible access count, before and
+after consolidation. The paper's observation: scattered warm regions collapse
+into a few intensely hot regions after GPAC.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core import gpac, init_state
+from repro.core import address_space as asp
+
+
+def hot_region_stats(host_counts: np.ndarray, hot_thresh: float = 0.5):
+    """Contiguous runs of huge pages above hot_thresh x max count."""
+    hot = host_counts > hot_thresh * max(host_counts.max(), 1)
+    runs, run = [], 0
+    for h in hot:
+        if h:
+            run += 1
+        elif run:
+            runs.append(run)
+            run = 0
+    if run:
+        runs.append(run)
+    return dict(n_hot_pages=int(hot.sum()), n_regions=len(runs),
+                max_run=max(runs, default=0))
+
+
+def run():
+    cfg = common.guest_config(cl=common.scaled_cl("redis"))
+    trace = common.workload_trace("redis", n_windows=8)
+    dumps = {}
+    for use_gpac in (False, True):
+        state = init_state(cfg)
+        for w in range(trace.shape[0]):
+            state = asp.record_accesses(cfg, state, jnp.asarray(trace[w]))
+            if use_gpac:
+                state = gpac.gpac_maintenance(cfg, state, "ipt", 16)
+        counts = np.asarray(state.host_counts)
+        dumps["gpac" if use_gpac else "baseline"] = dict(
+            host_counts=counts.tolist(), **hot_region_stats(counts))
+    res = dict(
+        **dumps,
+        consolidated=dumps["gpac"]["n_hot_pages"]
+        < dumps["baseline"]["n_hot_pages"],
+    )
+    return common.save("fig6_heatmap", res)
+
+
+if __name__ == "__main__":
+    r = run()
+    for k in ("baseline", "gpac"):
+        d = r[k]
+        print(f"{k:9s} hot_hp={d['n_hot_pages']:4d} regions={d['n_regions']:3d} "
+              f"max_run={d['max_run']}")
+    print("hotness consolidated:", r["consolidated"])

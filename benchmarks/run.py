@@ -1,0 +1,86 @@
+"""Run the full benchmark suite (one module per paper table/figure) and print
+a summary against the paper's claims. ``python -m benchmarks.run``."""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    fig2_skew_cdf,
+    fig6_heatmap,
+    fig7_memdist,
+    fig8_dram_reduction,
+    fig9_at_scale,
+    fig11_migration,
+    fig13_tier_pairs,
+    fig15_cl_sensitivity,
+    fig16_scatter_hist,
+    fig17_pressure,
+    table3_consolidation,
+)
+
+SUITE = [
+    ("fig2_skew_cdf", fig2_skew_cdf),
+    ("table3_consolidation", table3_consolidation),
+    ("fig6_heatmap", fig6_heatmap),
+    ("fig7_memdist", fig7_memdist),
+    ("fig8_dram_reduction", fig8_dram_reduction),
+    ("fig9_at_scale", fig9_at_scale),
+    ("fig11_migration", fig11_migration),
+    ("fig13_tier_pairs", fig13_tier_pairs),
+    ("fig15_cl_sensitivity", fig15_cl_sensitivity),
+    ("fig16_scatter_hist", fig16_scatter_hist),
+    ("fig17_pressure", fig17_pressure),
+]
+
+
+def main():
+    results = {}
+    t_total = time.time()
+    failures = []
+    for name, mod in SUITE:
+        t0 = time.time()
+        print(f"\n=== {name} " + "=" * (60 - len(name)))
+        try:
+            results[name] = mod.run()
+            print(f"    ok ({time.time()-t0:.1f}s)")
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"    FAILED: {e!r}")
+
+    print("\n" + "=" * 70)
+    print("SUMMARY vs paper claims")
+    print("=" * 70)
+    r = results
+    if "fig8_dram_reduction" in r:
+        d = r["fig8_dram_reduction"]
+        print(f"Fig 8  near-memory reduction (skewed avg): "
+              f"{d['avg_near_reduction_skewed']:.1%} (paper ~72%), "
+              f"perf {d['avg_perf_delta_skewed']:+.2%} (paper -0.86%)")
+    if "fig9_at_scale" in r:
+        d = r["fig9_at_scale"]
+        for p in ("memtierd", "tpp", "autonuma"):
+            print(f"Fig 9  {p}+GPAC throughput: {d[p]['avg_delta']:+.1%} "
+                  f"(paper {d['paper_target'][p]:+.1%})")
+    if "fig11_migration" in r:
+        d = r["fig11_migration"]
+        print(f"Fig 11 promoted {d['promoted_reduction']:.1%} less "
+              f"(paper 64%), demoted {d['demoted_reduction']:.1%} less "
+              f"(paper 87%)")
+    if "fig13_tier_pairs" in r:
+        d = r["fig13_tier_pairs"]
+        print(f"Fig 13 DRAM/CXL {d['dram_cxl']['delta']:+.1%} (paper +6.3%); "
+              f"Fig 14 HBM/DRAM {d['hbm_dram']['delta']:+.1%} (paper +5.3%)")
+    if "fig17_pressure" in r:
+        d = r["fig17_pressure"]
+        print(f"Fig 17 benefit shrinks with more near memory: "
+              f"{d['benefit_shrinks_with_more_near']}")
+    print(f"\ntotal {time.time()-t_total:.1f}s; "
+          f"{len(SUITE)-len(failures)}/{len(SUITE)} benchmarks ok")
+    for name, err in failures:
+        print(f"  FAILED {name}: {err}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

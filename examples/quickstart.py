@@ -1,0 +1,40 @@
+"""Quickstart: the paper's core result in ~40 lines.
+
+One guest runs a Redis-shaped workload over a tiered address space. The host
+(Memtierd-like policy) sees only huge-page-granular hotness. Without GPAC it
+drags skewed hot huge pages into near memory; with GPAC the guest consolidates
+scattered hot base pages first, so near memory holds dense-hot blocks only.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import GpacConfig, gpac, init_state, metrics, start_all_far
+from repro.data import traces
+
+CFG = GpacConfig(n_logical=16384, hp_ratio=64, n_gpa_hp=384, n_near=128,
+                 base_elems=2, cl=8, ipt_min_hits=1)
+
+
+def run(use_gpac: bool):
+    state = start_all_far(CFG, init_state(CFG))
+    trace = traces.generate(traces.TraceSpec(
+        "redis", n_logical=CFG.n_logical, hp_ratio=CFG.hp_ratio,
+        n_windows=16, accesses_per_window=8192))
+    for w in range(trace.shape[0]):
+        state = gpac.window_step(CFG, state, jnp.asarray(trace[w]),
+                                 policy="memtierd", use_gpac=use_gpac)
+    return state
+
+
+if __name__ == "__main__":
+    for use_gpac in (False, True):
+        state = run(use_gpac)
+        label = "Memtierd+GPAC" if use_gpac else "Memtierd     "
+        print(f"{label}: near-memory used "
+              f"{float(metrics.near_capacity_used(CFG, state)):6.1%} of tier, "
+              f"{float(metrics.near_usage(CFG, state)):6.1%} of RSS | "
+              f"hit rate {float(metrics.hit_rate(state)):.3f} | "
+              f"consolidated {int(state.stats['consolidated_pages'])} pages")
+    print("\nGPAC serves the same hot set from far fewer near-memory blocks "
+          "(paper Fig. 8: 50-70% less near memory at equal performance).")

@@ -1,0 +1,48 @@
+"""Serving example: continuous batching with the GPAC-tiered paged KV cache.
+
+Runs the same request set with and without GPAC and shows (a) identical
+generations -- consolidation is invisible to the model -- and (b) the
+placement stats that differ (near-tier pressure, migration traffic).
+
+    PYTHONPATH=src python examples/serve_tiered_kv.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as config_lib
+from repro.models import registry
+from repro.serve.engine import Engine, EngineConfig
+from repro.serve.scheduler import Request, SchedulerConfig
+
+
+def run(use_gpac: bool, model, params):
+    ecfg = EngineConfig(
+        max_seqs=4, max_seq_len=96, pages_per_block=4, near_fraction=0.4,
+        sched=SchedulerConfig(max_seqs=4, maintenance_every=6,
+                              use_gpac=use_gpac, reserve_tokens=8))
+    eng = Engine(model, params, ecfg)
+    rng = np.random.default_rng(42)
+    reqs = [Request(rid=i, prompt=rng.integers(0, model.cfg.vocab, 32).tolist(),
+                    max_new=12) for i in range(6)]
+    for r in reqs:
+        eng.sched.submit(r)
+    eng.run()
+    return [r.out for r in reqs], eng.stats()
+
+
+if __name__ == "__main__":
+    cfg = config_lib.reduced("qwen2-0.5b").replace(
+        dtype=jnp.float32, page_size=8)
+    model = registry.build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    outs, stats = {}, {}
+    for g in (False, True):
+        outs[g], stats[g] = run(g, model, params)
+    print("generations identical with/without GPAC:", outs[False] == outs[True])
+    for g in (False, True):
+        s = stats[g]
+        print(f"{'GPAC' if g else 'base'}: near used "
+              f"{s['near_capacity_used']:.1%}, hit {s['hit_rate']:.3f}, "
+              f"consolidated {s['consolidated_pages']}, promoted "
+              f"{s['promoted_blocks']}, demoted {s['demoted_blocks']}")

@@ -1,0 +1,59 @@
+"""Assigned architecture configs (system prompt pool).
+
+``get(name)`` returns the exact published config (CLI id or module name);
+``reduced(name)`` returns the small same-family smoke-test variant.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchConfig, SHAPE_SPECS, SHAPES  # noqa: F401
+
+# canonical CLI ids (--arch <id>), in assignment order
+CLI_IDS = (
+    "qwen2-vl-2b",
+    "jamba-1.5-large-398b",
+    "kimi-k2-1t-a32b",
+    "qwen2-moe-a2.7b",
+    "internlm2-20b",
+    "gemma-7b",
+    "smollm-360m",
+    "qwen2-0.5b",
+    "whisper-tiny",
+    "xlstm-1.3b",
+)
+
+_MODULES = {
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t_a32b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "internlm2-20b": "internlm2_20b",
+    "gemma-7b": "gemma_7b",
+    "smollm-360m": "smollm_360m",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "whisper-tiny": "whisper_tiny",
+    "xlstm-1.3b": "xlstm_1_3b",
+}
+# also accept module-style names
+_MODULES.update({v: v for v in list(_MODULES.values())})
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(set(_MODULES))}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get(name: str) -> ArchConfig:
+    """Exact assigned config."""
+    return _module(name).CONFIG
+
+
+def reduced(name: str) -> ArchConfig:
+    """Small same-family config for CPU smoke tests."""
+    return _module(name).reduced()
+
+
+def all_archs() -> tuple:
+    return CLI_IDS

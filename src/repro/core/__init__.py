@@ -1,0 +1,21 @@
+"""GPAC core: guest physical address-space consolidation for memory tiering.
+
+Public API re-exports. See DESIGN.md for the paper -> TPU mapping.
+"""
+from repro.core.types import (  # noqa: F401
+    FREE,
+    GpacConfig,
+    TieredState,
+    allocated_hp_mask,
+    init_state,
+    start_all_far,
+)
+from repro.core import (  # noqa: F401
+    address_space,
+    consolidator,
+    filter,
+    gpac,
+    metrics,
+    telemetry,
+    tiering,
+)

@@ -1,0 +1,149 @@
+"""Two-level address translation and the data read/write paths.
+
+The translation chain (paper Fig. 1):
+
+    logical page  --gpt-->  gpa page  --(block_table on gpa//hp_ratio)-->  slot
+
+Slots ``< n_near`` resolve into ``near_pool``; the rest into ``far_pool``.
+All paths are branch-free (predicated dual-pool gathers with ``mode='drop'``
+scatters) so they jit and shard cleanly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import FREE, GpacConfig, TieredState
+
+
+# --------------------------------------------------------------------------
+# translation helpers
+# --------------------------------------------------------------------------
+def translate(cfg: GpacConfig, state: TieredState, logical: jax.Array):
+    """logical page ids -> (slot, offset-within-block, valid mask).
+
+    Invalid ids (negative / >= n_logical) translate to an out-of-bounds slot
+    so downstream ``mode='drop'`` scatters ignore them and gathers are
+    clamped + masked.
+    """
+    valid = (logical >= 0) & (logical < cfg.n_logical)
+    safe = jnp.where(valid, logical, 0)
+    gpa = state.gpt[safe]
+    hp, off = gpa // cfg.hp_ratio, gpa % cfg.hp_ratio
+    slot = state.block_table[hp]
+    return slot, off, valid
+
+
+def fused_translation(cfg: GpacConfig, state: TieredState) -> jax.Array:
+    """Pre-composed logical page -> flat physical row index (the beyond-paper
+    'fused translation cache': one gather instead of two at access time).
+
+    flat row index = slot * hp_ratio + off over the virtually concatenated
+    [near_pool; far_pool] row space. Must be recomputed after consolidation
+    or migration (the framework's analogue of a TLB shootdown).
+    """
+    gpa = state.gpt
+    hp, off = gpa // cfg.hp_ratio, gpa % cfg.hp_ratio
+    return state.block_table[hp] * cfg.hp_ratio + off
+
+
+def _flat_rows(cfg: GpacConfig, state: TieredState) -> jax.Array:
+    """View of both pools as one (n_slots*hp_ratio, base_elems) row space."""
+    near = state.near_pool.reshape(-1, cfg.base_elems)
+    far = state.far_pool.reshape(-1, cfg.base_elems)
+    return jnp.concatenate([near, far], axis=0)
+
+
+# --------------------------------------------------------------------------
+# data paths
+# --------------------------------------------------------------------------
+def read_logical(cfg: GpacConfig, state: TieredState, logical: jax.Array) -> jax.Array:
+    """Gather base-page payloads through the full two-level translation.
+
+    Returns dtype[len(logical), base_elems]; invalid ids read zeros.
+    """
+    slot, off, valid = translate(cfg, state, logical)
+    flat = slot * cfg.hp_ratio + off
+    rows = _flat_rows(cfg, state)[jnp.where(valid, flat, 0)]
+    return jnp.where(valid[:, None], rows, 0)
+
+
+def write_logical(
+    cfg: GpacConfig, state: TieredState, logical: jax.Array, values: jax.Array
+) -> TieredState:
+    """Scatter payloads through translation. Invalid ids are dropped."""
+    slot, off, valid = translate(cfg, state, logical)
+    near_idx = jnp.where(valid & (slot < cfg.n_near), slot, cfg.n_near)
+    far_idx = jnp.where(valid & (slot >= cfg.n_near), slot - cfg.n_near, cfg.n_far)
+    near = state.near_pool.at[near_idx, off].set(values, mode="drop")
+    far = state.far_pool.at[far_idx, off].set(values, mode="drop")
+    return dataclasses_replace(state, near_pool=near, far_pool=far)
+
+
+def record_accesses(
+    cfg: GpacConfig, state: TieredState, logical: jax.Array, counts: jax.Array | None = None
+) -> TieredState:
+    """Charge accesses to guest (base-page) and host (huge-page) telemetry.
+
+    ``logical`` int32[k] page ids (pad with -1), ``counts`` optional weights.
+    The host side only ever sees the huge-page aggregate -- this is the
+    information asymmetry the paper exploits.
+    """
+    if counts is None:
+        counts = jnp.ones(logical.shape, jnp.int32)
+    valid = (logical >= 0) & (logical < cfg.n_logical)
+    counts = jnp.where(valid, counts, 0)
+    l_idx = jnp.where(valid, logical, cfg.n_logical)
+    guest = state.guest_counts.at[l_idx].add(counts, mode="drop")
+
+    gpa = state.gpt[jnp.where(valid, logical, 0)]
+    hp = jnp.where(valid, gpa // cfg.hp_ratio, cfg.n_gpa_hp)
+    host = state.host_counts.at[hp].add(counts, mode="drop")
+    touch = state.last_touch_epoch.at[hp].max(
+        jnp.broadcast_to(state.epoch, hp.shape), mode="drop"
+    )
+
+    # near/far hit accounting (slot of the huge page at access time)
+    slot = state.block_table[jnp.where(valid, gpa // cfg.hp_ratio, 0)]
+    near_hits = jnp.where(valid & (slot < cfg.n_near), counts, 0).sum()
+    far_hits = jnp.where(valid & (slot >= cfg.n_near), counts, 0).sum()
+    stats = dict(state.stats)
+    stats["near_hits"] = stats["near_hits"] + near_hits.astype(jnp.int32)
+    stats["far_hits"] = stats["far_hits"] + far_hits.astype(jnp.int32)
+    return dataclasses_replace(
+        state,
+        guest_counts=guest,
+        host_counts=host,
+        last_touch_epoch=touch,
+        stats=stats,
+    )
+
+
+# --------------------------------------------------------------------------
+# allocation
+# --------------------------------------------------------------------------
+def alloc_free_huge_region(
+    cfg: GpacConfig,
+    state: TieredState,
+    hp_range: tuple[jax.Array | int, jax.Array | int] | None = None,
+):
+    """Find the first fully-free huge page (the consolidator's fresh region).
+
+    Returns (hp_index | -1). A huge page is free iff all ``hp_ratio`` of its
+    gpa pages are unmapped. ``hp_range=(lo, hi)`` restricts the search to one
+    guest's GPA segment (multi-tenant simulation: each guest consolidates only
+    within its own physical address space).
+    """
+    free = (state.rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) == FREE).all(axis=1)
+    if hp_range is not None:
+        lo, hi = hp_range
+        hp = jnp.arange(cfg.n_gpa_hp, dtype=jnp.int32)
+        free = free & (hp >= lo) & (hp < hi)
+    idx = jnp.argmax(free)
+    return jnp.where(free.any(), idx.astype(jnp.int32), jnp.int32(-1))
+
+
+def dataclasses_replace(state: TieredState, **kw) -> TieredState:
+    import dataclasses
+
+    return dataclasses.replace(state, **kw)

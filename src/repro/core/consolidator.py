@@ -1,0 +1,131 @@
+"""Page Consolidator (paper §4.3.2, Algorithm 1) -- guest kernel-space layer.
+
+``consolidate_pages(cfg, state, pages)`` is the functional analogue of the
+paper's custom syscall: it moves up to ``hp_ratio`` (512 in the paper) base
+pages into one freshly allocated, fully free huge-page-sized GPA region and
+rewrites the logical->gpa mapping. Multiple invocations consolidate more
+pages, exactly as in the paper. Returns -ENOMEM behaviour as a no-op +
+``consolidation_enomem`` counter when no fully free huge region exists.
+
+The data copy is the compute hot-spot; ``repro.kernels.consolidate`` provides
+the Pallas TPU kernel for the common near->near path, and this module is the
+general (mixed-tier, predicated) reference path used under jit on any backend.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import address_space as asp
+from repro.core.address_space import dataclasses_replace
+from repro.core.types import FREE, GpacConfig, TieredState
+
+
+def consolidate_pages(
+    cfg: GpacConfig,
+    state: TieredState,
+    pages: jax.Array,
+    hp_range: tuple | None = None,
+) -> TieredState:
+    """One Algorithm-1 invocation.
+
+    ``pages``: int32[hp_ratio] logical page ids, padded with -1. Pages are
+    packed into slots 0..k-1 of the fresh region in the given order.
+    ``hp_range`` optionally confines the fresh region to one guest's GPA
+    segment (multi-tenant simulation).
+
+    Steps (mirroring Algorithm 1):
+      1. huge_region <- alloc(HPAGE_SIZE)             (fully free GPA region)
+      2. for each old_page i: copy payload old -> region[i]
+      3. set_pte_at: gpt[logical] = region*hp_ratio+i ; rmap updates
+      4. flush_tlb_mm_range: fused-translation caches are invalidated by
+         bumping stats['tlb_shootdowns'] (callers drop cached fused tables)
+      5. free(old_page): old gpa rmap entries -> FREE
+    """
+    pages = pages.astype(jnp.int32)
+    if pages.shape != (cfg.hp_ratio,):
+        raise ValueError(f"pages must be int32[{cfg.hp_ratio}]")
+
+    valid = (pages >= 0) & (pages < cfg.n_logical)
+    # a page already sitting in a fully-free... (cannot be: it's mapped)
+    region = asp.alloc_free_huge_region(cfg, state, hp_range)
+    ok = region >= 0
+    n_sel = valid.sum()
+
+    safe_pages = jnp.where(valid, pages, 0)
+    old_gpa = state.gpt[safe_pages]
+    # never move a page onto itself (possible if caller passes a page that
+    # already lives in `region`, which alloc guarantees not to happen)
+    new_gpa = region * cfg.hp_ratio + jnp.arange(cfg.hp_ratio, dtype=jnp.int32)
+    do_move = valid & ok
+
+    # ---- 2. data copy (predicated dual-pool gather/scatter) -------------
+    src_slot = state.block_table[old_gpa // cfg.hp_ratio]
+    src_off = old_gpa % cfg.hp_ratio
+    rows = jnp.concatenate(
+        [
+            state.near_pool.reshape(-1, cfg.base_elems),
+            state.far_pool.reshape(-1, cfg.base_elems),
+        ],
+        axis=0,
+    )
+    payload = rows[jnp.where(do_move, src_slot * cfg.hp_ratio + src_off, 0)]
+
+    dst_slot = state.block_table[jnp.maximum(region, 0)]
+    dst_off = jnp.arange(cfg.hp_ratio, dtype=jnp.int32)
+    near_idx = jnp.where(do_move & (dst_slot < cfg.n_near), dst_slot, cfg.n_near)
+    far_idx = jnp.where(
+        do_move & (dst_slot >= cfg.n_near), dst_slot - cfg.n_near, cfg.n_far
+    )
+    near_pool = state.near_pool.at[near_idx, dst_off].set(payload, mode="drop")
+    far_pool = state.far_pool.at[far_idx, dst_off].set(payload, mode="drop")
+
+    # ---- 3/5. mapping updates -------------------------------------------
+    gpt = state.gpt.at[jnp.where(do_move, pages, cfg.n_logical)].set(
+        new_gpa, mode="drop"
+    )
+    rmap = state.rmap.at[jnp.where(do_move, old_gpa, cfg.n_gpa)].set(FREE, mode="drop")
+    rmap = rmap.at[jnp.where(do_move, new_gpa, cfg.n_gpa)].set(
+        safe_pages, mode="drop"
+    )
+    region_epoch = state.region_epoch.at[jnp.maximum(region, 0)].set(
+        jnp.where(ok, state.epoch, state.region_epoch[jnp.maximum(region, 0)])
+    )
+
+    moved = do_move.sum()
+    stats = dict(state.stats)
+    stats["consolidated_pages"] = stats["consolidated_pages"] + moved.astype(jnp.int32)
+    stats["consolidation_calls"] = stats["consolidation_calls"] + jnp.where(
+        n_sel > 0, 1, 0
+    ).astype(jnp.int32)
+    stats["consolidation_enomem"] = stats["consolidation_enomem"] + jnp.where(
+        (n_sel > 0) & ~ok, 1, 0
+    ).astype(jnp.int32)
+    stats["copied_bytes"] = stats["copied_bytes"] + (
+        moved.astype(jnp.int32) * cfg.base_bytes
+    )
+    stats["tlb_shootdowns"] = stats["tlb_shootdowns"] + jnp.where(moved > 0, 1, 0).astype(
+        jnp.int32
+    )
+    return dataclasses_replace(
+        state,
+        gpt=gpt,
+        rmap=rmap,
+        near_pool=near_pool,
+        far_pool=far_pool,
+        region_epoch=region_epoch,
+        stats=stats,
+    )
+
+
+def consolidate_batches(
+    cfg: GpacConfig, state: TieredState, batches: jax.Array, hp_range: tuple | None = None
+) -> TieredState:
+    """Invoke Algorithm 1 once per batch row (lax.scan over invocations --
+    the paper's 'multiple invocations are required' loop)."""
+
+    def body(st, row):
+        return consolidate_pages(cfg, st, row, hp_range), None
+
+    state, _ = jax.lax.scan(body, state, batches)
+    return state

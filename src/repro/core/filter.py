@@ -1,0 +1,76 @@
+"""Scattered Page Filter (paper §4.3.1) -- guest user-space policy layer.
+
+Input: the telemetry hot mask. Output: fixed-shape batches of logical page
+ids (each batch <= hp_ratio) to hand to ``consolidate_pages()``.
+
+Selection rule (paper): a hot base page is a consolidation candidate iff the
+huge page it currently occupies has fewer than CL hot subpages. Freshly
+consolidated regions are exempt for ``reconsolidate_cooldown`` epochs to stop
+ping-ponging of partially filled regions (implementation detail the paper
+leaves open; documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import telemetry
+from repro.core.types import GpacConfig, TieredState
+
+
+def candidate_mask(
+    cfg: GpacConfig,
+    state: TieredState,
+    hot: jax.Array,
+    cl: int | jax.Array | None = None,
+    allow: jax.Array | None = None,
+) -> jax.Array:
+    """bool[n_logical]: hot pages living in skewed (< CL hot subpages) huge
+    pages that are not inside a cooldown region. ``allow`` optionally
+    restricts candidates to one guest's logical pages (multi-tenant)."""
+    cl = cfg.cl if cl is None else cl
+    per_hp = telemetry.hot_subpages_per_hp(cfg, state, hot)
+    hp_of = state.gpt // cfg.hp_ratio
+    skewed = (per_hp[hp_of] > 0) & (per_hp[hp_of] < cl)
+    cooling = (state.region_epoch[hp_of] >= 0) & (
+        state.epoch - state.region_epoch[hp_of] < cfg.reconsolidate_cooldown
+    )
+    out = hot & skewed & ~cooling
+    if allow is not None:
+        out = out & allow
+    return out
+
+
+def select_batches(
+    cfg: GpacConfig,
+    state: TieredState,
+    hot: jax.Array,
+    max_batches: int,
+    cl: int | jax.Array | None = None,
+    allow: jax.Array | None = None,
+):
+    """Pick up to ``max_batches * hp_ratio`` candidates, hottest first, and
+    shape them into ``(max_batches, hp_ratio)`` id batches padded with -1.
+
+    Ordering matters: consolidating the hottest scattered pages first densifies
+    the regions the host is most likely to promote. Candidates are ranked by
+    (current-window count, history popcount).
+    """
+    cand = candidate_mask(cfg, state, hot, cl, allow)
+    # rank: hotter first; stable by page id for determinism
+    score = (
+        state.guest_counts.astype(jnp.int32) * 256
+        + telemetry._popcount_u8(state.ipt_hist).astype(jnp.int32)
+    )
+    score = jnp.where(cand, score, -1)
+    k = max_batches * cfg.hp_ratio
+    k = min(k, cfg.n_logical)
+    _, top_ids = jax.lax.top_k(score, k)
+    top_valid = score[top_ids] >= 0
+    ids = jnp.where(top_valid, top_ids.astype(jnp.int32), -1)
+    pad = max_batches * cfg.hp_ratio - k
+    if pad:
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)])
+    batches = ids.reshape(max_batches, cfg.hp_ratio)
+    counts = (batches >= 0).sum(axis=1).astype(jnp.int32)
+    return batches, counts

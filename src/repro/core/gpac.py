@@ -1,0 +1,80 @@
+"""GPAC orchestration (paper Fig. 5): telemetry -> filter -> consolidate.
+
+``gpac_maintenance`` is the guest daemon's periodic pass; ``window_step`` is
+the full simulation step the benchmarks drive: accesses -> (optional GPAC) ->
+host tier tick -> window roll. Host and guest layers only communicate through
+the address space itself -- there is no API between them (design goal 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import address_space as asp
+from repro.core import consolidator, filter as pfilter, telemetry, tiering
+from repro.core.types import GpacConfig, TieredState
+
+
+@partial(jax.jit, static_argnames=("cfg", "backend", "max_batches", "cl"))
+def gpac_maintenance(
+    cfg: GpacConfig,
+    state: TieredState,
+    backend: str = "ipt",
+    max_batches: int = 8,
+    cl: int | None = None,
+    allow: jax.Array | None = None,
+    hp_range: tuple | None = None,
+) -> TieredState:
+    """One guest-side GPAC pass: classify hotness, filter scattered hot pages,
+    consolidate them batch-by-batch (<= hp_ratio pages per Algorithm-1 call).
+
+    ``allow``/``hp_range`` confine the pass to one guest's logical pages and
+    GPA segment in the multi-tenant simulation (each guest runs its own GPAC
+    daemon over its own address space, as in the paper).
+    """
+    hot = telemetry.hot_mask(cfg, state, backend)
+    batches, _ = pfilter.select_batches(cfg, state, hot, max_batches, cl, allow)
+    return consolidator.consolidate_batches(cfg, state, batches, hp_range)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "policy", "backend", "use_gpac", "max_batches", "budget"),
+)
+def window_step(
+    cfg: GpacConfig,
+    state: TieredState,
+    accesses: jax.Array,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 8,
+    budget: int = 64,
+) -> TieredState:
+    """One telemetry window: record accesses, run GPAC (guest), run the host
+    tiering tick (block-granular, GPAC-oblivious), roll the window."""
+    state = asp.record_accesses(cfg, state, accesses)
+    if use_gpac:
+        state = gpac_maintenance(cfg, state, backend, max_batches)
+    state = tiering.tick(cfg, state, policy, budget=budget)
+    return telemetry.end_window(cfg, state)
+
+
+def run_windows(
+    cfg: GpacConfig,
+    state: TieredState,
+    trace: jax.Array,
+    **kw,
+) -> tuple[TieredState, list[dict]]:
+    """Drive ``window_step`` over a (n_windows, accesses_per_window) trace,
+    collecting per-window metrics (python loop: benchmarks want the series)."""
+    from repro.core import metrics
+
+    series = []
+    for w in range(trace.shape[0]):
+        state = window_step(cfg, state, trace[w], **kw)
+        series.append(metrics.snapshot(cfg, state))
+    return state, series

@@ -1,0 +1,174 @@
+"""Trace-driven guest/host simulator (drives every paper-figure benchmark).
+
+Single-guest runs use :func:`repro.core.gpac.window_step` directly. This module
+adds the **multi-tenant** setting of paper §5.3: N symmetric guests share one
+host block space; each guest runs its *own* GPAC daemon confined to its own
+logical pages and GPA segment, while a single host tiering policy competes all
+guests' huge pages for the shared near tier. Per-VM metrics (near share, hit
+rate, modeled throughput) mirror Figs. 9, 10, 12.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import address_space as asp
+from repro.core import gpac, metrics, telemetry, tiering
+from repro.core.types import GpacConfig, TieredState, allocated_hp_mask, init_state
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiGuest:
+    """Geometry of N symmetric guests packed into one host block space."""
+
+    cfg: GpacConfig  # combined space
+    n_guests: int
+    logical_per_guest: int
+    hp_per_guest: int
+
+    def logical_range(self, g: int) -> tuple[int, int]:
+        return g * self.logical_per_guest, (g + 1) * self.logical_per_guest
+
+    def hp_range(self, g: int) -> tuple[int, int]:
+        return g * self.hp_per_guest, (g + 1) * self.hp_per_guest
+
+    def localize(self, g: int, local_ids: jax.Array) -> jax.Array:
+        """Guest-local logical page ids -> combined-space ids (-1 passthrough)."""
+        lo, _ = self.logical_range(g)
+        return jnp.where(local_ids >= 0, local_ids + lo, -1)
+
+
+def make_multi_guest(
+    n_guests: int,
+    logical_per_guest: int,
+    hp_ratio: int,
+    near_fraction: float,
+    gpa_slack: float = 0.25,
+    **cfg_kw,
+) -> tuple[MultiGuest, TieredState]:
+    """Build N guests over one host space.
+
+    ``near_fraction``: near-tier capacity as a fraction of *total allocated*
+    huge pages across guests (the paper's DRAM:NVMM ratio knob, Fig. 17).
+    """
+    hp_need = -(-logical_per_guest // hp_ratio)
+    hp_per_guest = hp_need + max(2, int(hp_need * gpa_slack))
+    n_hp = n_guests * hp_per_guest
+    n_near = max(1, int(near_fraction * n_guests * hp_need))
+    cfg = GpacConfig(
+        n_logical=n_guests * logical_per_guest,
+        hp_ratio=hp_ratio,
+        n_gpa_hp=n_hp,
+        n_near=min(n_near, n_hp - 1),
+        **cfg_kw,
+    )
+    mg = MultiGuest(cfg, n_guests, logical_per_guest, hp_per_guest)
+    # Identity init maps guest g's logical pages into its own hp segment only
+    # if segments are tight; with slack we must place pages per guest.
+    gpt = np.full((cfg.n_logical,), -1, np.int64)
+    rmap = np.full((cfg.n_gpa,), -1, np.int64)
+    for g in range(n_guests):
+        lo, hi = mg.logical_range(g)
+        hp_lo, _ = mg.hp_range(g)
+        gpa = hp_lo * hp_ratio + np.arange(logical_per_guest)
+        gpt[lo:hi] = gpa
+        rmap[gpa] = np.arange(lo, hi)
+    state = init_state(cfg)
+    state = asp.dataclasses_replace(
+        state,
+        gpt=jnp.asarray(gpt, jnp.int32),
+        rmap=jnp.asarray(rmap, jnp.int32),
+    )
+    return mg, state
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mg", "policy", "backend", "use_gpac", "max_batches", "budget", "cl"),
+)
+def multi_guest_window(
+    mg: MultiGuest,
+    state: TieredState,
+    accesses: jax.Array,  # int32[n_guests, k] guest-LOCAL page ids, -1 padded
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    cl: int | None = None,
+) -> tuple[TieredState, dict]:
+    """One telemetry window for all guests + one host tier tick.
+
+    Returns per-guest metrics computed *at access time* (hit tiers resolved
+    against the placement in effect when the access happened, like PEBS).
+    """
+    cfg = mg.cfg
+    n_g = mg.n_guests
+    per_guest_near = []
+    per_guest_far = []
+    logical_idx = jnp.arange(cfg.n_logical, dtype=jnp.int32)
+    for g in range(n_g):
+        ids = mg.localize(g, accesses[g])
+        slot, _, valid = asp.translate(cfg, state, ids)
+        per_guest_near.append(jnp.where(valid & (slot < cfg.n_near), 1, 0).sum())
+        per_guest_far.append(jnp.where(valid & (slot >= cfg.n_near), 1, 0).sum())
+        state = asp.record_accesses(cfg, state, ids)
+    if use_gpac:
+        for g in range(n_g):
+            lo, hi = mg.logical_range(g)
+            allow = (logical_idx >= lo) & (logical_idx < hi)
+            state = gpac.gpac_maintenance(
+                cfg, state, backend, max_batches, cl, allow=allow,
+                hp_range=mg.hp_range(g),
+            )
+    state = tiering.tick(cfg, state, policy, budget=budget)
+
+    alloc = allocated_hpm = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    near_share = []
+    for g in range(n_g):
+        hp_lo, hp_hi = mg.hp_range(g)
+        seg = (jnp.arange(cfg.n_gpa_hp) >= hp_lo) & (jnp.arange(cfg.n_gpa_hp) < hp_hi)
+        near_share.append((seg & alloc & in_near).sum())
+    out = dict(
+        near_hits=jnp.stack(per_guest_near),
+        far_hits=jnp.stack(per_guest_far),
+        near_blocks=jnp.stack(near_share),
+    )
+    state = telemetry.end_window(cfg, state)
+    return state, out
+
+
+def run_multi_guest(
+    mg: MultiGuest,
+    state: TieredState,
+    traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
+    tier_pair: str = "dram_nvmm",
+    **kw,
+) -> tuple[TieredState, dict]:
+    """Drive all windows; return the per-guest time series the at-scale
+    benchmarks plot (near blocks, hit rate, modeled throughput)."""
+    n_g, n_w, _ = traces.shape
+    series = dict(
+        near_blocks=np.zeros((n_w, n_g), np.int64),
+        hit_rate=np.zeros((n_w, n_g)),
+        throughput=np.zeros((n_w, n_g)),
+    )
+    near_ns, far_ns = (
+        metrics.TIER_LATENCY_NS[t] for t in metrics.TIER_PAIRS[tier_pair]
+    )
+    for w in range(n_w):
+        state, out = multi_guest_window(mg, state, jnp.asarray(traces[:, w]), **kw)
+        nh = np.asarray(out["near_hits"], np.float64)
+        fh = np.asarray(out["far_hits"], np.float64)
+        hit = nh / np.maximum(nh + fh, 1)
+        amat = (nh * near_ns + fh * far_ns) / np.maximum(nh + fh, 1)
+        series["near_blocks"][w] = np.asarray(out["near_blocks"])
+        series["hit_rate"][w] = hit
+        # same calibration as metrics.modeled_throughput (700 ns + 1 access)
+        series["throughput"][w] = 1e9 / (700.0 + 1.0 * amat)
+    return state, series

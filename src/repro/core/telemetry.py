@@ -1,0 +1,120 @@
+"""Guest-side telemetry (paper §2.2) -- pluggable hotness classifiers.
+
+GPAC is *telemetry-agnostic* (design goal 4): every backend here consumes raw
+per-window access counts and produces the same artifact, a ``bool[n_logical]``
+hot mask. The host never sees any of this -- it only gets huge-page counts.
+
+Backends:
+  * ``ipt``   -- Idle Page Tracking-like: per-window accessed bit, hot if the
+                 bit is set in >= ``ipt_min_hits`` of the last ``ipt_windows``
+                 windows (the paper's prototype telemetry).
+  * ``pebs``  -- PEBS-like sampling: Bernoulli-subsampled counts with a
+                 threshold (hardware-counter flavour).
+  * ``damon`` -- DAMON-like region estimate: hotness smeared over adaptive
+                 power-of-two regions (cheap, coarse).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.address_space import dataclasses_replace
+from repro.core.types import GpacConfig, TieredState
+
+BACKENDS = ("ipt", "pebs", "damon")
+
+
+def end_window(cfg: GpacConfig, state: TieredState) -> TieredState:
+    """Roll the telemetry window: fold current counts into bit history and
+    clear them (the paper's daemon clearing ACCESSED bits)."""
+    accessed = (state.guest_counts > 0).astype(jnp.uint8)
+    hist = ((state.ipt_hist << 1) | accessed).astype(jnp.uint8)
+    h_accessed = (state.host_counts > 0).astype(jnp.uint8)
+    h_hist = ((state.host_hist << 1) | h_accessed).astype(jnp.uint8)
+    return dataclasses_replace(
+        state,
+        ipt_hist=hist,
+        host_hist=h_hist,
+        guest_counts=jnp.zeros_like(state.guest_counts),
+        host_counts=jnp.zeros_like(state.host_counts),
+        epoch=state.epoch + 1,
+    )
+
+
+def _popcount_u8(x: jax.Array) -> jax.Array:
+    n = jnp.zeros(x.shape, jnp.int32)
+    for i in range(8):
+        n = n + ((x >> i) & 1).astype(jnp.int32)
+    return n
+
+
+def hot_mask_ipt(cfg: GpacConfig, state: TieredState) -> jax.Array:
+    """Hot iff accessed in >= ipt_min_hits of the last ipt_windows windows
+    (including the in-flight window)."""
+    mask = jnp.uint8((1 << min(cfg.ipt_windows, 8)) - 1)
+    hits = _popcount_u8(state.ipt_hist & mask)
+    hits = hits + (state.guest_counts > 0).astype(jnp.int32)
+    return hits >= cfg.ipt_min_hits
+
+
+def hot_mask_pebs(
+    cfg: GpacConfig, state: TieredState, key: jax.Array | None = None, rate: float = 0.25
+) -> jax.Array:
+    """Sampled-counter hotness: subsample this window's counts and threshold.
+
+    Deterministic given ``key``; defaults to a fold of the epoch so simulation
+    runs are reproducible.
+    """
+    if key is None:
+        key = jax.random.fold_in(jax.random.PRNGKey(0), state.epoch)
+    sampled = jax.random.binomial(
+        key, state.guest_counts.astype(jnp.float32), rate
+    ).astype(jnp.int32)
+    return sampled >= jnp.maximum(1, jnp.int32(cfg.hot_threshold * rate))
+
+
+def hot_mask_damon(
+    cfg: GpacConfig, state: TieredState, region_pages: int = 64
+) -> jax.Array:
+    """Region-granular estimate: a region is hot if its mean count crosses the
+    threshold; every page inherits its region's verdict (DAMON's trade-off)."""
+    n = state.guest_counts.shape[0]
+    pad = (-n) % region_pages
+    c = jnp.pad(state.guest_counts, (0, pad)).reshape(-1, region_pages)
+    region_hot = c.mean(axis=1) >= cfg.hot_threshold
+    return jnp.repeat(region_hot, region_pages)[:n]
+
+
+def hot_mask(cfg: GpacConfig, state: TieredState, backend: str = "ipt", **kw) -> jax.Array:
+    if backend == "ipt":
+        return hot_mask_ipt(cfg, state)
+    if backend == "pebs":
+        return hot_mask_pebs(cfg, state, **kw)
+    if backend == "damon":
+        return hot_mask_damon(cfg, state, **kw)
+    raise ValueError(f"unknown telemetry backend {backend!r} (have {BACKENDS})")
+
+
+# --------------------------------------------------------------------------
+# skew statistics (paper Fig. 2 / Fig. 16) -- guest-side views
+# --------------------------------------------------------------------------
+def hot_subpages_per_hp(cfg: GpacConfig, state: TieredState, hot: jax.Array) -> jax.Array:
+    """int32[n_gpa_hp]: number of hot base pages inside each huge page.
+
+    This is the quantity the Scattered Page Filter compares against CL, and
+    the x-axis of the paper's skew CDFs. Computed via rmap so unallocated gpa
+    pages never count. The strided reduction dispatches to the hotness_scan
+    Pallas kernel on TPU (tests pin kernel == this jnp path bit-for-bit).
+    """
+    from repro.kernels.hotness_scan import hot_count
+
+    hot_gpa = jnp.where(state.rmap >= 0, hot[jnp.maximum(state.rmap, 0)], False)
+    return hot_count(hot_gpa, cfg.hp_ratio)
+
+
+def accessed_subpages_per_hp(cfg: GpacConfig, state: TieredState) -> jax.Array:
+    """int32[n_gpa_hp]: accessed (count>0) base pages per huge page -- the
+    exact statistic of paper Fig. 2."""
+    acc = state.guest_counts > 0
+    acc_gpa = jnp.where(state.rmap >= 0, acc[jnp.maximum(state.rmap, 0)], False)
+    return acc_gpa.reshape(cfg.n_gpa_hp, cfg.hp_ratio).sum(axis=1).astype(jnp.int32)

@@ -1,0 +1,236 @@
+"""Host-side memory tiering (paper §2.3, §5) -- block-granular policies.
+
+The host sees only huge-page-granular telemetry (``host_counts``,
+``host_hist``, ``last_touch_epoch``) and moves whole blocks between the near
+and far pools. GPAC never modifies anything here -- that is the paper's
+host-agnosticism, and the test matrix runs every policy against the same
+guest-side GPAC unchanged.
+
+Three faithful policy flavours:
+  * ``memtierd`` -- proactive userspace ranking: keep the globally hottest
+    blocks near, even without memory pressure (paper §5.2 uses this).
+  * ``autonuma`` -- hint-fault-style promotion (>=2 touches while far) and
+    demotion only under near-pool pressure, LRU victims.
+  * ``tpp``      -- fault promotion with a free-page watermark: demote coldest
+    blocks until a headroom fraction of near is kept free.
+
+Migration primitive: ``swap_blocks`` -- exchange the placement of a far block
+and a near block (data + block_table + slot_owner), the functional analogue of
+NUMA page migration at block granularity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.address_space import dataclasses_replace
+from repro.core.telemetry import _popcount_u8
+from repro.core.types import GpacConfig, TieredState, allocated_hp_mask
+
+POLICIES = ("memtierd", "autonuma", "tpp")
+NEG = jnp.int32(-(2**31) + 1)
+
+
+def swap_blocks(
+    cfg: GpacConfig,
+    state: TieredState,
+    far_hps: jax.Array,
+    near_hps: jax.Array,
+    k: jax.Array,
+) -> TieredState:
+    """Promote ``far_hps[i]`` and demote ``near_hps[i]`` for i < k.
+
+    Pairs where either id is -1, i >= k, or tiers don't match are dropped.
+    Vectorized: one gather + two drop-mode scatters per pool.
+    """
+    m = far_hps.shape[0]
+    i = jnp.arange(m)
+    fa = jnp.maximum(far_hps, 0)
+    ne = jnp.maximum(near_hps, 0)
+    s_far = state.block_table[fa]
+    s_near = state.block_table[ne]
+    ok = (
+        (i < k)
+        & (far_hps >= 0)
+        & (near_hps >= 0)
+        & (s_far >= cfg.n_near)
+        & (s_near < cfg.n_near)
+    )
+    far_row = jnp.where(ok, s_far - cfg.n_near, cfg.n_far)
+    near_row = jnp.where(ok, s_near, cfg.n_near)
+
+    data_far = state.far_pool[jnp.where(ok, s_far - cfg.n_near, 0)]
+    data_near = state.near_pool[jnp.where(ok, s_near, 0)]
+    near_pool = state.near_pool.at[near_row].set(data_far, mode="drop")
+    far_pool = state.far_pool.at[far_row].set(data_near, mode="drop")
+
+    bt = state.block_table
+    bt = bt.at[jnp.where(ok, far_hps, cfg.n_gpa_hp)].set(s_near, mode="drop")
+    bt = bt.at[jnp.where(ok, near_hps, cfg.n_gpa_hp)].set(s_far, mode="drop")
+    so = state.slot_owner
+    so = so.at[jnp.where(ok, s_near, cfg.n_slots)].set(fa, mode="drop")
+    so = so.at[jnp.where(ok, s_far, cfg.n_slots)].set(ne, mode="drop")
+
+    n_swaps = ok.sum().astype(jnp.int32)
+    alloc = allocated_hp_mask(cfg, state)
+    promoted = (ok & alloc[fa]).sum().astype(jnp.int32)
+    demoted = (ok & alloc[ne]).sum().astype(jnp.int32)
+    stats = dict(state.stats)
+    stats["promoted_blocks"] = stats["promoted_blocks"] + promoted
+    stats["demoted_blocks"] = stats["demoted_blocks"] + demoted
+    stats["tlb_shootdowns"] = stats["tlb_shootdowns"] + (n_swaps > 0).astype(jnp.int32)
+    return dataclasses_replace(
+        state,
+        block_table=bt,
+        slot_owner=so,
+        near_pool=near_pool,
+        far_pool=far_pool,
+        stats=stats,
+    )
+
+
+def _block_score(cfg: GpacConfig, state: TieredState) -> jax.Array:
+    """Host's only view: current-window count + access-bit history."""
+    return (
+        state.host_counts.astype(jnp.int32) * 256
+        + _popcount_u8(state.host_hist).astype(jnp.int32)
+    )
+
+
+def _paired_ids(mask_a, score_a, mask_b, score_b, budget):
+    """Top-``budget`` ids of a (desc score) paired with top ids of b
+    (asc score); -1 padded. Returns (ids_a, ids_b, k)."""
+    budget = min(budget, mask_a.shape[0])
+    sa = jnp.where(mask_a, score_a, NEG)
+    sb = jnp.where(mask_b, -score_b, NEG)
+    va, ia = jax.lax.top_k(sa, budget)
+    vb, ib = jax.lax.top_k(sb, budget)
+    ids_a = jnp.where(va > NEG, ia.astype(jnp.int32), -1)
+    ids_b = jnp.where(vb > NEG, ib.astype(jnp.int32), -1)
+    k = jnp.minimum((ids_a >= 0).sum(), (ids_b >= 0).sum())
+    return ids_a, ids_b, k
+
+
+# --------------------------------------------------------------------------
+# policies
+# --------------------------------------------------------------------------
+def memtierd_tick(cfg: GpacConfig, state: TieredState, budget: int = 64) -> TieredState:
+    """Proactive ranking: the hottest allocated blocks belong near.
+
+    Promote the hottest far blocks whose score beats the coldest near blocks
+    (swap pairs), up to ``budget`` migrations per tick.
+    """
+    score = _block_score(cfg, state)
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    # promotion candidates: *identified hot* far blocks only (score > 0) --
+    # Memtierd migrates hot pages, it does not prefetch cold data near.
+    # victims: near blocks, coldest first (unallocated near blocks score NEG+1
+    # so they are always preferred victims)
+    victim_score = jnp.where(alloc, score, NEG + 1)
+    far_ids, near_ids, k = _paired_ids(
+        alloc & ~in_near & (score > 0), score, in_near, victim_score, budget
+    )
+    # only swap pairs that strictly improve: promote score > victim score
+    gain = jnp.where(
+        (far_ids >= 0) & (near_ids >= 0),
+        score[jnp.maximum(far_ids, 0)] > victim_score[jnp.maximum(near_ids, 0)],
+        False,
+    )
+    # pairs are sorted best-first, so the improving prefix is contiguous
+    k = jnp.minimum(k, gain.astype(jnp.int32).cumprod().sum())
+    state = swap_blocks(cfg, state, far_ids, near_ids, k)
+
+    # proactive demotion: cold allocated near blocks move out into free far
+    # blocks even with no promotion pressure (Memtierd relocates cold data).
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    score = _block_score(cfg, state)
+    cold_near = alloc & in_near & (score == 0)
+    free_far = ~alloc & ~in_near
+    far_ids, near_ids, k = _paired_ids(
+        free_far, jnp.zeros_like(score), cold_near, score, budget
+    )
+    return swap_blocks(cfg, state, far_ids, near_ids, k)
+
+
+def autonuma_tick(
+    cfg: GpacConfig,
+    state: TieredState,
+    budget: int = 16,
+    pressure: float = 0.95,
+) -> TieredState:
+    """Hint-fault promotion; demote only under pressure (LRU victims)."""
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    faulting = alloc & ~in_near & (state.host_counts >= 2)
+    near_used = (alloc & in_near).sum()
+    pressured = near_used >= jnp.int32(pressure * cfg.n_near)
+    # victims: free near blocks always; allocated LRU blocks only if pressured
+    lru = state.last_touch_epoch.astype(jnp.int32)
+    victim_ok = in_near & (~alloc | pressured)
+    victim_score = jnp.where(alloc, lru, NEG + 1)  # free blocks first, then LRU
+    far_ids, near_ids, k = _paired_ids(
+        faulting, state.host_counts.astype(jnp.int32), victim_ok, victim_score, budget
+    )
+    return swap_blocks(cfg, state, far_ids, near_ids, k)
+
+
+def tpp_tick(
+    cfg: GpacConfig,
+    state: TieredState,
+    budget: int = 16,
+    watermark: float = 0.1,
+) -> TieredState:
+    """Fault promotion + watermark demotion under allocation pressure
+    (TPP's two loops).
+
+    1. if promotion demand exists, demote coldest allocated near blocks into
+       free far blocks until >= watermark * n_near near blocks are free --
+       demotion only runs under pressure (faulting blocks waiting), like
+       TPP's wmark_demote path;
+    2. promote blocks with >=2 faults this window into the freed space.
+    """
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    free_near = (in_near & ~alloc).sum()
+    want_free = jnp.int32(watermark * cfg.n_near)
+    demand = (alloc & ~in_near & (state.host_counts >= 2)).sum()
+    # demotion keeps the free watermark AND keeps up with promotion demand
+    # (TPP's wmark_demote runs ahead of the promotion path) -- but only under
+    # pressure: with no faulting pages, nothing is demoted.
+    need = jnp.maximum(jnp.minimum(want_free, demand),
+                       jnp.minimum(demand, budget))
+    n_demote = jnp.clip(need - free_near, 0, budget)
+    lru = state.last_touch_epoch.astype(jnp.int32)
+    # demotion: coldest allocated near <-> unallocated far
+    far_free_ids, near_cold_ids, k_d = _paired_ids(
+        ~in_near & ~alloc,
+        jnp.zeros_like(lru),
+        in_near & alloc,
+        lru,
+        budget,
+    )
+    state = swap_blocks(cfg, state, far_free_ids, near_cold_ids, jnp.minimum(k_d, n_demote))
+    # promotion: 2-fault blocks <-> free near
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    faulting = alloc & ~in_near & (state.host_counts >= 2)
+    far_ids, near_ids, k_p = _paired_ids(
+        faulting,
+        state.host_counts.astype(jnp.int32),
+        in_near & ~alloc,
+        jnp.zeros_like(lru),
+        budget,
+    )
+    return swap_blocks(cfg, state, far_ids, near_ids, k_p)
+
+
+def tick(cfg: GpacConfig, state: TieredState, policy: str, **kw) -> TieredState:
+    if policy == "memtierd":
+        return memtierd_tick(cfg, state, **kw)
+    if policy == "autonuma":
+        return autonuma_tick(cfg, state, **kw)
+    if policy == "tpp":
+        return tpp_tick(cfg, state, **kw)
+    raise ValueError(f"unknown tiering policy {policy!r} (have {POLICIES})")

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §4).
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+wrapper with backend dispatch) and ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes in interpret mode against the oracle.
+"""
+from repro.kernels import runtime  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.kernels.consolidate.ops import consolidate_region, scatter_region  # noqa: F401

@@ -1,0 +1,89 @@
+"""Pallas TPU kernel for Algorithm 1's data copy: gather scattered base pages
+into one dense huge-page region.
+
+TPU adaptation (DESIGN.md §2): the paper's per-page ``memcpy`` loop becomes a
+scalar-prefetched grid -- the source page index feeds the *index map*, so the
+DMA engine streams each scattered page HBM->VMEM->HBM while the next page's
+descriptor is already formed (double-buffered by the Pallas pipeline). The
+block is one base page: ``(1, base_elems)`` with ``base_elems`` a multiple of
+128 lanes in production (a 4 KB page of f32 = 1024 elems = 8 x 128, exactly
+one VREG tile per sublane group).
+
+Grid: ``(hp_ratio,)`` -- one step per destination slot of the huge region.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _copy_kernel(ids_ref, src_ref, out_ref):
+    # src block was selected by the index map; plain VMEM->VMEM move here.
+    out_ref[...] = src_ref[...]
+
+
+def consolidate_gather(
+    src_rows: jax.Array,  # (n_rows, base_elems) flat [near;far] row space
+    ids: jax.Array,  # int32 (hp_ratio,) source row per region slot (clamped)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Return dtype[hp_ratio, base_elems]: the dense region payload.
+
+    ``ids`` must be pre-clamped to [0, n_rows); masking of padded slots is the
+    wrapper's job (ops.consolidate_region), keeping the kernel branch-free.
+    """
+    hp_ratio = ids.shape[0]
+    base_elems = src_rows.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(hp_ratio,),
+        in_specs=[
+            pl.BlockSpec((1, base_elems), lambda i, ids_ref: (ids_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, base_elems), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((hp_ratio, base_elems), src_rows.dtype),
+        interpret=interpret,
+    )(ids, src_rows)
+
+
+def consolidate_scatter(
+    dst_rows: jax.Array,  # (n_rows, base_elems) flat row space to update
+    region: jax.Array,  # (hp_ratio, base_elems) dense payload
+    ids: jax.Array,  # int32 (hp_ratio,) destination row per region slot
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Scatter a dense region's rows back out to ``ids`` (the reverse move,
+    used when a consolidated region is broken up again). Input/output aliased
+    so the update is in-place on TPU."""
+    hp_ratio, base_elems = region.shape
+
+    def kernel(ids_ref, region_ref, dst_ref, out_ref):
+        out_ref[...] = region_ref[...]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(hp_ratio,),
+        in_specs=[
+            pl.BlockSpec((1, base_elems), lambda i, ids_ref: (i, 0)),
+            pl.BlockSpec((1, base_elems), lambda i, ids_ref: (ids_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, base_elems), lambda i, ids_ref: (ids_ref[i], 0)),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst_rows.shape, dst_rows.dtype),
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(ids, region, dst_rows)

@@ -1,0 +1,57 @@
+"""Jitted wrappers over the consolidation-copy Pallas kernel.
+
+The wrapper owns masking semantics (padded ids produce zero rows / dropped
+writes) so the kernel stays branch-free; on non-TPU backends it runs the
+kernel in interpret mode, on TPU it compiles to a scalar-prefetched DMA
+pipeline (see kernel.py docstring).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.consolidate import kernel as _k
+from repro.kernels.consolidate import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def consolidate_region(
+    src_rows: jax.Array,  # (n_rows, base_elems)
+    ids: jax.Array,  # int32 (hp_ratio,) source row per region slot, -1 padded
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """dtype[hp_ratio, base_elems]: dense region payload, zeros at padded slots."""
+    if runtime.pick(use_pallas):
+        valid = ids >= 0
+        clamped = jnp.where(valid, ids, 0).astype(jnp.int32)
+        out = _k.consolidate_gather(
+            src_rows, clamped, interpret=runtime.interpret()
+        )
+        return jnp.where(valid[:, None], out, 0)
+    return _ref.consolidate_region_ref(src_rows, ids)
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def scatter_region(
+    dst_rows: jax.Array,
+    region: jax.Array,
+    ids: jax.Array,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Write region rows to ``dst_rows[ids]`` (ids -1 dropped)."""
+    if runtime.pick(use_pallas):
+        valid = ids >= 0
+        # Padded slots are redirected to row 0 carrying row 0's original data.
+        # Sorting padded-first makes any *real* write to row 0 land last in
+        # the sequential grid, so it wins (writer order = grid order).
+        order = jnp.argsort(valid)
+        clamped = jnp.where(valid, ids, 0).astype(jnp.int32)[order]
+        keep = dst_rows[0]
+        payload = jnp.where(valid[order][:, None], region[order], keep)
+        return _k.consolidate_scatter(
+            dst_rows, payload, clamped, interpret=runtime.interpret()
+        )
+    return _ref.scatter_region_ref(dst_rows, region, ids)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the consolidation copy kernel (Algorithm 1's memcpy)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def consolidate_region_ref(src_rows: jax.Array, ids: jax.Array) -> jax.Array:
+    """Gather ``src_rows[ids]`` into a dense region; ids < 0 produce zeros."""
+    valid = ids >= 0
+    safe = jnp.where(valid, ids, 0)
+    out = src_rows[safe]
+    return jnp.where(valid[:, None], out, 0).astype(src_rows.dtype)
+
+
+def scatter_region_ref(
+    dst_rows: jax.Array, region: jax.Array, ids: jax.Array
+) -> jax.Array:
+    """Scatter region rows back to ``dst_rows[ids]``; ids < 0 are dropped."""
+    n = dst_rows.shape[0]
+    idx = jnp.where(ids >= 0, ids, n)
+    return dst_rows.at[idx].set(region, mode="drop")

@@ -1,0 +1,1 @@
+from repro.kernels.flash_attention.ops import gqa_attention  # noqa: F401

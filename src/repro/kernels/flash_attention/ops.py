@@ -1,0 +1,44 @@
+"""Jitted wrapper: standard GQA (B, H, S, hd) -> folded flash attention.
+
+The GQA fold maps query head ``kvh*G+g`` at position ``s`` to folded row
+``s*G+g`` of batch-slab ``b*KVH+kvh`` -- K/V stay one copy per kv head (no
+head broadcast in HBM), which is the point of GQA.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from einops import rearrange
+
+from repro.kernels import runtime
+from repro.kernels.flash_attention import kernel as _k
+from repro.kernels.flash_attention import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("causal", "use_pallas", "block_q", "block_k"))
+def gqa_attention(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, KVH, S, hd)
+    v: jax.Array,
+    causal: bool = True,
+    use_pallas: bool | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    B, H, S, hd = q.shape
+    KVH = k.shape[1]
+    assert H % KVH == 0
+    G = H // KVH
+    qf = rearrange(q, "b (kv g) s d -> (b kv) (s g) d", g=G)
+    kf = rearrange(k, "b kv s d -> (b kv) s d")
+    vf = rearrange(v, "b kv s d -> (b kv) s d")
+    if runtime.pick(use_pallas):
+        of = _k.flash_attention(
+            qf, kf, vf, causal=causal, group=G,
+            block_q=block_q, block_k=block_k, interpret=runtime.interpret(),
+        )
+    else:
+        of = _ref.flash_attention_ref(qf, kf, vf, causal=causal, group=G)
+    return rearrange(of, "(b kv) (s g) d -> b (kv g) s d", b=B, g=G)

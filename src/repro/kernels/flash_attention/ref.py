@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for causal flash attention (GQA-folded layout)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (BH, Sq, hd) with Sq = G * S
+    k: jax.Array,  # (BH, S, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    group: int = 1,
+    scale: float | None = None,
+) -> jax.Array:
+    hd = q.shape[-1]
+    scale = (hd ** -0.5) if scale is None else scale
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        q_pos = jnp.arange(q.shape[1])[:, None] // group
+        k_pos = jnp.arange(k.shape[1])[None, :]
+        s = jnp.where(k_pos <= q_pos, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

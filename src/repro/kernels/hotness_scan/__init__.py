@@ -1,0 +1,1 @@
+from repro.kernels.hotness_scan.ops import hot_count  # noqa: F401

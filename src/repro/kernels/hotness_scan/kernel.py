@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: per-huge-page hot-subpage count (telemetry aggregation).
+
+The Scattered Page Filter needs ``sum(hot bits) per huge page`` over the whole
+GPA space every maintenance tick -- at production scale (TBs of far memory,
+millions of base pages) this is a bandwidth-bound strided reduction, so it is
+tiled explicitly: each grid step streams a ``(blk_hp, hp_ratio)`` tile of the
+hot-bit matrix HBM->VMEM and reduces along lanes. ``hp_ratio`` is 512 in the
+paper = 4 x 128 lanes, a perfectly aligned VREG tile row.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _count_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...].sum(axis=1, keepdims=True, dtype=jnp.int32)
+
+
+def hot_count(
+    hot_gpa: jax.Array,  # int32/bool[n_hp * hp_ratio] hot bit per gpa page
+    hp_ratio: int,
+    blk_hp: int = 8,
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """int32[n_hp]: number of hot base pages inside each huge page."""
+    n = hot_gpa.shape[0]
+    assert n % hp_ratio == 0
+    n_hp = n // hp_ratio
+    pad = (-n_hp) % blk_hp
+    x = hot_gpa.reshape(n_hp, hp_ratio).astype(jnp.int32)
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        _count_kernel,
+        grid=((n_hp + pad) // blk_hp,),
+        in_specs=[pl.BlockSpec((blk_hp, hp_ratio), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((blk_hp, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_hp + pad, 1), jnp.int32),
+        interpret=interpret,
+    )(x)
+    return out[:n_hp, 0]

@@ -1,0 +1,20 @@
+"""Jitted wrapper for the hotness scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import runtime
+from repro.kernels.hotness_scan import kernel as _k
+from repro.kernels.hotness_scan import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("hp_ratio", "use_pallas"))
+def hot_count(
+    hot_gpa: jax.Array, hp_ratio: int, use_pallas: bool | None = None
+) -> jax.Array:
+    """int32[n_hp] hot-subpage count per huge page."""
+    if runtime.pick(use_pallas):
+        return _k.hot_count(hot_gpa, hp_ratio, interpret=runtime.interpret())
+    return _ref.hot_count_ref(hot_gpa, hp_ratio)

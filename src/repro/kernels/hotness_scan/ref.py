@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the hotness scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hot_count_ref(hot_gpa: jax.Array, hp_ratio: int) -> jax.Array:
+    n_hp = hot_gpa.shape[0] // hp_ratio
+    return hot_gpa.reshape(n_hp, hp_ratio).astype(jnp.int32).sum(axis=1)

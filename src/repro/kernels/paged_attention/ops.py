@@ -1,0 +1,31 @@
+"""Jitted wrapper for paged decode attention (clamps the block table)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.paged_attention import kernel as _k
+from repro.kernels.paged_attention import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    btab: jax.Array,
+    lens: jax.Array,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """GQA decode attention over paged KV; see kernel.py for layouts."""
+    n_pages = k_pages.shape[1]
+    safe_btab = jnp.clip(btab, 0, n_pages - 1).astype(jnp.int32)
+    if runtime.pick(use_pallas):
+        return _k.paged_attention(
+            q, k_pages, v_pages, safe_btab, lens.astype(jnp.int32),
+            interpret=runtime.interpret(),
+        )
+    return _ref.paged_attention_ref(q, k_pages, v_pages, safe_btab, lens)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(
+    q: jax.Array,  # (B, KVH, G, hd)
+    k_pages: jax.Array,  # (KVH, n_pages, page_size, hd)
+    v_pages: jax.Array,
+    btab: jax.Array,  # int32 (B, pages_per_seq)
+    lens: jax.Array,  # int32 (B,)
+    *,
+    scale: float | None = None,
+) -> jax.Array:
+    B, KVH, G, hd = q.shape
+    _, n_pages, page_size, _ = k_pages.shape
+    pages_per_seq = btab.shape[1]
+    scale = (hd ** -0.5) if scale is None else scale
+
+    safe = jnp.clip(btab, 0, n_pages - 1)
+    # (B, KVH, pages_per_seq, page_size, hd) -> (B, KVH, S, hd)
+    k = k_pages[:, safe]  # (KVH, B, pages, page, hd)
+    v = v_pages[:, safe]
+    k = jnp.moveaxis(k, 0, 1).reshape(B, KVH, pages_per_seq * page_size, hd)
+    v = jnp.moveaxis(v, 0, 1).reshape(B, KVH, pages_per_seq * page_size, hd)
+
+    s = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    pos = jnp.arange(pages_per_seq * page_size)[None, None, None, :]
+    mask = pos < lens[:, None, None, None]
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)  # rows with len=0 would be NaN otherwise
+    out = jnp.einsum("bhgs,bhsd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

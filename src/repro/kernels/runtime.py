@@ -1,0 +1,24 @@
+"""Backend dispatch shared by every kernel wrapper.
+
+On TPU the Pallas kernels compile natively; on CPU (this container) they run
+in ``interpret=True`` mode for correctness tests, while the default production
+path on non-TPU backends is the pure-jnp reference (faster than interpretation
+and numerically identical -- the tests enforce that).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick(use_pallas: bool | None) -> bool:
+    """Resolve a wrapper's ``use_pallas`` tri-state: None -> TPU only."""
+    return on_tpu() if use_pallas is None else use_pallas
+
+
+def interpret() -> bool:
+    """Pallas interpret mode everywhere except real TPU."""
+    return not on_tpu()

@@ -1,0 +1,1 @@
+from repro.kernels.tiered_lookup.ops import tiered_lookup  # noqa: F401

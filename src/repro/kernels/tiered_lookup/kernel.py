@@ -1,0 +1,44 @@
+"""Pallas TPU kernel: embedding-row gather through the GPAC translation.
+
+The tiered embedding store keeps vocab rows in paged pools behind the
+``gpt ∘ block_table`` two-level translation. At lookup time the *translation*
+is two tiny int32 gathers (done in the wrapper, fused by XLA); the *payload*
+gather is the hot spot: ``batch*seq`` rows of ``d_model`` floats streamed from
+scattered HBM rows. The row index is scalar-prefetched so each grid step's DMA
+descriptor is formed before the previous copy retires (double buffering), and
+a ``(1, d)`` block keeps rows lane-aligned (d is a multiple of 128 for every
+assigned architecture).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _gather_kernel(ids_ref, rows_ref, o_ref):
+    o_ref[...] = rows_ref[...]
+
+
+def gather_rows(
+    rows: jax.Array,  # (n_rows, d)
+    ids: jax.Array,  # int32 (k,) pre-clamped to [0, n_rows)
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """dtype[k, d] = rows[ids] via scalar-prefetched per-row DMA."""
+    k = ids.shape[0]
+    d = rows.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(k,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, ids_ref: (ids_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((k, d), rows.dtype),
+        interpret=interpret,
+    )(ids, rows)

@@ -1,0 +1,35 @@
+"""Jitted wrapper: two-level translation (int32 gathers) + payload gather."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import runtime
+from repro.kernels.tiered_lookup import kernel as _k
+from repro.kernels.tiered_lookup import ref as _ref
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def tiered_lookup(
+    rows: jax.Array,
+    fused: jax.Array,
+    token_ids: jax.Array,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """rows[fused[token_ids]] with -1/-OOB ids producing zero rows.
+
+    ``fused`` is the precomposed gpt∘block_table translation (see
+    ``repro.core.address_space.fused_translation``); recomputed only after a
+    consolidation/migration tick -- the beyond-paper 'fused TLB' optimization.
+    """
+    if runtime.pick(use_pallas):
+        shape = token_ids.shape
+        flat = token_ids.reshape(-1)
+        valid = (flat >= 0) & (flat < fused.shape[0])
+        phys = fused[jnp.where(valid, flat, 0)].astype(jnp.int32)
+        out = _k.gather_rows(rows, phys, interpret=runtime.interpret())
+        out = jnp.where(valid[:, None], out, 0)
+        return out.reshape(*shape, rows.shape[1])
+    return _ref.tiered_lookup_ref(rows, fused, token_ids)

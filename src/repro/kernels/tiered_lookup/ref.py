@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the tiered embedding lookup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_rows_ref(rows: jax.Array, ids: jax.Array) -> jax.Array:
+    return rows[ids]
+
+
+def tiered_lookup_ref(
+    rows: jax.Array,  # (n_rows, d) flat [near; far] row space
+    fused: jax.Array,  # int32 (n_logical,) precomposed translation
+    token_ids: jax.Array,  # int32 (k,) logical row ids (may be any shape)
+) -> jax.Array:
+    shape = token_ids.shape
+    flat = token_ids.reshape(-1)
+    valid = (flat >= 0) & (flat < fused.shape[0])
+    rows_out = rows[fused[jnp.where(valid, flat, 0)]]
+    rows_out = jnp.where(valid[:, None], rows_out, 0)
+    return rows_out.reshape(*shape, rows.shape[1])

@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax-importing module: jax locks the device count on
+# first backend init. 512 placeholder host devices back both production
+# meshes (single-pod 16x16 uses the first 256).
+#
+# REPRO_FAST_COMPILE=1 drops the XLA backend optimization level: used for the
+# multi-pod duplicate of each cell, which only needs to PROVE the 512-chip
+# sharding compiles (the roofline reads single-pod cells, compiled at full
+# optimization so fusion-dependent byte counts stay realistic).
+if os.environ.get("REPRO_FAST_COMPILE"):
+    os.environ["XLA_FLAGS"] += " --xla_backend_optimization_level=0"
+"""Multi-pod dry-run (system prompt deliverable e).
+
+For every (architecture x input shape x mesh) cell:
+    jit(step).lower(**input_specs).compile()
+with full production shardings, then record
+  * compiled.memory_analysis()  -- proves the cell fits per-device HBM,
+  * compiled.cost_analysis()    -- HLO FLOPs / bytes for the roofline,
+  * per-collective byte totals parsed from the optimized HLO,
+into experiments/dryrun/<arch>__<shape>__<mesh>.json.
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-360m --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as config_lib
+from repro.configs.base import SHAPE_SPECS
+from repro.launch import sharding
+from repro.launch.mesh import make_dist, make_production_mesh
+from repro.models import registry
+from repro.train import optimizer, trainer
+
+OUT_DIR = os.path.join("experiments", "dryrun")
+
+# per-arch training recipe (gradient accumulation for the giants; factored
+# optimizer where AdamW's f32 moments cannot fit even ZeRO-1-sharded)
+TRAIN_RECIPE = {
+    "kimi-k2-1t-a32b": dict(micro_batches=8, opt="adafactor"),
+    "jamba-1.5-large-398b": dict(micro_batches=8, opt="adafactor"),
+    "internlm2-20b": dict(micro_batches=2, opt="adamw"),
+    "gemma-7b": dict(micro_batches=2, opt="adamw"),
+}
+
+
+def train_cfg_for(arch: str) -> trainer.TrainConfig:
+    r = TRAIN_RECIPE.get(arch, dict(micro_batches=1, opt="adamw"))
+    return trainer.TrainConfig(
+        micro_batches=r["micro_batches"],
+        opt=optimizer.OptConfig(name=r["opt"]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# collective parsing (optimized HLO, post-SPMD)
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(bf16|f16|f32|f64|s8|u8|s16|s32|u32|s64|pred)\[([\d,]*)\]")
+_DTYPE_BYTES = dict(bf16=2, f16=2, f32=4, f64=8, s8=1, u8=1, s16=2, s32=4,
+                    u32=4, s64=8, pred=1)
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the result shape(s) on an HLO op line (tuple -> sum)."""
+    total = 0
+    eq = line.find(" = ")
+    head = line[:eq] if eq >= 0 else line
+    # result shapes appear before '='; fall back to whole line
+    src = line[: line.index("(")] if "(" in line else line
+    for m in _SHAPE_RE.finditer(src):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result bytes per collective op kind over the optimized HLO."""
+    out = {k: 0 for k in COLLECTIVES}
+    counts = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        for kind in COLLECTIVES:
+            # matches '%x = bf16[...] all-reduce(...)' and '-start' variants
+            if re.search(rf"= [^=]*\b{kind}(-start)?\(", s):
+                out[kind] += _first_shape_bytes(s)
+                counts[kind] += 1
+                break
+    return {"bytes": out, "counts": counts}
+
+
+# ---------------------------------------------------------------------------
+# cell construction
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, shape_name: str, mesh, unroll: bool = True,
+               cfg=None, variant: str = "baseline"):
+    """-> (jitted fn, example args pytree of ShapeDtypeStruct).
+
+    ``unroll=True`` unrolls structural scans so XLA cost analysis counts
+    every layer (scan bodies are otherwise costed once; see EXPERIMENTS.md
+    §Roofline methodology). ``cfg`` overrides the arch config (depth-reduced
+    extrapolation passes). ``variant='opt'`` enables the beyond-paper §Perf
+    toggles (attention causal skip, bf16 SSM state expansion)."""
+    cfg = (cfg or config_lib.get(arch)).replace(unroll=unroll)
+    if variant == "opt":
+        cfg = cfg.replace(causal_skip=True, ssm_bf16=True)
+    model = registry.build(cfg)
+    dist = make_dist(mesh)
+    specs = registry.input_specs(cfg, shape_name)
+    kind = SHAPE_SPECS[shape_name]["kind"]
+
+    if kind == "train":
+        tcfg = train_cfg_for(arch)
+        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        state_sds = jax.eval_shape(
+            lambda p: trainer.init_train_state(tcfg, p), params_sds)
+        step = trainer.make_train_step(model, tcfg, dist)
+        p_spec = sharding.param_specs(cfg, params_sds, dist)
+        s_spec = sharding.opt_specs(cfg, state_sds, p_spec, dist)
+        b_spec = sharding.batch_specs(specs["batch"], dist)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                sharding.to_shardings(mesh, p_spec),
+                sharding.to_shardings(mesh, s_spec),
+                sharding.to_shardings(mesh, b_spec),
+            ),
+            donate_argnums=(0, 1),
+        )
+        return jitted, (params_sds, state_sds, specs["batch"])
+
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    # Inference cells: TP-only params (FSDP would all-gather weights every
+    # step -- §Perf iteration 1 showed the collective term is dominated by
+    # those gathers at decode). Weights are read-only at inference; the
+    # "model" axis alone holds them.
+    p_spec = sharding.param_specs(cfg, params_sds, dist,
+                                  fsdp_threshold=None)
+    if kind == "prefill":
+        def step(params, batch):
+            return model.prefill(params, batch, dist=dist)
+
+        b_spec = sharding.batch_specs(specs["batch"], dist)
+        jitted = jax.jit(step, in_shardings=(
+            sharding.to_shardings(mesh, p_spec),
+            sharding.to_shardings(mesh, b_spec)))
+        return jitted, (params_sds, specs["batch"])
+
+    # decode: serve_step(params, cache, tokens)
+    def step(params, cache, tokens):
+        return model.decode(params, cache, tokens, dist=dist)
+
+    c_spec = sharding.cache_specs(cfg, specs["cache"], dist)
+    t_spec = sharding.batch_specs({"tokens": specs["tokens"]}, dist)["tokens"]
+    jitted = jax.jit(
+        step,
+        in_shardings=(
+            sharding.to_shardings(mesh, p_spec),
+            sharding.to_shardings(mesh, c_spec),
+            sharding.to_shardings(mesh, t_spec)),
+        donate_argnums=(1,),
+    )
+    return jitted, (params_sds, specs["cache"], specs["tokens"])
+
+
+def lower_stats(arch: str, shape_name: str, mesh, unroll: bool,
+                cfg=None, variant: str = "baseline") -> dict:
+    """Lower + compile one variant; return memory/cost/collective stats."""
+    t0 = time.time()
+    jitted, args = build_cell(arch, shape_name, mesh, unroll=unroll, cfg=cfg,
+                              variant=variant)
+    lowered = jitted.lower(*args)
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, f, None)
+        if v is not None:
+            mem_fields[f] = int(v)
+    cost = compiled.cost_analysis()
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))} if cost else {}
+    coll = collective_bytes(compiled.as_text())
+    return dict(
+        lower_s=round(t_lower - t0, 2),
+        compile_s=round(t_compile - t_lower, 2),
+        memory_analysis=mem_fields,
+        cost_analysis={k: cost[k] for k in sorted(cost)
+                       if k in ("flops", "bytes accessed", "transcendentals")
+                       or k.startswith("bytes accessed")},
+        collectives=coll,
+    )
+
+
+def _lerp_stats(s1: dict, s2: dict, l1: int, l2: int, target: int) -> dict:
+    """Linear depth extrapolation of flops/bytes/collective counts:
+    f(L) = f(l1) + (f(l2) - f(l1)) / (l2 - l1) * (L - l1). Exact for uniform
+    layer stacks (every super-block identical)."""
+    def lerp(a, b):
+        return a + (b - a) / (l2 - l1) * (target - l1)
+
+    out = dict(s1)
+    out["cost_analysis"] = {
+        k: lerp(s1["cost_analysis"].get(k, 0.0), s2["cost_analysis"].get(k, 0.0))
+        for k in set(s1["cost_analysis"]) | set(s2["cost_analysis"])}
+    out["collectives"] = {
+        "bytes": {k: lerp(s1["collectives"]["bytes"][k],
+                          s2["collectives"]["bytes"][k])
+                  for k in s1["collectives"]["bytes"]},
+        "counts": {k: lerp(s1["collectives"]["counts"][k],
+                           s2["collectives"]["counts"][k])
+                   for k in s1["collectives"]["counts"]},
+    }
+    return out
+
+
+# MoE training/prefill cells: the unrolled expert-dispatch graph is too heavy
+# for the SPMD partitioner at full depth -> lower a (L, 2L)-group shallow pair
+# unrolled (exact per-layer costs), extrapolate linearly to full depth, and
+# take the memory analysis from a full-depth scan-form compile.
+def needs_extrapolation(arch: str, shape_name: str) -> bool:
+    cfg = config_lib.get(arch)
+    return cfg.is_moe and SHAPE_SPECS[shape_name]["kind"] in ("train", "prefill")
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             out_dir: str = OUT_DIR, unroll: bool = True,
+             variant: str = "baseline") -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    record = dict(arch=arch, shape=shape_name, mesh=mesh_name,
+                  n_devices=mesh.size, unroll=unroll, variant=variant,
+                  status="error")
+    try:
+        if unroll and needs_extrapolation(arch, shape_name):
+            cfg = config_lib.get(arch)
+            g = cfg.group_size
+            l1, l2 = g, 2 * g
+            full = lower_stats(arch, shape_name, mesh, unroll=False,
+                               variant=variant)
+            s1 = lower_stats(arch, shape_name, mesh, unroll=True,
+                             cfg=cfg.replace(n_layers=l1), variant=variant)
+            s2 = lower_stats(arch, shape_name, mesh, unroll=True,
+                             cfg=cfg.replace(n_layers=l2), variant=variant)
+            stats = _lerp_stats(s1, s2, l1, l2, cfg.n_layers)
+            stats["memory_analysis"] = full["memory_analysis"]
+            stats["method"] = (
+                f"cost: unrolled depth-{l1}/{l2} linear extrapolation to "
+                f"{cfg.n_layers}; memory: full-depth scan compile")
+            stats["compile_s"] = round(
+                full["compile_s"] + s1["compile_s"] + s2["compile_s"], 2)
+        else:
+            stats = lower_stats(arch, shape_name, mesh, unroll=unroll,
+                                variant=variant)
+        record.update(status="ok", **stats)
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(compile {record['compile_s']}s, "
+              f"flops={record['cost_analysis'].get('flops', 0):.3e})")
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep going
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e}")
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_name}.json".replace("/", "_")
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def all_cells():
+    for arch in config_lib.all_archs():
+        for shape_name in config_lib.get(arch).shapes():
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep lax.scan over layer groups (faster compile, "
+                         "scan bodies costed once)")
+    ap.add_argument("--variant", default="baseline",
+                    choices=("baseline", "opt"),
+                    help="'opt' enables §Perf toggles (causal skip, bf16 SSM)")
+    args = ap.parse_args()
+
+    meshes = ("single", "multi") if args.mesh == "both" else (args.mesh,)
+    if args.all:
+        cells = list(all_cells())
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    ok = fail = 0
+    for arch, shape_name in cells:
+        for m in meshes:
+            rec = run_cell(arch, shape_name, m, args.out,
+                           unroll=not args.no_unroll, variant=args.variant)
+            ok += rec["status"] == "ok"
+            fail += rec["status"] != "ok"
+    print(f"[dryrun] done: {ok} ok / {fail} failed")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

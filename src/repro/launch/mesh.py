@@ -1,0 +1,27 @@
+"""Production mesh construction (system prompt contract).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state. Geometry: single-pod (data=16, model=16) = 256 chips;
+multi-pod adds a leading pod axis -> (pod=2, data=16, model=16) = 512 chips.
+DP runs over ("pod", "data"); TP/EP over "model" (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """Batch/token axes of a mesh made by make_production_mesh."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def make_dist(mesh):
+    from repro.models.dist import Dist
+
+    return Dist(mesh=mesh, dp=dp_axes(mesh), tp="model")

@@ -1,0 +1,259 @@
+"""PartitionSpec assignment for params / optimizer state / batches / caches.
+
+Policy (DESIGN.md §5):
+  * TP over "model": attention heads (iff n_heads % tp == 0, respecting head
+    boundaries), KV heads likewise, d_ff, vocab, MoE experts (padded), mamba/
+    xLSTM inner dims.
+  * DP over ("pod","data"): batch rows, token dims of activations.
+  * FSDP: any param leaf bigger than ``fsdp_threshold`` bytes additionally
+    shards its largest still-unsharded divisible dim over the DP axes
+    (ZeRO-3-style weight sharding; GSPMD all-gathers at use sites).
+  * ZeRO-1: optimizer moments inherit the param spec + the same FSDP rule at
+    threshold 0 (always shard something if divisible) -- each DP rank owns a
+    slice of m/v.
+  * Divisibility fallback everywhere: an axis that does not divide a dim is
+    dropped (15-head attention replicates, batch=1 decode replicates).
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models.dist import Dist
+
+FSDP_THRESHOLD = 8 * 1024 * 1024  # bytes; leaves above this get FSDP
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules
+# ---------------------------------------------------------------------------
+def _base_param_spec(cfg: ArchConfig, path: str, shape: tuple,
+                     dist: Dist) -> list:
+    """TP spec for the *trailing* dims (callers left-pad for the stacked
+    group axis). Returns a list of axis names / None."""
+    tp = dist.tp
+    n = dist.axis_size(tp)
+    heads_ok = cfg.n_heads % n == 0
+    kv_ok = cfg.n_kv_heads % n == 0
+    r = len(shape)
+    spec = [None] * r
+
+    def last(*axes):
+        for i, a in enumerate(axes):
+            spec[r - len(axes) + i] = a
+        return spec
+
+    if re.search(r"embed/tok$", path):
+        return last(tp, None)  # (vocab, d)
+    if re.search(r"embed/unembed$", path):
+        return last(None, tp)  # (d, vocab)
+    if re.search(r"embed/pos_(dec|enc)$", path):
+        return spec
+    if re.search(r"(norm\w*|final_norm)/(scale|bias)$", path):
+        return spec
+    if re.search(r"attn/wq$", path):
+        return last(None, tp if heads_ok else None)
+    if re.search(r"attn/w[kv]$", path):
+        return last(None, tp if kv_ok else None)
+    if re.search(r"attn/wo$", path):
+        return last(tp if heads_ok else None, None)
+    if re.search(r"attn/bq$", path):
+        return last(tp if heads_ok else None)
+    if re.search(r"attn/b[kv]$", path):
+        return last(tp if kv_ok else None)
+    if re.search(r"(xattn)/wq$", path):
+        return last(None, tp if heads_ok else None)
+    if re.search(r"(xattn)/w[kv]$", path):
+        return last(None, tp if kv_ok else None)
+    if re.search(r"(xattn)/wo$", path):
+        return last(tp if heads_ok else None, None)
+    if re.search(r"(xattn)/b[qkv]$", path):
+        return spec
+    if re.search(r"ffn/(wi_gate|wi_up|wi)$", path):
+        return last(None, tp)  # (d, ff)
+    if re.search(r"ffn/wo$", path):
+        return last(tp, None)  # (ff, d)
+    if re.search(r"ffn/router$", path):
+        return last(None, tp)  # (d, E_pad)
+    if re.search(r"ffn/experts/(wi_gate|wi_up|wo)$", path):
+        return last(tp, None, None)  # (E_pad, d, ff) -- EP
+    if re.search(r"ffn/shared/(wi_gate|wi_up|wi)$", path):
+        return last(None, tp)
+    if re.search(r"ffn/shared/wo$", path):
+        return last(tp, None)
+    if re.search(r"mamba/in_proj$", path):
+        return last(None, tp)  # (d, 2*di)
+    if re.search(r"mamba/conv_[wb]$", path):
+        return last(tp) if len(shape) == 1 else last(None, tp)
+    if re.search(r"mamba/x_proj$", path):
+        return last(tp, None)  # (di, dr+2ds)
+    if re.search(r"mamba/dt_proj$", path):
+        return last(None, tp)  # (dr, di)
+    if re.search(r"mamba/(dt_bias|D)$", path):
+        return last(tp)
+    if re.search(r"mamba/A_log$", path):
+        return last(tp, None)  # (di, ds)
+    if re.search(r"mamba/out_proj$", path):
+        return last(tp, None)  # (di, d)
+    if re.search(r"(mlstm|slstm)/up_proj$", path):
+        return last(None, tp)  # (d, 2*di)
+    if re.search(r"mlstm/w[qkv]$", path):
+        return last(None, tp, None)  # (H, hd, hd): shard hd_in
+    if re.search(r"mlstm/w_if$", path):
+        return last(tp, None)  # (di, 2H)
+    if re.search(r"mlstm/b_if$", path):
+        return spec
+    if re.search(r"slstm/w_gates$", path):
+        return last(None, None, tp, None)  # (4, H, hd, hd)
+    if re.search(r"slstm/r_gates$", path):
+        return last(None, tp)  # (4, di)
+    if re.search(r"slstm/b_gates$", path):
+        return spec
+    if re.search(r"(mlstm|slstm)/down_proj$", path):
+        return last(tp, None)
+    return spec  # default replicate
+
+
+def _fsdp_extend(spec: list, shape: tuple, dist: Dist, threshold: int | None,
+                 itemsize: int = 2) -> list:
+    """Shard the largest unsharded divisible dim over the DP axes when the
+    leaf exceeds ``threshold`` bytes. ``threshold=None`` disables FSDP
+    (inference cells: read-only weights live TP-only)."""
+    if threshold is None:
+        return spec
+    size = int(np.prod(shape)) * itemsize
+    if size <= threshold:
+        return spec
+    dp = dist.dp if isinstance(dist.dp, tuple) else (dist.dp,)
+    n_dp = dist.axis_size(dp)
+    order = sorted(range(len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and shape[i] % n_dp == 0:
+            spec[i] = dp
+            return spec
+    return spec
+
+
+def param_specs(cfg: ArchConfig, params_shapes, dist: Dist,
+                fsdp_threshold: int | None = FSDP_THRESHOLD):
+    """Pytree of PartitionSpec matching ``params_shapes`` (a tree of
+    ShapeDtypeStruct or arrays). Handles the stacked group axis."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        pstr = _path_str(path)
+        shape = leaf.shape
+        stacked = pstr.startswith("groups/") or "/layers/" in pstr
+        core_shape = shape[1:] if stacked else shape
+        spec = _base_param_spec(cfg, pstr, core_shape, dist)
+        if stacked:
+            spec = [None] + spec
+        itemsize = getattr(np.dtype(leaf.dtype), "itemsize", 2)
+        spec = _fsdp_extend(spec, shape, dist, fsdp_threshold, itemsize)
+        specs.append(dist.fit_spec(shape, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_specs(cfg: ArchConfig, opt_shapes, p_specs, dist: Dist):
+    """ZeRO-1: optimizer moments follow the param spec, then always try to
+    shard one more dim over DP (threshold 0). Scalars replicate."""
+    flat_p, _ = jax.tree_util.tree_flatten(p_specs)
+
+    def assign(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        # find the param this moment mirrors: same trailing path under m/v/f
+        m = re.match(r"^(m|v|f|err)/(.*)$", pstr)
+        core = m.group(2) if m else pstr
+        core = re.sub(r"/(vr|vc|v)$", "", core)
+        stacked = core.startswith("groups/")
+        core_shape = shape[1:] if stacked else shape
+        spec = _base_param_spec(cfg, core, core_shape, dist)
+        if stacked:
+            spec = [None] + spec
+        spec = spec[: len(shape)]  # adafactor factored dims may be shorter
+        spec += [None] * (len(shape) - len(spec))
+        spec = _fsdp_extend(spec, shape, dist, threshold=0, itemsize=4)
+        return dist.fit_spec(shape, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [assign(p, l) for p, l in flat])
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+def batch_specs(batch_shapes, dist: Dist):
+    def assign(path, leaf):
+        pstr = _path_str(path)
+        if pstr == "positions":  # (3, B, S)
+            return dist.fit_spec(leaf.shape, P(None, dist.dp, None))
+        return dist.fit_spec(leaf.shape, P(dist.dp, *([None] * (len(leaf.shape) - 1))))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(batch_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [assign(p, l) for p, l in flat])
+
+
+def cache_specs(cfg: ArchConfig, cache_shapes, dist: Dist):
+    """Decode-cache specs: batch over DP; KV heads over model if divisible,
+    else head_dim over model; mixer states shard their inner dim."""
+    tp = dist.tp
+    n = dist.axis_size(tp)
+    kv_ok = cfg.n_kv_heads % n == 0
+
+    def assign(path, leaf):
+        pstr = _path_str(path)
+        shape = leaf.shape
+        if pstr in ("btab", "lens"):
+            return dist.fit_spec(shape, P(dist.dp))
+        if re.search(r"(k|v)_pages$", pstr):  # (G, B, KVH, n_pool, page, hd)
+            # KV heads over model when divisible; otherwise the page-token
+            # dim (sequence parallelism: softmax stats + tiny PV psums,
+            # instead of head_dim contractions that all-reduce full scores
+            # -- §Perf iteration 2)
+            kv_axis = tp if kv_ok else None
+            page_axis = None if kv_ok else tp
+            return dist.fit_spec(
+                shape, P(None, dist.dp, kv_axis, None, page_axis, None))
+        if re.search(r"enc_[kv]$", pstr):  # (G, B, F, KVH, hd)
+            kv_axis = tp if kv_ok else None
+            hd_axis = None if kv_ok else tp
+            return dist.fit_spec(shape, P(None, dist.dp, None, kv_axis, hd_axis))
+        if re.search(r"/h$", pstr):  # mamba h (G, B, di, ds)
+            return dist.fit_spec(shape, P(None, dist.dp, tp, None))
+        if re.search(r"/conv_tail$", pstr):  # (G, B, dc-1, di)
+            return dist.fit_spec(shape, P(None, dist.dp, None, tp))
+        if re.search(r"/C$", pstr):  # mlstm (G, B, H, hd, hd)
+            return dist.fit_spec(shape, P(None, dist.dp, None, tp, None))
+        if re.search(r"/(n|m|c)$", pstr):  # (G, B, H, hd) or (G, B, di)
+            spec = [None, dist.dp] + [None] * (len(shape) - 2)
+            if len(shape) >= 3:
+                spec[-1] = tp
+            return dist.fit_spec(shape, P(*spec))
+        # fallback: batch over DP on dim 1 (stacked) if present
+        spec = [None] * len(shape)
+        if len(shape) >= 2:
+            spec[1] = dist.dp
+        return dist.fit_spec(shape, P(*spec))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [assign(p, l) for p, l in flat])
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,107 @@
+"""Production training driver.
+
+On a real TPU slice this builds the production mesh, shards params/optimizer
+state per launch/sharding.py, and runs the fault-tolerant loop (checkpoint/
+restart via Supervisor, straggler observation hooks). On this CPU container
+it runs the same code path with ``--mesh none`` (single device) -- the mesh
+path is exercised structurally by the dry-run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --reduced --steps 100 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as config_lib
+from repro.data import pipeline
+from repro.launch import sharding
+from repro.launch.mesh import make_dist, make_production_mesh
+from repro.models import registry
+from repro.models.dist import NO_DIST
+from repro.train import checkpoint, fault, optimizer, trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--mesh", default="none", choices=("none", "single", "multi"))
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = (config_lib.reduced(args.arch) if args.reduced
+           else config_lib.get(args.arch))
+    model = registry.build(cfg)
+    dist = NO_DIST
+    if args.mesh != "none":
+        mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+        dist = make_dist(mesh)
+
+    tcfg = trainer.TrainConfig(
+        micro_batches=args.micro_batches,
+        compress_grads=args.compress_grads,
+        opt=optimizer.OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10),
+                                total_steps=args.steps),
+    )
+    spec = pipeline.DataSpec(vocab=cfg.vocab, seq_len=args.seq_len,
+                             global_batch=args.global_batch)
+
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    train_state = trainer.init_train_state(tcfg, params)
+    data_state = pipeline.DataState()
+    supervisor = None
+    if args.ckpt_dir:
+        supervisor = fault.Supervisor(args.ckpt_dir, save_every=args.save_every)
+        start = supervisor.resume_step()
+        if start:
+            like = {"params": params, "train_state": train_state,
+                    "data_step": jnp.asarray(0)}
+            restored, man = checkpoint.restore(args.ckpt_dir, like)
+            params = restored["params"]
+            train_state = restored["train_state"]
+            data_state = pipeline.DataState(step=int(restored["data_step"]))
+            print(f"[train] resumed from step {man['step']}")
+
+    step_fn = jax.jit(trainer.make_train_step(model, tcfg, dist))
+    n_params = sum(int(jnp.size(l)) for l in jax.tree.leaves(params))
+    print(f"[train] {cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{args.steps} steps, batch {args.global_batch}x{args.seq_len}")
+
+    t0 = time.time()
+    start = int(train_state["opt"]["step"])
+    for step in range(start, args.steps):
+        batch, data_state = pipeline.next_batch(spec, data_state)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, train_state, mets = step_fn(params, train_state, batch)
+        if supervisor:
+            supervisor.maybe_save(
+                step + 1,
+                {"params": params, "train_state": train_state,
+                 "data_step": jnp.asarray(data_state.step)})
+        if (step + 1) % args.log_every == 0 or step == start:
+            tps = (step + 1 - start) * args.global_batch * args.seq_len \
+                / (time.time() - t0)
+            print(f"[train] step {step+1:5d} loss {float(mets['loss']):.4f} "
+                  f"lr {float(mets['lr']):.2e} gnorm "
+                  f"{float(mets['grad_norm']):.2f} ({tps:.0f} tok/s)")
+    print(f"[train] done in {time.time()-t0:.1f}s; "
+          f"final loss {float(mets['loss']):.4f}")
+    return float(mets["loss"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.memory import embedding, kvcache, moe_store  # noqa: F401

@@ -1,0 +1,110 @@
+"""Tiered embedding store (DESIGN.md §3.2): Zipfian token frequency makes hot
+vocab rows *scattered* across a 49k-256k-row table -- the paper's scattered
+hot base pages, verbatim. GPAC consolidates hot row groups into dense blocks
+so the HBM-resident fraction of the table tracks the head of the Zipf curve.
+
+Serving-side feature: lookups go through ``kernels.tiered_lookup`` with the
+precomposed translation (the beyond-paper 'fused TLB'), recomputed only after
+a maintenance tick. (Training keeps embeddings as ordinary sharded params;
+placement stats from this store inform static cold-row offload.)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import GpacConfig, gpac, init_state, telemetry, tiering
+from repro.core import address_space as asp
+from repro.kernels.tiered_lookup import tiered_lookup
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbedSpec:
+    arch: ArchConfig
+    rows_per_page: int = 8  # vocab rows per base granule
+    hp_ratio: int = 64  # granules per tier block (8*64=512 rows/block)
+    near_fraction: float = 0.25
+    cl: int = 16
+
+    @property
+    def n_logical(self) -> int:
+        return -(-self.arch.vocab // self.rows_per_page)
+
+    def gpac_config(self) -> GpacConfig:
+        need = -(-self.n_logical // self.hp_ratio)
+        n_hp = need + max(2, need // 4)
+        return GpacConfig(
+            n_logical=self.n_logical,
+            hp_ratio=self.hp_ratio,
+            n_gpa_hp=n_hp,
+            n_near=max(1, int(self.near_fraction * n_hp)),
+            base_elems=self.rows_per_page * self.arch.d_model,
+            cl=self.cl,
+            dtype=jnp.float32,
+        )
+
+
+class TieredEmbeddingStore:
+    def __init__(self, spec: EmbedSpec, table: jax.Array):
+        """``table``: (vocab, d_model) weights to load into the paged pools."""
+        self.spec = spec
+        self.cfg = spec.gpac_config()
+        v, d = table.shape
+        pad_rows = spec.n_logical * spec.rows_per_page - v
+        t = jnp.pad(table.astype(jnp.float32), ((0, pad_rows), (0, 0)))
+        fill = t.reshape(spec.n_logical, spec.rows_per_page * d)
+        self.state = init_state(self.cfg, fill=fill)
+        self._fused = None  # cached fused translation (invalidated on ticks)
+
+    def _fused_rows(self):
+        """Flat physical row space + per-vocab-row fused translation."""
+        if self._fused is None:
+            page_of = asp.fused_translation(self.cfg, self.state)  # per granule
+            self._fused = page_of
+        return self._fused
+
+    def lookup(self, token_ids: jax.Array) -> jax.Array:
+        """(…,) int32 token ids -> (…, d_model) rows via two-level gather."""
+        s, d = self.spec, self.spec.arch.d_model
+        granule = token_ids // s.rows_per_page
+        offset = token_ids % s.rows_per_page
+        fused = self._fused_rows()
+        rows = jnp.concatenate(
+            [self.state.near_pool.reshape(-1, self.cfg.base_elems),
+             self.state.far_pool.reshape(-1, self.cfg.base_elems)], axis=0)
+        granule_rows = tiered_lookup(rows, fused, granule)  # (..., base_elems)
+        granule_rows = granule_rows.reshape(*token_ids.shape, s.rows_per_page, d)
+        return jnp.take_along_axis(
+            granule_rows, offset[..., None, None], axis=-2
+        )[..., 0, :]
+
+    def record_batch(self, token_ids: np.ndarray):
+        """Telemetry: charge one access per token occurrence to its granule."""
+        granules, counts = np.unique(
+            np.asarray(token_ids).reshape(-1) // self.spec.rows_per_page,
+            return_counts=True,
+        )
+        self.state = asp.record_accesses(
+            self.cfg, self.state,
+            jnp.asarray(granules, jnp.int32),
+            jnp.asarray(np.minimum(counts, 2**20), jnp.int32),
+        )
+
+    def maintenance(self, policy: str = "memtierd", use_gpac: bool = True):
+        if use_gpac:
+            self.state = gpac.gpac_maintenance(self.cfg, self.state, "ipt", 4)
+        self.state = tiering.tick(self.cfg, self.state, policy, budget=64)
+        self.state = telemetry.end_window(self.cfg, self.state)
+        self._fused = None  # translation cache shootdown (paper's TLB flush)
+
+    def near_usage(self) -> float:
+        from repro.core import metrics
+        return float(metrics.near_usage(self.cfg, self.state))
+
+    def hit_rate(self) -> float:
+        from repro.core import metrics
+        return float(metrics.hit_rate(self.state))

@@ -1,0 +1,90 @@
+"""Tiered MoE expert store (DESIGN.md §3.3, §Arch-applicability).
+
+Expert slabs are *dense by construction* (one expert = one contiguous weight
+slab far larger than a tier block), so GPAC's intra-block consolidation is
+**inapplicable** -- this is the paper's own observation about dense-hot pages
+(Liblinear/Roms need no consolidation). What remains valuable is the
+block-granular tier layer: routing frequency is Zipf-skewed, so hot experts'
+slabs belong in HBM and the cold tail in host memory.
+
+Implemented as a thin tier manager over expert slabs: telemetry = router
+selections per expert; policy = any of the core's host policies at slab
+granularity (one expert spans multiple blocks; all of an expert's blocks are
+charged together, so placement decisions stay slab-coherent).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import GpacConfig, init_state, telemetry, tiering
+from repro.core import address_space as asp
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertStoreSpec:
+    arch: ArchConfig
+    blocks_per_expert: int = 4  # tier granule: expert slab / 4
+    near_fraction: float = 0.25  # HBM budget (fraction of experts resident)
+
+    @property
+    def n_experts(self) -> int:
+        return self.arch.e_pad
+
+    def gpac_config(self) -> GpacConfig:
+        n_logical = self.n_experts * self.blocks_per_expert
+        n_hp = n_logical + 2
+        return GpacConfig(
+            n_logical=n_logical,
+            hp_ratio=1,  # block == base granule: no sub-block structure
+            n_gpa_hp=n_hp,
+            n_near=max(1, int(self.near_fraction * n_hp)),
+            base_elems=8,  # placement bookkeeping only (slabs stay in params)
+            cl=1,
+            dtype=jnp.float32,
+        )
+
+
+class TieredExpertStore:
+    def __init__(self, spec: ExpertStoreSpec):
+        self.spec = spec
+        self.cfg = spec.gpac_config()
+        self.state = init_state(self.cfg)
+
+    def _expert_blocks(self, e: np.ndarray) -> np.ndarray:
+        b = self.spec.blocks_per_expert
+        return (e[:, None] * b + np.arange(b)[None]).reshape(-1)
+
+    def record_routing(self, expert_ids: np.ndarray):
+        """Charge router selections: every block of a selected expert."""
+        experts, counts = np.unique(np.asarray(expert_ids).reshape(-1),
+                                    return_counts=True)
+        blocks = self._expert_blocks(experts)
+        counts = np.repeat(np.minimum(counts, 2**20),
+                           self.spec.blocks_per_expert)
+        self.state = asp.record_accesses(
+            self.cfg, self.state,
+            jnp.asarray(blocks, jnp.int32), jnp.asarray(counts, jnp.int32))
+
+    def maintenance(self, policy: str = "memtierd"):
+        # NOTE: no gpac_maintenance call -- consolidation is inapplicable to
+        # dense slabs (every block of a hot expert is hot: never < CL=1).
+        self.state = tiering.tick(self.cfg, self.state, policy, budget=64)
+        self.state = telemetry.end_window(self.cfg, self.state)
+
+    def near_experts(self) -> np.ndarray:
+        """Experts fully resident in the near tier right now."""
+        bt = np.asarray(self.state.block_table)
+        gpt = np.asarray(self.state.gpt)
+        b = self.spec.blocks_per_expert
+        in_near = bt[gpt // self.cfg.hp_ratio] < self.cfg.n_near
+        per_e = in_near[: self.spec.n_experts * b].reshape(-1, b)
+        return np.nonzero(per_e.all(axis=1))[0]
+
+    def hit_rate(self) -> float:
+        from repro.core import metrics
+        return float(metrics.hit_rate(self.state))

@@ -1,0 +1,59 @@
+"""Distribution context threaded through model apply functions.
+
+``Dist`` carries the mesh and axis names so layers can place sharding
+constraints on large intermediates (activations, MoE buffers) without the
+model code knowing mesh geometry. All helpers degrade to no-ops with no mesh
+(single-device smoke tests) and silently drop mesh axes that do not divide the
+corresponding dim (e.g. batch=1 decode cells, 15-head attention).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Dist:
+    mesh: Any = None
+    dp: tuple = ("data",)  # batch/token axes ("pod","data") multi-pod
+    tp: str = "model"  # heads / d_ff / vocab / experts axis
+
+    def axis_size(self, axes) -> int:
+        if self.mesh is None:
+            return 1
+        if isinstance(axes, str):
+            axes = (axes,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def fit_spec(self, shape, spec: P) -> P:
+        """Drop spec axes that don't divide the dim (divisibility fallback)."""
+        fixed = []
+        for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+            if ax is None:
+                fixed.append(None)
+            elif dim % self.axis_size(ax) == 0:
+                fixed.append(ax)
+            else:
+                fixed.append(None)
+        return P(*fixed)
+
+    def constrain(self, x: jax.Array, *spec) -> jax.Array:
+        """with_sharding_constraint(x, spec) if a mesh is present."""
+        if self.mesh is None:
+            return x
+        s = self.fit_spec(x.shape, P(*spec))
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, s))
+
+    def sharding(self, shape, spec: P) -> Any:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.fit_spec(shape, spec))
+
+
+NO_DIST = Dist()

@@ -1,0 +1,439 @@
+"""Shared model layers: norms, RoPE/M-RoPE, GQA attention (train / dense
+decode / paged decode), gated MLPs, embeddings.
+
+All layers are functional: ``init_*`` returns a param dict, ``apply`` is a
+pure function. Param dict keys are stable path names -- the sharding layer
+(launch/sharding.py) assigns PartitionSpecs by key pattern + shape.
+
+Numerics: params in ``cfg.dtype`` (bf16 in production), norms and softmax in
+f32, matmuls accumulate f32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = in_dim ** -0.5
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def split(key, n):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_norm(cfg: ArchConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), cfg.dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), cfg.dtype)
+    return p
+
+
+def apply_norm(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + 1e-6)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf ** 2).mean(-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+def _rope_angles(positions: jax.Array, hd: int, theta: float) -> tuple:
+    """positions (..., S) -> cos/sin (..., S, hd/2) in f32."""
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x (B, S, H, hd), positions (B, S). Rotate-half convention."""
+    hd = x.shape[-1]
+    cos, sin = _rope_angles(positions, hd, theta)  # (B, S, hd/2)
+    cos = cos[:, :, None, :]
+    sin = sin[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array, positions3: jax.Array, theta: float, sections: tuple
+) -> jax.Array:
+    """Qwen2-VL M-RoPE: positions3 (3, B, S); head_dim/2 split into
+    (t, h, w) sections, each rotated by its own position stream."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    cos_parts, sin_parts = [], []
+    start = 0
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    for sec, pos in zip(sections, positions3):
+        f = freqs[start : start + sec]
+        ang = pos.astype(jnp.float32)[..., None] * f  # (B, S, sec)
+        cos_parts.append(jnp.cos(ang))
+        sin_parts.append(jnp.sin(ang))
+        start += sec
+    cos = jnp.concatenate(cos_parts, -1)[:, :, None, :]  # (B, S, 1, half)
+    sin = jnp.concatenate(sin_parts, -1)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def rotate(cfg: ArchConfig, x: jax.Array, positions: jax.Array) -> jax.Array:
+    """Dispatch rope vs mrope; ``positions`` is (B,S) or (3,B,S) for mrope."""
+    if cfg.mrope:
+        if positions.ndim == 2:  # text-only fallback: all three streams equal
+            positions = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        return apply_mrope(x, positions, cfg.rope_theta, cfg.mrope_sections)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(cfg: ArchConfig, key) -> dict:
+    d, hd, H, KVH = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, cfg.dtype),
+        "wk": dense_init(ks[1], d, KVH * hd, cfg.dtype),
+        "wv": dense_init(ks[2], d, KVH * hd, cfg.dtype),
+        "wo": dense_init(ks[3], H * hd, d, cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((KVH * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((KVH * hd,), cfg.dtype)
+    return p
+
+
+def _proj(x, w, b=None):
+    out = jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+    if b is not None:
+        out = out + b
+    return out
+
+
+def qkv(cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array, rope=True):
+    """x (B, S, d) -> q (B,S,H,hd), k/v (B,S,KVH,hd), rotated."""
+    B, S, _ = x.shape
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, cfg.hd)
+    k = _proj(x, p["wk"], p.get("bk")).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    v = _proj(x, p["wv"], p.get("bv")).reshape(B, S, cfg.n_kv_heads, cfg.hd)
+    if rope:
+        q = rotate(cfg, q, positions)
+        k = rotate(cfg, k, positions)
+    return q, k, v
+
+
+def chunked_gqa_attention(
+    q: jax.Array,  # (B, S, H, hd)
+    k: jax.Array,  # (B, Sk, KVH, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_chunk: int = 512,
+    kv_offset: int = 0,
+    unroll: bool = False,
+    causal_skip: bool = False,
+) -> jax.Array:
+    """Memory-safe jnp attention: scan over query chunks so peak score memory
+    is (B, H, q_chunk, Sk) f32, never (S, S). This is the lowering-path used
+    for the dry-run (the Pallas flash kernel replaces it on real TPU).
+    ``kv_offset``: absolute position of k[0] (cross-chunk causal alignment).
+    """
+    B, S, H, hd = q.shape
+    Sk, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = hd ** -0.5
+    q_chunk = min(q_chunk, S)
+    n_chunks = -(-S // q_chunk)
+    pad = n_chunks * q_chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qc = q.reshape(B, n_chunks, q_chunk, H, hd)
+    kq = k.transpose(0, 2, 1, 3)  # (B, KVH, Sk, hd)
+    vq = v.transpose(0, 2, 1, 3)
+    k_pos = kv_offset + jnp.arange(Sk)
+
+    def chunk(carry, inputs):
+        ci, qb = inputs  # qb (B, q_chunk, H, hd)
+        qb = qb.reshape(B, q_chunk, KVH, G, hd).transpose(0, 2, 3, 1, 4)
+        s = jnp.einsum(
+            "bkgqd,bksd->bkgqs", qb.astype(jnp.float32), kq.astype(jnp.float32)
+        ) * scale
+        if causal:
+            q_pos = ci * q_chunk + jnp.arange(q_chunk)
+            mask = k_pos[None, :] <= q_pos[:, None]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqs,bksd->bkgqd", p, vq.astype(jnp.float32))
+        o = o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, hd)
+        return carry, o.astype(q.dtype)
+
+    xs = (jnp.arange(n_chunks), qc.transpose(1, 0, 2, 3, 4))
+    if unroll:
+        # Causal skip (§Perf): with static per-chunk shapes, query chunk ci
+        # only reads K/V up to (ci+1)*q_chunk -- halves attention FLOPs and
+        # score-tensor HBM traffic vs. the full rectangle (the lax.scan path
+        # needs uniform shapes and keeps the rectangle; the Pallas flash
+        # kernel does the equivalent block skip on real TPU).
+        outs = []
+        for i in range(n_chunks):
+            if causal and causal_skip and kv_offset == 0:
+                hi = min((i + 1) * q_chunk, Sk)
+                sub_k, sub_v, sub_pos = kq[:, :, :hi], vq[:, :, :hi], k_pos[:hi]
+            else:
+                sub_k, sub_v, sub_pos = kq, vq, k_pos
+
+            def chunk_i(inputs, kqi=sub_k, vqi=sub_v, k_posi=sub_pos):
+                ci, qb = inputs
+                qb = qb.reshape(B, q_chunk, KVH, G, hd).transpose(0, 2, 3, 1, 4)
+                # scores tensor stored bf16 (§Perf iteration 5): the f32
+                # softmax math reads it through a fused convert, so the only
+                # f32 HBM traffic left is inside the softmax reduction
+                s = jax.lax.dot_general(
+                    qb, kqi, (((4,), (3,)), ((0, 1), (0, 1))),
+                    preferred_element_type=jnp.float32,
+                ).astype(q.dtype) * jnp.asarray(scale, q.dtype)
+                if causal:
+                    q_pos = ci * q_chunk + jnp.arange(q_chunk)
+                    mask = k_posi[None, :] <= q_pos[:, None]
+                    s = jnp.where(mask[None, None, None],
+                                  s, jnp.asarray(-jnp.inf, s.dtype))
+                # softmax stats in f32; weights stored at model dtype for the
+                # PV matmul (flash-kernel numerics; §Perf iteration 4 --
+                # halves the second pass over the (q_chunk, S) tensor)
+                p = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(q.dtype)
+                o = jax.lax.dot_general(
+                    p, vqi, (((4,), (2,)), ((0, 1), (0, 1))),
+                    preferred_element_type=jnp.float32,
+                )  # batched (b,k); contraction over s -> (b,k,g,q,d)
+                return o.transpose(0, 3, 1, 2, 4).reshape(B, q_chunk, H, hd).astype(q.dtype)
+
+            outs.append(chunk_i(jax.tree.map(lambda a: a[i], xs)))
+        out = jnp.stack(outs)
+    else:
+        _, out = jax.lax.scan(chunk, None, xs)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * q_chunk, H, hd)
+    return out[:, :S]
+
+
+def attention_train(
+    cfg: ArchConfig, p: dict, x: jax.Array, positions: jax.Array, causal=True
+) -> jax.Array:
+    """Full-sequence attention (training / prefill)."""
+    q, k, v = qkv(cfg, p, x, positions)
+    o = chunked_gqa_attention(q, k, v, causal=causal, unroll=cfg.unroll)
+    B, S = x.shape[:2]
+    return _proj(o.reshape(B, S, cfg.n_heads * cfg.hd), p["wo"])
+
+
+def attention_decode_dense(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    k_cache: jax.Array,  # (B, S_max, KVH, hd)
+    v_cache: jax.Array,
+    lens: jax.Array,  # int32 (B,) tokens already cached
+):
+    """One decode step against a dense contiguous KV cache."""
+    B = x.shape[0]
+    pos = lens[:, None]  # (B, 1) position of the new token
+    q, k_new, v_new = qkv(cfg, p, x, pos, rope=not cfg.encdec)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, lens].set(k_new[:, 0])
+    v_cache = v_cache.at[bidx, lens].set(v_new[:, 0])
+    S_max = k_cache.shape[1]
+    KVH, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(B, KVH, G, cfg.hd)
+    s = jnp.einsum(
+        "bkgd,bskd->bkgs", qh.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * (cfg.hd ** -0.5)
+    mask = jnp.arange(S_max)[None] <= lens[:, None]  # include new token
+    s = jnp.where(mask[:, None, None], s, -jnp.inf)
+    pr = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", pr, v_cache.astype(jnp.float32))
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd).astype(x.dtype)
+    return _proj(o, p["wo"]), k_cache, v_cache
+
+
+def attention_decode_paged(
+    cfg: ArchConfig,
+    p: dict,
+    x: jax.Array,  # (B, 1, d)
+    k_pages: jax.Array,  # (B, KVH, n_pool, page, hd) per-sequence page pool
+    v_pages: jax.Array,
+    btab: jax.Array,  # int32 (B, pages_per_seq) logical slot -> pool page
+    lens: jax.Array,  # int32 (B,)
+):
+    """One decode step through the two-level paged KV cache (the paper's
+    technique as a first-class serving feature: the block table is the
+    GPA-level indirection GPAC consolidates; page granules are tier-placed).
+
+    The new token's K/V are scattered into the page the block table assigns
+    to slot lens//page; attention gathers K/V *through* the block table.
+    """
+    from repro.kernels.paged_attention import ops as pa_ops
+
+    B = x.shape[0]
+    page = cfg.page_size
+    pos = lens[:, None]
+    q, k_new, v_new = qkv(cfg, p, x, pos, rope=not cfg.encdec)
+    # write the new token through the block table
+    slot = lens // page
+    phys = jnp.take_along_axis(btab, slot[:, None], axis=1)[:, 0]  # (B,)
+    off = lens % page
+    bidx = jnp.arange(B)
+    # advanced-index result layout: (B, KVH, hd) -- matches k_new[:, 0]
+    k_pages = k_pages.at[bidx, :, phys, off].set(k_new[:, 0])
+    v_pages = v_pages.at[bidx, :, phys, off].set(v_new[:, 0])
+    KVH, G = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+    n_pool = k_pages.shape[2]
+    qh = q.reshape(B, KVH, G, cfg.hd)
+    from repro.kernels import runtime
+
+    if runtime.on_tpu():
+        # kernel layout: flatten per-sequence pools into one global pool
+        kf = k_pages.transpose(1, 0, 2, 3, 4).reshape(
+            KVH, B * n_pool, page, cfg.hd)
+        vf = v_pages.transpose(1, 0, 2, 3, 4).reshape(
+            KVH, B * n_pool, page, cfg.hd)
+        flat_btab = btab + (jnp.arange(B) * n_pool)[:, None]
+        o = pa_ops.paged_attention(qh, kf, vf, flat_btab, lens + 1)
+    else:
+        # GSPMD lowering path: gather THROUGH the block table per sequence,
+        # never reshaping the sharded batch dim into the pool dim (§Perf
+        # iteration 2: that reshape forced a near-full KV re-layout --
+        # 'involuntary full rematerialization' -- every decode step).
+        pps = btab.shape[1]
+        idx = btab[:, None, :, None, None]  # (B,1,pps,1,1)
+        k = jnp.take_along_axis(k_pages, idx, axis=2)  # (B,KVH,pps,page,hd)
+        v = jnp.take_along_axis(v_pages, idx, axis=2)
+        s = jnp.einsum("bkgd,bkpsd->bkgps",
+                       qh.astype(jnp.float32), k.astype(jnp.float32))
+        s = s * (cfg.hd ** -0.5)  # (B,KVH,G,pps,page)
+        pos = (jnp.arange(pps * page).reshape(pps, page))[None, None, None]
+        mask = pos <= lens[:, None, None, None, None]
+        s = jnp.where(mask, s, -jnp.inf)
+        m = s.max(axis=(3, 4), keepdims=True)
+        e = jnp.exp(s - m)
+        e = jnp.where(mask, e, 0.0)
+        num = jnp.einsum("bkgps,bkpsd->bkgd", e, v.astype(jnp.float32))
+        den = e.sum(axis=(3, 4))
+        o = (num / jnp.maximum(den, 1e-30)[..., None]).astype(x.dtype)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd).astype(x.dtype)
+    return _proj(o, p["wo"]), k_pages, v_pages
+
+
+def init_cross_attention(cfg: ArchConfig, key) -> dict:
+    return init_attention(cfg, key)
+
+
+def cross_attention(
+    cfg: ArchConfig, p: dict, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array
+) -> jax.Array:
+    """Decoder cross-attention against precomputed encoder K/V
+    (enc_k/v: (B, F, KVH, hd))."""
+    B, S, _ = x.shape
+    q = _proj(x, p["wq"], p.get("bq")).reshape(B, S, cfg.n_heads, cfg.hd)
+    o = chunked_gqa_attention(q, enc_k, enc_v, causal=False, unroll=cfg.unroll)
+    return _proj(o.reshape(B, S, cfg.n_heads * cfg.hd), p["wo"])
+
+
+def encoder_kv(cfg: ArchConfig, p: dict, enc_out: jax.Array):
+    """Precompute cross-attention K/V from encoder output (B, F, d)."""
+    B, F, _ = enc_out.shape
+    k = _proj(enc_out, p["wk"], p.get("bk")).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+    v = _proj(enc_out, p["wv"], p.get("bv")).reshape(B, F, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def cross_attention_decode(
+    cfg: ArchConfig, p: dict, x: jax.Array, enc_k: jax.Array, enc_v: jax.Array
+) -> jax.Array:
+    """Single-token cross-attention (decode): same math, S=1, no mask."""
+    return cross_attention(cfg, p, x, enc_k, enc_v)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(cfg: ArchConfig, key, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = split(key, 3)
+    if cfg.activation in ("swiglu", "geglu"):
+        return {
+            "wi_gate": dense_init(ks[0], d, ff, cfg.dtype),
+            "wi_up": dense_init(ks[1], d, ff, cfg.dtype),
+            "wo": dense_init(ks[2], ff, d, cfg.dtype),
+        }
+    return {  # plain gelu (whisper)
+        "wi": dense_init(ks[0], d, ff, cfg.dtype),
+        "wo": dense_init(ks[1], ff, d, cfg.dtype),
+    }
+
+
+def apply_mlp(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(_proj(x, p["wi_gate"]).astype(jnp.float32))
+        h = (h * _proj(x, p["wi_up"]).astype(jnp.float32)).astype(x.dtype)
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(_proj(x, p["wi_gate"]).astype(jnp.float32))
+        h = (h * _proj(x, p["wi_up"]).astype(jnp.float32)).astype(x.dtype)
+    else:
+        h = jax.nn.gelu(_proj(x, p["wi"]).astype(jnp.float32)).astype(x.dtype)
+    return _proj(h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(cfg: ArchConfig, key) -> dict:
+    ks = split(key, 2)
+    p = {"tok": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                 * 0.02).astype(cfg.dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], cfg.d_model, cfg.vocab, cfg.dtype)
+    if cfg.encdec:  # learned positions for whisper
+        p["pos_dec"] = (jax.random.normal(ks[1], (cfg.max_seq, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(cfg.dtype)
+        p["pos_enc"] = (jax.random.normal(ks[0], (cfg.n_frames, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(cfg.dtype)
+    return p
+
+
+def embed(cfg: ArchConfig, p: dict, tokens: jax.Array) -> jax.Array:
+    return p["tok"][tokens]
+
+
+def unembed(cfg: ArchConfig, p: dict, h: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["unembed"]
+    return jax.lax.dot_general(
+        h, w, (((h.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )

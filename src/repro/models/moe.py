@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-based dispatch.
+
+Dispatch is the scatter/gather formulation (Switch/GShard style) rather than
+dense one-hot einsum so the (E, C, d) expert buffer -- not a (T, E, C) dispatch
+tensor -- is the largest intermediate; the buffer shards over the expert axis
+("model" mesh axis = expert parallelism). Shared experts are always-on experts
+computed densely and summed.
+
+Capacity C = ceil(T * top_k / E * capacity_factor); overflowing (token, choice)
+pairs are dropped (their combine weight contributes nothing), standard for
+capacity-based MoE training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def pad_experts(cfg: ArchConfig) -> int:
+    """Expert-bank size after EP padding (config-driven: qwen2-moe sets
+    n_experts_padded=64 so the bank splits over the 16-way model axis).
+    Padded experts get -inf router logits and are never selected."""
+    return cfg.e_pad
+
+
+def init_moe(cfg: ArchConfig, key) -> dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    E = pad_experts(cfg)
+    ks = L.split(key, 5)
+
+    def expert_bank(k, i, o):
+        keys = jax.random.split(k, E)
+        return jax.vmap(lambda kk: L.dense_init(kk, i, o, cfg.dtype))(keys)
+
+    p = {
+        "router": L.dense_init(ks[0], d, E, jnp.float32),
+        "experts": {
+            "wi_gate": expert_bank(ks[1], d, ff),
+            "wi_up": expert_bank(ks[2], d, ff),
+            "wo": expert_bank(ks[3], ff, d),
+        },
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = L.init_mlp(
+            cfg, ks[4], d_ff=ff * cfg.n_shared_experts
+        )
+    return p
+
+
+def apply_moe(cfg: ArchConfig, p: dict, x: jax.Array, dist=None) -> jax.Array:
+    """x (B, S, d) -> (B, S, d). ``dist`` places sharding constraints on the
+    (E, C, d) expert buffer: experts over the model axis (EP), capacity over
+    the data axes, so the buffer never replicates."""
+    from repro.models.dist import NO_DIST
+
+    dist = dist or NO_DIST
+    B, S, d = x.shape
+    E = p["experts"]["wi_gate"].shape[0]
+    T = B * S
+    k = cfg.top_k
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T, E)
+    if E > cfg.n_experts:  # padded experts never win
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None], -jnp.inf, logits)
+    weights, experts = jax.lax.top_k(logits, k)  # (T, k)
+    weights = jax.nn.softmax(weights, axis=-1)
+
+    # capacity never exceeds T*k (beyond that no expert can overflow)
+    capacity = min(max(1, int(T * k / cfg.n_experts * cfg.capacity_factor)), T * k)
+    # position of each (token, choice) inside its expert's buffer
+    flat_e = experts.reshape(-1)  # (T*k,) row-major: token-major order
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot
+    pos = (pos * onehot).sum(-1)  # (T*k,)
+    keep = pos < capacity
+    safe_pos = jnp.where(keep, pos, capacity)  # drop row
+
+    # scatter tokens into (E, C, d). The operand/updates are constrained
+    # BEFORE the scatter: without this GSPMD replicates the whole scatter
+    # (a ~10 GB u32 index buffer per device was observed in the jamba HLO --
+    # §Perf iteration 7).
+    buf = jnp.zeros((E, capacity + 1, d), x.dtype)
+    buf = dist.constrain(buf, dist.tp, None, None)  # EP-sharded operand
+    xk = jnp.repeat(xt, k, axis=0)  # (T*k, d) token-major like flat_e
+    xk = dist.constrain(xk, dist.dp, None)
+    buf = buf.at[flat_e, safe_pos].set(xk)  # duplicates impossible by pos
+    buf = buf[:, :capacity]
+    buf = dist.constrain(buf, dist.tp, None, None)  # EP x replicated C
+
+    # expert FFN: batched over E
+    def ffn(b, wg, wu, wo):
+        h = jax.nn.silu(
+            jax.lax.dot_general(b, wg, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32))
+        h = h * jax.lax.dot_general(b, wu, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        return jax.lax.dot_general(h.astype(b.dtype), wo, (((1,), (0,)), ((), ())),
+                                   preferred_element_type=jnp.float32).astype(b.dtype)
+
+    out_buf = jax.vmap(ffn)(
+        buf, p["experts"]["wi_gate"], p["experts"]["wi_up"], p["experts"]["wo"]
+    )  # (E, C, d)
+
+    # gather back and combine
+    gathered = out_buf[flat_e, jnp.minimum(safe_pos, capacity - 1)]  # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    combined = (
+        gathered.reshape(T, k, d).astype(jnp.float32)
+        * weights[..., None]
+    ).sum(axis=1)
+    out = combined.astype(x.dtype)
+
+    if "shared" in p:
+        out = out + L.apply_mlp(cfg, p["shared"], xt)
+    return out.reshape(B, S, d)
+
+
+def aux_loss(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Load-balance auxiliary loss (Switch): E * sum(f_e * p_e)."""
+    B, S, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"]
+    E = logits.shape[-1]
+    if E > cfg.n_experts:
+        logits = jnp.where(jnp.arange(E) >= cfg.n_experts, -jnp.inf, logits)
+    probs = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(logits, -1)
+    f = jnp.mean(jax.nn.one_hot(top1, E), axis=0)
+    pbar = probs.mean(0)
+    return cfg.n_experts * jnp.sum(f * pbar)

@@ -1,0 +1,92 @@
+"""Model registry: build(config) -> Model handle with init / loss / prefill /
+decode plus ShapeDtypeStruct input specs for every assigned shape cell.
+
+``input_specs(cfg, shape)`` is the dry-run contract (system prompt): weak-type
+correct, shardable stand-ins, no device allocation. ``decode`` cells spec the
+*cache* too (the KV pages are inputs to ``serve_step``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as config_lib
+from repro.configs.base import SHAPE_SPECS, ArchConfig
+from repro.models import transformer as T
+from repro.models.dist import NO_DIST, Dist
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable  # (key) -> params
+    loss_fn: Callable  # (params, batch, dist) -> (loss, metrics)
+    prefill: Callable  # (params, batch, max_seq, dist) -> (logits, cache)
+    decode: Callable  # (params, cache, tokens, dist) -> (logits, cache)
+    init_cache: Callable  # (batch, max_seq) -> cache
+
+
+def build(cfg: ArchConfig | str) -> Model:
+    if isinstance(cfg, str):
+        cfg = config_lib.get(cfg)
+    return Model(
+        cfg=cfg,
+        init=lambda key: T.init_params(cfg, key),
+        loss_fn=lambda params, batch, dist=NO_DIST: T.loss_fn(cfg, params, batch, dist),
+        prefill=lambda params, batch, max_seq=None, dist=NO_DIST, n_pool=None:
+            T.prefill(cfg, params, batch, max_seq, dist, n_pool),
+        decode=lambda params, cache, tokens, dist=NO_DIST: T.decode_step(
+            cfg, params, cache, tokens, dist),
+        init_cache=lambda batch, max_seq, n_pool=None: T.init_cache(
+            cfg, batch, max_seq, n_pool),
+    )
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStruct only -- never allocates)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, B: int, S: int) -> dict:
+    """Training/prefill batch stand-ins (tokens + modality stubs)."""
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+    if cfg.mrope:
+        batch["positions"] = _sds((3, B, S), jnp.int32)
+    if cfg.encdec:
+        batch["frames"] = _sds((B, cfg.n_frames, cfg.d_model), cfg.dtype)
+    return batch
+
+
+def cache_specs(cfg: ArchConfig, B: int, max_seq: int) -> dict:
+    """Decode-cache stand-ins mirroring transformer.init_cache's pytree."""
+    shapes = jax.eval_shape(lambda: T.init_cache(cfg, B, max_seq))
+    return jax.tree.map(lambda x: _sds(x.shape, x.dtype), shapes)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str) -> dict:
+    """All inputs of the step function the cell lowers:
+    train -> kwargs of loss; prefill -> kwargs of prefill;
+    decode -> dict(cache=..., tokens=...)."""
+    spec = SHAPE_SPECS[shape_name]
+    B, S = spec["global_batch"], spec["seq_len"]
+    kind = spec["kind"]
+    if kind == "train":
+        batch = batch_specs(cfg, B, S)
+        return {"batch": batch}
+    if kind == "prefill":
+        batch = batch_specs(cfg, B, S)
+        batch.pop("labels")
+        return {"batch": batch}
+    # decode: one new token against an S-token cache
+    return {
+        "cache": cache_specs(cfg, B, S),
+        "tokens": _sds((B, 1), jnp.int32),
+    }

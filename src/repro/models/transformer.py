@@ -1,0 +1,450 @@
+"""Unified transformer assembly for all 10 assigned architectures.
+
+One code path handles dense / MoE / hybrid (attn+mamba) / ssm (xLSTM) /
+enc-dec (whisper) / vlm (M-RoPE) via ``ArchConfig`` flags:
+
+  * layers are grouped into identical super-blocks of ``cfg.group_size``
+    (jamba: 8 = 1 attn + 7 mamba; xlstm: 8 = 7 mLSTM + 1 sLSTM); parameters
+    are stacked over groups and the stack is ``lax.scan``-ed (small HLO,
+    constant compile time in depth);
+  * ``cfg.remat == "block"`` checkpoints each super-block (activation memory
+    ~ depth/group_size checkpoints);
+  * the decode path reads/writes KV through the **two-level paged cache** --
+    the paper's indirection that GPAC consolidates (DESIGN.md §3.1);
+  * cross-entropy is computed in sequence chunks so the (B, S, vocab) logits
+    tensor is never materialized (vocab up to 256k).
+
+Modes: ``train`` (loss), ``prefill`` (logits for last position + cache),
+``decode`` (one token through the cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import xlstm as X
+from repro.models.dist import NO_DIST, Dist
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+def scan_or_unroll(body, carry, xs, unroll: bool, length: int | None = None):
+    """lax.scan, or a python unroll of it (identical semantics) when the
+    dry-run needs XLA cost analysis to see every iteration."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs, length=length)
+    n = length if xs is None else jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        x = None if xs is None else jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, x)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+def _init_layer(cfg: ArchConfig, key, j: int, cross: bool) -> dict:
+    """One layer's params; ``j`` is the position within the super-block."""
+    kind = cfg.layer_kind(j)
+    ks = L.split(key, 4)
+    p = {"norm1": L.init_norm(cfg)}
+    if kind == "attn":
+        p["attn"] = L.init_attention(cfg, ks[0])
+    elif kind == "mamba":
+        p["mamba"] = M.init_mamba(cfg, ks[0])
+    elif kind == "mlstm":
+        p["mlstm"] = X.init_mlstm(cfg, ks[0])
+    elif kind == "slstm":
+        p["slstm"] = X.init_slstm(cfg, ks[0])
+    if cross:
+        p["norm_x"] = L.init_norm(cfg)
+        p["xattn"] = L.init_cross_attention(cfg, ks[1])
+    if cfg.d_ff or cfg.layer_is_moe(j):
+        p["norm2"] = L.init_norm(cfg)
+        p["ffn"] = (
+            MOE.init_moe(cfg, ks[2]) if cfg.layer_is_moe(j)
+            else L.init_mlp(cfg, ks[2])
+        )
+    return p
+
+
+def _init_group(cfg: ArchConfig, key, cross: bool) -> dict:
+    ks = L.split(key, cfg.group_size)
+    return {f"layer{j}": _init_layer(cfg, ks[j], j, cross) for j in range(cfg.group_size)}
+
+
+def _enc_cfg(cfg: ArchConfig) -> ArchConfig:
+    """Encoder uses plain attention + gelu MLP (whisper)."""
+    return cfg.replace(activation="gelu", n_experts=0, attn_period=0,
+                       slstm_period=0, encdec=False, family="dense",
+                       n_layers=cfg.n_enc_layers)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    ks = L.split(key, 4)
+    params = {
+        "embed": L.init_embedding(cfg, ks[0]),
+        "final_norm": L.init_norm(cfg),
+    }
+    gkeys = L.split(ks[1], cfg.n_groups)
+    params["groups"] = jax.vmap(
+        lambda k: _init_group(cfg, k, cross=cfg.encdec)
+    )(gkeys)
+    if cfg.encdec:
+        ecfg = _enc_cfg(cfg)
+        ekeys = L.split(ks[2], ecfg.n_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_group(ecfg, k, cross=False))(ekeys),
+            "final_norm": L.init_norm(cfg),
+        }
+    return params
+
+
+# ===========================================================================
+# layer application
+# ===========================================================================
+def _apply_mixer_train(cfg, lp, h, positions, j, dist, causal=True):
+    kind = cfg.layer_kind(j)
+    x = L.apply_norm(cfg, lp["norm1"], h)
+    if kind == "attn":
+        q, k, v = L.qkv(cfg, lp["attn"], x, positions, rope=not cfg.encdec)
+        o = L.chunked_gqa_attention(q, k, v, causal=causal, unroll=cfg.unroll,
+                                    causal_skip=cfg.causal_skip)
+        B, S = x.shape[:2]
+        mix = L._proj(o.reshape(B, S, cfg.n_heads * cfg.hd), lp["attn"]["wo"])
+    elif kind == "mamba":
+        mix = M.mamba_train(cfg, lp["mamba"], x)
+    elif kind == "mlstm":
+        mix = X.mlstm_train(cfg, lp["mlstm"], x)
+    else:
+        mix = X.slstm_train(cfg, lp["slstm"], x)
+    return h + mix
+
+
+def _apply_ffn(cfg, lp, h, j, dist):
+    """FFN sub-block; returns (h, aux_loss)."""
+    if "ffn" not in lp:
+        return h, jnp.zeros((), jnp.float32)
+    x = L.apply_norm(cfg, lp["norm2"], h)
+    if cfg.layer_is_moe(j):
+        out = MOE.apply_moe(cfg, lp["ffn"], x, dist)
+        aux = MOE.aux_loss(cfg, lp["ffn"], x)
+    else:
+        out = L.apply_mlp(cfg, lp["ffn"], x)
+        aux = jnp.zeros((), jnp.float32)
+    return h + out, aux
+
+
+def _apply_group_train(cfg, gp, h, positions, enc_kv, dist, causal=True):
+    aux_total = jnp.zeros((), jnp.float32)
+    for j in range(cfg.group_size):
+        lp = gp[f"layer{j}"]
+        h = _apply_mixer_train(cfg, lp, h, positions, j, dist, causal)
+        if "xattn" in lp:
+            xh = L.apply_norm(cfg, lp["norm_x"], h)
+            h = h + L.cross_attention(cfg, lp["xattn"], xh, *enc_kv(lp))
+        h, aux = _apply_ffn(cfg, lp, h, j, dist)
+        aux_total = aux_total + aux
+        h = dist.constrain(h, dist.dp, None, None)
+    return h, aux_total
+
+
+# ===========================================================================
+# forward (train / prefill)
+# ===========================================================================
+def _encode(cfg: ArchConfig, params, frames: jax.Array, dist) -> jax.Array:
+    """Whisper encoder over stubbed frame embeddings (B, F, d)."""
+    ecfg = _enc_cfg(cfg)
+    h = frames + params["embed"]["pos_enc"][None, : frames.shape[1]]
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None], frames.shape[:2])
+
+    def body(carry, ep):
+        h = carry
+        h, _ = _apply_group_train(ecfg, ep, h, pos, None, dist, causal=False)
+        return h, None
+
+    h, _ = scan_or_unroll(body, h, params["encoder"]["layers"], cfg.unroll)
+    return L.apply_norm(cfg, params["encoder"]["final_norm"], h)
+
+
+def _embed_tokens(cfg, params, tokens, positions, lens=None):
+    h = L.embed(cfg, params["embed"], tokens)
+    if cfg.encdec:  # learned positions (whisper decoder)
+        if lens is None:
+            h = h + params["embed"]["pos_dec"][None, : tokens.shape[1]]
+        else:
+            h = h + params["embed"]["pos_dec"][lens][:, None]
+    return h
+
+
+def forward_train(cfg: ArchConfig, params, batch: dict, dist: Dist = NO_DIST):
+    """-> (hidden (B,S,d), aux_loss). ``batch``: tokens + optional positions
+    (3,B,S mrope) / frames (whisper)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = _embed_tokens(cfg, params, tokens, positions)
+    h = dist.constrain(h, dist.dp, None, None)
+
+    enc_out = None
+    if cfg.encdec:
+        enc_out = _encode(cfg, params, batch["frames"], dist)
+
+    def body(carry, gp):
+        h, aux = carry
+        enc_kv = (lambda lp: L.encoder_kv(cfg, lp["xattn"], enc_out)) if cfg.encdec else None
+        h, a = _apply_group_train(cfg, gp, h, positions, enc_kv, dist)
+        return (h, aux + a), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    (h, aux), _ = scan_or_unroll(
+        body, (h, jnp.zeros((), jnp.float32)), params["groups"], cfg.unroll)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    return h, aux
+
+
+def chunked_ce_loss(cfg: ArchConfig, params, h, labels, chunk: int = 512):
+    """Cross-entropy without materializing (B, S, vocab): scan over S chunks.
+    labels < 0 are masked out (padding)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hp.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = lp.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        total, count = carry
+        hb, lb = xs  # (B, chunk, d), (B, chunk)
+        logits = L.unembed(cfg, params["embed"], hb)  # f32 (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        mask = lb >= 0
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        ce = jnp.where(mask, logz - tgt, 0.0)
+        return (total + ce.sum(), count + mask.sum()), None
+
+    (total, count), _ = scan_or_unroll(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)), (hc, lc),
+        cfg.unroll,
+    )
+    return total / jnp.maximum(count, 1)
+
+
+def loss_fn(cfg: ArchConfig, params, batch: dict, dist: Dist = NO_DIST):
+    h, aux = forward_train(cfg, params, batch, dist)
+    ce = chunked_ce_loss(cfg, params, h, batch["labels"])
+    return ce + AUX_WEIGHT * aux, {"ce": ce, "aux": aux}
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+def n_pool_pages(cfg: ArchConfig, seq_len: int, slack: int = 8) -> int:
+    return -(-seq_len // cfg.page_size) + slack
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               n_pool: int | None = None) -> dict:
+    """Empty decode cache for ``max_seq`` context (paged KV + mixer states).
+    ``n_pool`` overrides the physical page pool size (the serving engine
+    sizes it to the placement manager's GPA space, slack included)."""
+    n_pool = n_pool or n_pool_pages(cfg, max_seq)
+    page, KVH, hd = cfg.page_size, cfg.n_kv_heads, cfg.hd
+    G = cfg.n_groups
+
+    def per_layer(j):
+        kind = cfg.layer_kind(j)
+        if kind == "attn":
+            return {
+                "k_pages": jnp.zeros((G, batch, KVH, n_pool, page, hd), cfg.dtype),
+                "v_pages": jnp.zeros((G, batch, KVH, n_pool, page, hd), cfg.dtype),
+            }
+        if kind == "mamba":
+            c = M.init_mamba_cache(cfg, batch)
+            return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (G, *x.shape)).copy(), c)
+        if kind == "mlstm":
+            c = X.init_mlstm_cache(cfg, batch)
+            return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (G, *x.shape)).copy(), c)
+        c = X.init_slstm_cache(cfg, batch)
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (G, *x.shape)).copy(), c)
+
+    cache = {
+        "layers": {f"layer{j}": per_layer(j) for j in range(cfg.group_size)},
+        "btab": jnp.broadcast_to(
+            jnp.arange(n_pool, dtype=jnp.int32)[None], (batch, n_pool)
+        ).copy(),
+        "lens": jnp.zeros((batch,), jnp.int32),
+    }
+    if cfg.encdec:
+        cache["enc_k"] = jnp.zeros((G, batch, cfg.n_frames, KVH, hd), cfg.dtype)
+        cache["enc_v"] = jnp.zeros((G, batch, cfg.n_frames, KVH, hd), cfg.dtype)
+    return cache
+
+
+def cache_seq_capacity(cfg: ArchConfig, cache: dict) -> int:
+    """Max context the cache can hold (pages * page_size)."""
+    return cache["btab"].shape[1] * cfg.page_size
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+def _apply_layer_decode(cfg, lp, lc, h, lens, btab, enc_kv, dist, j):
+    """One layer, one token. lc: this layer's cache slice (no group dim)."""
+    kind = cfg.layer_kind(j)
+    x = L.apply_norm(cfg, lp["norm1"], h)
+    new_lc = dict(lc)
+    if kind == "attn":
+        mix, k_pages, v_pages = L.attention_decode_paged(
+            cfg, lp["attn"], x, lc["k_pages"], lc["v_pages"], btab, lens
+        )
+        new_lc["k_pages"] = k_pages
+        new_lc["v_pages"] = v_pages
+    elif kind == "mamba":
+        mix, st = M.mamba_decode(cfg, lp["mamba"], x, lc)
+        new_lc = st
+    elif kind == "mlstm":
+        mix, st = X.mlstm_decode(cfg, lp["mlstm"], x, lc)
+        new_lc = st
+    else:
+        mix, st = X.slstm_decode(cfg, lp["slstm"], x, lc)
+        new_lc = st
+    h = h + mix
+    if "xattn" in lp:
+        xh = L.apply_norm(cfg, lp["norm_x"], h)
+        h = h + L.cross_attention_decode(cfg, lp["xattn"], xh, *enc_kv)
+    h, _ = _apply_ffn(cfg, lp, h, j, dist)
+    return h, new_lc
+
+
+def decode_step(cfg: ArchConfig, params, cache: dict, tokens: jax.Array,
+                dist: Dist = NO_DIST):
+    """tokens (B, 1) -> (logits (B, vocab), new cache). Position = lens."""
+    lens = cache["lens"]
+    positions = lens[:, None]
+    h = _embed_tokens(cfg, params, tokens, positions, lens=lens)
+    btab = cache["btab"]
+
+    def body(h, xs):
+        if cfg.encdec:
+            gp, gc, ek, ev = xs
+            enc_kv = (ek, ev)
+        else:
+            gp, gc = xs
+            enc_kv = None
+        new_gc = {}
+        for j in range(cfg.group_size):
+            h, new_gc[f"layer{j}"] = _apply_layer_decode(
+                cfg, gp[f"layer{j}"], gc[f"layer{j}"], h, lens, btab,
+                enc_kv, dist, j,
+            )
+        return h, new_gc
+
+    if cfg.encdec:
+        xs = (params["groups"], cache["layers"], cache["enc_k"], cache["enc_v"])
+    else:
+        xs = (params["groups"], cache["layers"])
+    h, new_layers = scan_or_unroll(body, h, xs, cfg.unroll)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = L.unembed(cfg, params["embed"], h[:, 0:1])[:, 0]
+    new_cache = {**cache, "layers": new_layers, "lens": lens + 1}
+    return logits, new_cache
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+def _pack_pages(cfg: ArchConfig, kv: jax.Array, n_pool: int) -> jax.Array:
+    """(B, S, KVH, hd) -> (B, KVH, n_pool, page, hd) identity-paged."""
+    B, S, KVH, hd = kv.shape
+    page = cfg.page_size
+    pad = n_pool * page - S
+    kv = jnp.pad(kv, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kv = kv.reshape(B, n_pool, page, KVH, hd)
+    return kv.transpose(0, 3, 1, 2, 4)
+
+
+def prefill(cfg: ArchConfig, params, batch: dict, max_seq: int | None = None,
+            dist: Dist = NO_DIST, n_pool: int | None = None):
+    """Full-sequence forward that returns (last-token logits, decode cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    max_seq = max_seq or S
+    n_pool = n_pool or n_pool_pages(cfg, max_seq)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    h = _embed_tokens(cfg, params, tokens, positions)
+    enc_out = _encode(cfg, params, batch["frames"], dist) if cfg.encdec else None
+
+    def body(h, gp):
+        new_gc = {}
+        for j in range(cfg.group_size):
+            lp = gp[f"layer{j}"]
+            kind = cfg.layer_kind(j)
+            x = L.apply_norm(cfg, lp["norm1"], h)
+            if kind == "attn":
+                q, k, v = L.qkv(cfg, lp["attn"], x, positions, rope=not cfg.encdec)
+                o = L.chunked_gqa_attention(q, k, v, causal=True, unroll=cfg.unroll,
+                                            causal_skip=cfg.causal_skip)
+                mix = L._proj(o.reshape(B, S, cfg.n_heads * cfg.hd), lp["attn"]["wo"])
+                new_gc[f"layer{j}"] = {
+                    "k_pages": _pack_pages(cfg, k, n_pool),
+                    "v_pages": _pack_pages(cfg, v, n_pool),
+                }
+            elif kind == "mamba":
+                mix, st = M.mamba_prefill(cfg, lp["mamba"], x)
+                new_gc[f"layer{j}"] = st
+            elif kind == "mlstm":
+                mix, st = X.mlstm_prefill(cfg, lp["mlstm"], x)
+                new_gc[f"layer{j}"] = st
+            else:
+                mix, st = X.slstm_prefill(cfg, lp["slstm"], x)
+                new_gc[f"layer{j}"] = st
+            h = h + mix
+            if "xattn" in lp:
+                xh = L.apply_norm(cfg, lp["norm_x"], h)
+                ek, ev = L.encoder_kv(cfg, lp["xattn"], enc_out)
+                h = h + L.cross_attention(cfg, lp["xattn"], xh, ek, ev)
+                new_gc[f"layer{j}"]["_enc_k"] = ek
+                new_gc[f"layer{j}"]["_enc_v"] = ev
+            h, _ = _apply_ffn(cfg, lp, h, j, dist)
+        return h, new_gc
+
+    h, layers = scan_or_unroll(body, h, params["groups"], cfg.unroll)
+    h = L.apply_norm(cfg, params["final_norm"], h)
+    logits = L.unembed(cfg, params["embed"], h[:, -1:])[:, 0]
+
+    cache = {
+        "layers": layers,
+        "btab": jnp.broadcast_to(
+            jnp.arange(n_pool, dtype=jnp.int32)[None], (B, n_pool)).copy(),
+        "lens": jnp.full((B,), S, jnp.int32),
+    }
+    if cfg.encdec:
+        cache["enc_k"] = layers["layer0"]["_enc_k"]
+        cache["enc_v"] = layers["layer0"]["_enc_v"]
+        for j in range(cfg.group_size):
+            layers[f"layer{j}"].pop("_enc_k", None)
+            layers[f"layer{j}"].pop("_enc_v", None)
+    return logits, cache

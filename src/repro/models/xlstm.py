@@ -1,0 +1,207 @@
+"""xLSTM mixers: mLSTM (matrix memory, 7 of 8 blocks) and sLSTM (scalar
+memory, every 8th block), following arXiv:2405.04517 with exponential gating
+and the max-stabilizer.
+
+Both mixers carry constant-size decode state (no KV cache), which is why
+xlstm-1.3b runs the ``long_500k`` cell: a 524288-token context costs the same
+state as a 1-token one.
+
+Training lowers as ``lax.scan`` over time -- one while-loop per layer group in
+the HLO. (The chunkwise-parallel mLSTM formulation is the known further
+optimization; recorded as a §Perf candidate.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _di(cfg: ArchConfig) -> int:
+    return 2 * cfg.d_model
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(cfg: ArchConfig, key) -> dict:
+    d, di, H = cfg.d_model, _di(cfg), cfg.n_heads
+    hd = di // H
+    ks = L.split(key, 7)
+
+    def bd(k):  # block-diagonal per-head projection (paper's layout)
+        keys = jax.random.split(k, H)
+        return jax.vmap(lambda kk: L.dense_init(kk, hd, hd, cfg.dtype))(keys)
+
+    return {
+        "up_proj": L.dense_init(ks[0], d, 2 * di, cfg.dtype),  # x, z-gate
+        "wq": bd(ks[1]),  # (H, hd, hd)
+        "wk": bd(ks[2]),
+        "wv": bd(ks[3]),
+        "w_if": L.dense_init(ks[4], di, 2 * H, jnp.float32),  # i/f gate logits
+        "b_if": jnp.zeros((2 * H,), jnp.float32),
+        "down_proj": L.dense_init(ks[5], di, d, cfg.dtype),
+    }
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> dict:
+    H = cfg.n_heads
+    hd = _di(cfg) // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_step(q, k, v, i_log, f_log, state):
+    """One timestep. q/k/v (B, H, hd); i_log/f_log (B, H) log-space gates."""
+    C, n, m = state["C"], state["n"], state["m"]
+    hd = q.shape[-1]
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_g = jnp.exp(i_log - m_new)  # (B, H)
+    f_g = jnp.exp(f_log + m - m_new)
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)  # outer product
+    C = f_g[..., None, None] * C + i_g[..., None, None] * kv
+    n = f_g[..., None] * n + i_g[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    h = num / den[..., None]  # (B, H, hd)
+    return h, {"C": C, "n": n, "m": m_new}
+
+
+def _mlstm_qkvif(cfg, p, x_in):
+    """x_in (..., di) -> q,k,v (..., H, hd) and i/f gate logits (..., H).
+    q/k/v are block-diagonal per head (xLSTM paper layout)."""
+    H = cfg.n_heads
+    di = x_in.shape[-1]
+    hd = di // H
+    xh = x_in.reshape(*x_in.shape[:-1], H, hd)
+
+    def bdproj(w):  # (..., H, hd) @ (H, hd, hd) -> (..., H, hd)
+        return jnp.einsum("...hd,hde->...he", xh.astype(jnp.float32),
+                          w.astype(jnp.float32))
+
+    q = bdproj(p["wq"])
+    k = bdproj(p["wk"]) * (hd ** -0.5)
+    v = bdproj(p["wv"])
+    gates = x_in.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_log, f_log = jnp.split(gates, 2, axis=-1)  # (..., H)
+    f_log = jax.nn.log_sigmoid(f_log)
+    return q, k, v, i_log, f_log
+
+
+def _mlstm_forward(cfg, p, x, state0):
+    B, S, d = x.shape
+    xz = L._proj(x, p["up_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)  # (B, S, di)
+    q, k, v, i_log, f_log = _mlstm_qkvif(cfg, p, x_in)
+
+    def step(state, t):
+        h, state = _mlstm_step(
+            q[:, t], k[:, t], v[:, t], i_log[:, t], f_log[:, t], state
+        )
+        return state, h
+
+    state, hs = jax.lax.scan(step, state0, jnp.arange(S))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, S, -1)  # (B, S, di)
+    y = hs * jax.nn.silu(z.astype(jnp.float32))
+    return L._proj(y.astype(x.dtype), p["down_proj"]), state
+
+
+def mlstm_train(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    out, _ = _mlstm_forward(cfg, p, x, init_mlstm_cache(cfg, x.shape[0]))
+    return out
+
+
+def mlstm_prefill(cfg: ArchConfig, p: dict, x: jax.Array):
+    return _mlstm_forward(cfg, p, x, init_mlstm_cache(cfg, x.shape[0]))
+
+
+def mlstm_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache: dict):
+    return _mlstm_forward(cfg, p, x, cache)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def init_slstm(cfg: ArchConfig, key) -> dict:
+    d, di, H = cfg.d_model, _di(cfg), cfg.n_heads
+    hd = di // H
+    ks = L.split(key, 4)
+    gkeys = jax.random.split(ks[1], 4 * H)
+    # gates are block-diagonal per head (sLSTM's head-wise recurrence)
+    w_gates = jax.vmap(lambda kk: L.dense_init(kk, hd, hd, jnp.float32))(gkeys)
+    return {
+        "up_proj": L.dense_init(ks[0], d, 2 * di, cfg.dtype),
+        "w_gates": w_gates.reshape(4, H, hd, hd),  # i,f,z,o
+        "r_gates": (jax.random.normal(ks[2], (4, di), jnp.float32) * 0.1),
+        "b_gates": jnp.zeros((4 * di,), jnp.float32),
+        "down_proj": L.dense_init(ks[3], di, d, cfg.dtype),
+    }
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> dict:
+    di = _di(cfg)
+    return {
+        "c": jnp.zeros((batch, di), jnp.float32),
+        "n": jnp.ones((batch, di), jnp.float32),
+        "h": jnp.zeros((batch, di), jnp.float32),
+        "m": jnp.full((batch, di), -1e30, jnp.float32),
+    }
+
+
+def _slstm_step(gx, state, r):
+    """gx (B, 4*di) input-gate preactivations; diagonal recurrence via r."""
+    c, n, h, m = state["c"], state["n"], state["h"], state["m"]
+    di = c.shape[-1]
+    gi, gf, gz, go = jnp.split(gx, 4, axis=-1)
+    gi = gi + r[0] * h
+    gf = gf + r[1] * h
+    gz = gz + r[2] * h
+    go = go + r[3] * h
+    f_log = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(f_log + m, gi)
+    i_g = jnp.exp(gi - m_new)
+    f_g = jnp.exp(f_log + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(gz)
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def _slstm_forward(cfg, p, x, state0):
+    B, S, d = x.shape
+    H = cfg.n_heads
+    xz = L._proj(x, p["up_proj"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    di = x_in.shape[-1]
+    hd = di // H
+    xh = x_in.reshape(B, S, H, hd).astype(jnp.float32)
+    gx = jnp.einsum("bshd,ghde->gbshe", xh, p["w_gates"])  # (4, B, S, H, hd)
+    gx = gx.reshape(4, B, S, di).transpose(1, 2, 0, 3).reshape(B, S, 4 * di)
+    gx = gx + p["b_gates"]
+
+    def step(state, t):
+        state = _slstm_step(gx[:, t], state, p["r_gates"])
+        return state, state["h"]
+
+    state, hs = jax.lax.scan(step, state0, jnp.arange(S))
+    hs = hs.transpose(1, 0, 2)  # (B, S, di)
+    y = hs * jax.nn.silu(z.astype(jnp.float32))
+    return L._proj(y.astype(x.dtype), p["down_proj"]), state
+
+
+def slstm_train(cfg: ArchConfig, p: dict, x: jax.Array) -> jax.Array:
+    out, _ = _slstm_forward(cfg, p, x, init_slstm_cache(cfg, x.shape[0]))
+    return out
+
+
+def slstm_prefill(cfg: ArchConfig, p: dict, x: jax.Array):
+    return _slstm_forward(cfg, p, x, init_slstm_cache(cfg, x.shape[0]))
+
+
+def slstm_decode(cfg: ArchConfig, p: dict, x: jax.Array, cache: dict):
+    return _slstm_forward(cfg, p, x, cache)

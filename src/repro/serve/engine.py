@@ -1,0 +1,291 @@
+"""Continuous-batching serving engine over the GPAC-tiered paged KV cache.
+
+The engine is the paper's full loop running against a real model:
+
+  * the model decodes through its **block table** (GVA->GPA analogue) --
+    placement-agnostic, exactly the guest;
+  * a placement manager (one ``core.TieredState`` whose logical pages are the
+    model's KV page slots) plays guest-daemon + host: per-page **attention
+    mass** is the telemetry, GPAC consolidates hot pages into dense tier
+    blocks *within each sequence's pool segment* (the multi-guest pattern),
+    and a host policy places blocks near/far;
+  * consolidation is applied **physically** to the model cache (pages copied,
+    block table rewritten), so generation must be bit-unchanged -- tested.
+
+On CPU the near/far split is bookkeeping (metrics); on TPU the two pools map
+to ``memory_kind`` device/host and ``swap_blocks`` is a real migration. The
+per-page attention-mass probe uses layer 0's projections (telemetry is
+pluggable; paper §4.1 scopes it out).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import GpacConfig, gpac, init_state, telemetry, tiering
+from repro.core import address_space as asp
+from repro.core import metrics as core_metrics
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.registry import Model
+from repro.serve.scheduler import Request, Scheduler, SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_seqs: int = 4
+    max_seq_len: int = 256
+    pages_per_block: int = 4  # tier-block granule (hp_ratio)
+    near_fraction: float = 0.4
+    gpa_slack: float = 0.5
+    sched: SchedulerConfig = dataclasses.field(default_factory=SchedulerConfig)
+
+
+class Engine:
+    def __init__(self, model: Model, params, ecfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.sched = Scheduler(dataclasses.replace(
+            ecfg.sched, max_seqs=ecfg.max_seqs))
+        self.page = model.cfg.page_size
+        # ---- placement manager: logical page-slot space over all seqs -----
+        # The physical page pool covers the whole per-seq GPA segment
+        # (logical pages + slack blocks): consolidation allocates fresh
+        # regions in the slack, so those pages must physically exist --
+        # the paper's guests likewise keep spare GPA for huge regions.
+        B = ecfg.max_seqs
+        pps = -(-ecfg.max_seq_len // self.page) + 8  # logical page slots/seq
+        per_seq_hp = -(-pps // ecfg.pages_per_block)
+        slack_hp = max(1, int(per_seq_hp * ecfg.gpa_slack))
+        self.seq_hp = per_seq_hp + slack_hp  # gpa blocks per seq segment
+        self.n_pool = pps
+        self.n_phys = self.seq_hp * ecfg.pages_per_block  # pages per seq pool
+        self.cache = model.init_cache(ecfg.max_seqs, ecfg.max_seq_len,
+                                      n_pool=self.n_phys)
+        # btab is logical-slot indexed (pps entries), backed by n_phys pages
+        self.cache = {**self.cache,
+                      "btab": self.cache["btab"][:, :pps]}
+        n_hp = B * self.seq_hp
+        self.pcfg = GpacConfig(
+            n_logical=B * pps,
+            hp_ratio=ecfg.pages_per_block,
+            n_gpa_hp=n_hp,
+            n_near=max(1, int(ecfg.near_fraction * n_hp)),
+            base_elems=2,  # placement bookkeeping only (KV lives in cache)
+            # CL must be >= 2: a CL of 1 can never match (paper's rule is
+            # "< CL hot subpages" and a hot block has at least one)
+            cl=max(2, ecfg.pages_per_block // 2 + 1),
+            ipt_min_hits=1,
+        )
+        # identity layout per segment: logical slot (b, s) -> gpa block
+        # segment of seq b
+        gpt = np.full((self.pcfg.n_logical,), -1, np.int64)
+        rmap = np.full((self.pcfg.n_gpa,), -1, np.int64)
+        for b in range(B):
+            gpa = (b * self.seq_hp * self.pcfg.hp_ratio) + np.arange(pps)
+            gpt[b * pps : (b + 1) * pps] = gpa
+            rmap[gpa] = b * pps + np.arange(pps)
+        st = init_state(self.pcfg)
+        self.pstate = asp.dataclasses_replace(
+            st, gpt=jnp.asarray(gpt, jnp.int32), rmap=jnp.asarray(rmap, jnp.int32))
+        self._sync_btab()
+        self.decode_fn = jax.jit(
+            lambda p, c, t: model.decode(p, c, t))
+        self.generated = {}
+
+    # ------------------------------------------------------------------
+    # placement <-> model-cache coherence
+    # ------------------------------------------------------------------
+    def _model_btab_from_gpt(self) -> np.ndarray:
+        """gpt (B*pps,) global gpa -> per-seq physical page index."""
+        B, pps = self.ecfg.max_seqs, self.n_pool
+        gpt = np.asarray(self.pstate.gpt).reshape(B, pps)
+        seg = (np.arange(B) * self.seq_hp * self.pcfg.hp_ratio)[:, None]
+        return (gpt - seg).astype(np.int32)
+
+    def _sync_btab(self):
+        self.cache = {**self.cache,
+                      "btab": jnp.asarray(self._model_btab_from_gpt())}
+
+    def _apply_page_moves(self, old_btab: np.ndarray, new_btab: np.ndarray):
+        """Physically copy moved pages in the model cache (Algorithm 1's
+        memcpy, at page granularity, on the model's own arrays)."""
+        moved = old_btab != new_btab
+        if not moved.any():
+            return
+        b_idx, s_idx = np.nonzero(moved)
+        src = old_btab[b_idx, s_idx]
+        dst = new_btab[b_idx, s_idx]
+        layers = dict(self.cache["layers"])
+        for name, lc in layers.items():
+            if "k_pages" not in lc:
+                continue
+            new_lc = dict(lc)
+            for key in ("k_pages", "v_pages"):
+                arr = lc[key]  # (G, B, KVH, n_pool, page, hd)
+                # advanced-index result: (n_moved, G, KVH, page, hd); dst
+                # pages are freshly-allocated regions, so src/dst disjoint
+                data = arr[:, b_idx, :, src]
+                new_lc[key] = arr.at[:, b_idx, :, dst].set(data)
+            layers[name] = new_lc
+        self.cache = {**self.cache, "layers": layers}
+
+    def maintenance(self):
+        """One GPAC + tier window over the placement state, applied to the
+        model cache."""
+        old_btab = self._model_btab_from_gpt()
+        if self.sched.cfg.use_gpac:
+            B, pps = self.ecfg.max_seqs, self.n_pool
+            logical = jnp.arange(self.pcfg.n_logical)
+            for b in range(B):
+                allow = (logical >= b * pps) & (logical < (b + 1) * pps)
+                hp_lo = b * self.seq_hp
+                self.pstate = gpac.gpac_maintenance(
+                    self.pcfg, self.pstate, "ipt", 2,
+                    allow=allow, hp_range=(hp_lo, hp_lo + self.seq_hp))
+        self.pstate = tiering.tick(
+            self.pcfg, self.pstate, self.sched.cfg.tier_policy, budget=32)
+        self.pstate = telemetry.end_window(self.pcfg, self.pstate)
+        new_btab = self._model_btab_from_gpt()
+        self._apply_page_moves(old_btab, new_btab)
+        self._sync_btab()
+
+    # ------------------------------------------------------------------
+    # telemetry: per-page attention mass (layer-0 probe)
+    # ------------------------------------------------------------------
+    def _attention_mass(self, tokens: jax.Array) -> np.ndarray:
+        cfg = self.model.cfg
+        if not cfg.attn_layers:
+            return np.zeros((self.ecfg.max_seqs, self.n_pool))
+        j = cfg.attn_layers[0] % cfg.group_size
+        lp = jax.tree.map(lambda x: x[0], self.params["groups"])[f"layer{j}"]
+        lc = jax.tree.map(lambda x: x[0], self.cache["layers"])[f"layer{j}"]
+        lens = self.cache["lens"]
+        h = L.embed(cfg, self.params["embed"], tokens)
+        x = L.apply_norm(cfg, lp["norm1"], h)
+        q, _, _ = L.qkv(cfg, lp["attn"], x, lens[:, None], rope=not cfg.encdec)
+        B = tokens.shape[0]
+        KVH, hd, page = cfg.n_kv_heads, cfg.hd, cfg.page_size
+        k = lc["k_pages"]  # (B, KVH, n_pool, page, hd)
+        btab = self.cache["btab"]
+        k = jnp.take_along_axis(
+            k, btab[:, None, :, None, None], axis=2)  # logical order
+        kf = k.reshape(B, KVH, self.n_pool * page, hd)
+        qh = q.reshape(B, KVH, cfg.n_heads // KVH, hd)
+        s = jnp.einsum("bkgd,bksd->bkgs", qh.astype(jnp.float32),
+                       kf.astype(jnp.float32)) * (hd ** -0.5)
+        pos = jnp.arange(self.n_pool * page)[None, None, None]
+        s = jnp.where(pos <= lens[:, None, None, None], s, -jnp.inf)
+        pr = jax.nn.softmax(s, axis=-1)
+        pr = jnp.where(jnp.isfinite(pr), pr, 0.0)
+        mass = pr.mean(axis=(1, 2)).reshape(B, self.n_pool, page).sum(-1)
+        return np.asarray(mass)
+
+    def _record_mass(self, mass: np.ndarray, quantum: float = 0.02):
+        B, pps = mass.shape
+        counts = np.minimum((mass / quantum).astype(np.int64), 1 << 20)
+        slots = np.arange(B * pps).reshape(B, pps)
+        keep = counts > 0
+        if not keep.any():
+            return
+        self.pstate = asp.record_accesses(
+            self.pcfg, self.pstate,
+            jnp.asarray(slots[keep], jnp.int32),
+            jnp.asarray(counts[keep], jnp.int32))
+
+    # ------------------------------------------------------------------
+    # request lifecycle
+    # ------------------------------------------------------------------
+    def _reset_slot_placement(self, b: int):
+        """Guest-reboot slot b: identity gpt over its segment, telemetry
+        cleared (prefill writes pages at identity physical positions)."""
+        pps, hp = self.n_pool, self.pcfg.hp_ratio
+        seg_page0 = b * self.seq_hp * hp
+        gpt = np.asarray(self.pstate.gpt).copy()
+        rmap = np.asarray(self.pstate.rmap).copy()
+        counts = np.asarray(self.pstate.guest_counts).copy()
+        hist = np.asarray(self.pstate.ipt_hist).copy()
+        repoch = np.asarray(self.pstate.region_epoch).copy()
+        rmap[seg_page0 : seg_page0 + self.seq_hp * hp] = -1
+        gpt[b * pps : (b + 1) * pps] = seg_page0 + np.arange(pps)
+        rmap[seg_page0 : seg_page0 + pps] = b * pps + np.arange(pps)
+        counts[b * pps : (b + 1) * pps] = 0
+        hist[b * pps : (b + 1) * pps] = 0
+        repoch[b * self.seq_hp : (b + 1) * self.seq_hp] = -1
+        self.pstate = asp.dataclasses_replace(
+            self.pstate,
+            gpt=jnp.asarray(gpt, jnp.int32), rmap=jnp.asarray(rmap, jnp.int32),
+            guest_counts=jnp.asarray(counts, jnp.int32),
+            ipt_hist=jnp.asarray(hist, jnp.uint8),
+            region_epoch=jnp.asarray(repoch, jnp.int32))
+        self._sync_btab()
+
+    def _prefill_into_slot(self, req: Request):
+        self._reset_slot_placement(req.seq_slot)
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        batch = {"tokens": toks}
+        cfg = self.model.cfg
+        if cfg.mrope:
+            S = toks.shape[1]
+            batch["positions"] = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (3, 1, S))
+        if cfg.encdec:
+            batch["frames"] = jnp.zeros((1, cfg.n_frames, cfg.d_model), cfg.dtype)
+        logits, rcache = self.model.prefill(
+            self.params, batch, max_seq=self.ecfg.max_seq_len,
+            n_pool=self.n_phys)
+        b = req.seq_slot
+
+        def put(dst, src):
+            if dst.ndim >= 2 and dst.shape[1] == self.ecfg.max_seqs:
+                return dst.at[:, b].set(src[:, 0])
+            return dst  # btab/lens handled below
+
+        layers = jax.tree.map(put, self.cache["layers"], rcache["layers"])
+        cache = {**self.cache, "layers": layers}
+        cache["lens"] = cache["lens"].at[b].set(len(req.prompt))
+        if cfg.encdec:
+            cache["enc_k"] = cache["enc_k"].at[:, b].set(rcache["enc_k"][:, 0])
+            cache["enc_v"] = cache["enc_v"].at[:, b].set(rcache["enc_v"][:, 0])
+        self.cache = cache
+        req.out.append(int(jnp.argmax(logits[0])))
+
+    def step(self) -> dict:
+        """One engine iteration: admit -> prefill -> batched decode ->
+        telemetry -> cadenced maintenance."""
+        for req in self.sched.admit(self.ecfg.max_seq_len - 1):
+            self._prefill_into_slot(req)
+        if not self.sched.running:
+            return {}
+        tokens = np.zeros((self.ecfg.max_seqs, 1), np.int32)
+        for b, req in self.sched.running.items():
+            tokens[b, 0] = req.out[-1] if req.out else 0
+        tokens = jnp.asarray(tokens)
+        mass = np.array(self._attention_mass(tokens))
+        mass[[b for b in range(self.ecfg.max_seqs)
+              if b not in self.sched.running]] = 0.0  # idle slots are silent
+        logits, self.cache = self.decode_fn(self.params, self.cache, tokens)
+        self._record_mass(mass)
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for b, req in list(self.sched.running.items()):
+            req.out.append(int(nxt[b]))
+            if len(req.out) >= req.max_new:
+                self.sched.finish(req)
+        if self.sched.should_maintain():
+            self.maintenance()
+        return self.stats()
+
+    def run(self, max_steps: int = 10_000) -> list:
+        hist = []
+        steps = 0
+        while self.sched.has_work and steps < max_steps:
+            hist.append(self.step())
+            steps += 1
+        return hist
+
+    def stats(self) -> dict:
+        return core_metrics.snapshot(self.pcfg, self.pstate)

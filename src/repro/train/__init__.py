@@ -1,0 +1,1 @@
+from repro.train import checkpoint, compression, fault, optimizer, trainer  # noqa: F401

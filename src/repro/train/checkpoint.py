@@ -1,0 +1,124 @@
+"""Sharded, atomic, resumable checkpointing with elastic re-shard on restore.
+
+Layout:
+    <dir>/step_000123/
+        manifest.json      # pytree structure, shapes, dtypes, step, mesh info
+        <leaf-key>.npy     # one file per leaf (host-gathered)
+    <dir>/LATEST           # atomic pointer (written last via os.replace)
+
+Fault-tolerance contract (tested):
+  * save is atomic -- a crash mid-save never corrupts LATEST;
+  * restore re-shards to the *current* mesh (elastic: the saved mesh shape is
+    metadata, not a constraint);
+  * restore -> continue training is bit-identical to uninterrupted training.
+
+Async: ``save(..., background=True)`` snapshots to host memory synchronously
+(cheap) and writes files on a worker thread, overlapping the next step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+         background: bool = False):
+    """Snapshot ``tree`` (params/opt state/data state) at ``step``."""
+    leaves = {k: np.asarray(v) for k, v in _flatten_with_paths(tree).items()}
+
+    def write():
+        step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+        tmp = step_dir + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+        for key, arr in leaves.items():
+            fname = key.replace("/", "__") + ".npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(step_dir):
+            shutil.rmtree(step_dir)
+        os.replace(tmp, step_dir)  # atomic publish of the step dir
+        latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
+        with open(latest_tmp, "w") as f:
+            f.write(os.path.basename(step_dir))
+        os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))  # atomic
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if background:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    path = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return int(f.read().strip().split("_")[-1])
+
+
+def restore(ckpt_dir: str, like_tree, step: int | None = None,
+            shardings=None):
+    """Restore into the structure of ``like_tree``; ``shardings`` (same
+    structure, NamedSharding leaves or None) re-shards onto the CURRENT mesh
+    -- elastic restore: the checkpoint carries no device topology."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    like_flat = _flatten_with_paths(like_tree)
+    shard_flat = _flatten_with_paths(shardings) if shardings is not None else {}
+    out = {}
+    for key, like in like_flat.items():
+        meta = manifest["leaves"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(step_dir, meta["file"]))
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != expected {like.shape}")
+        sh = shard_flat.get(key)
+        out[key] = (jax.device_put(arr, sh) if sh is not None
+                    else jax.numpy.asarray(arr, like.dtype))
+
+    # rebuild the pytree in like_tree's structure
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like_tree)
+    keys = ["/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+            for path, _ in flat]
+    return treedef.unflatten([out[k] for k in keys]), manifest
+
+
+def prune(ckpt_dir: str, keep: int = 3):
+    """Retain only the newest ``keep`` step dirs."""
+    steps = sorted(
+        d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)

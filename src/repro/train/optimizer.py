@@ -1,0 +1,152 @@
+"""Optimizers (functional, pytree-based): AdamW and Adafactor.
+
+Optimizer state is kept in f32 regardless of param dtype (mixed-precision
+training); under the production mesh the state is additionally ZeRO-1 sharded
+by ``launch.sharding.zero1_specs`` (each DP rank owns a slice of m/v).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"  # adamw | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    grad_clip: float = 1.0
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_frac."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw_init(params) -> dict:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(f32, params),
+        "v": jax.tree.map(f32, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(cfg: OptConfig, grads, state: dict, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** step.astype(jnp.float32))
+        vh = v / (1 - b2 ** step.astype(jnp.float32))
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "lr": lr, "grad_norm": gnorm}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment -- the memory-frugal option for 1T MoE)
+# ---------------------------------------------------------------------------
+def adafactor_init(params) -> dict:
+    def per_leaf(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {"f": jax.tree.map(per_leaf, params,
+                              is_leaf=lambda x: isinstance(x, jax.Array)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adafactor_update(cfg: OptConfig, grads, state: dict, params):
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(g, f, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + 1e-30
+        if g.ndim >= 2:
+            vr = decay * f["vr"] + (1 - decay) * g2.mean(-1)
+            vc = decay * f["vc"] + (1 - decay) * g2.mean(-2)
+            denom = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                vr.mean(-1, keepdims=True)[..., None], 1e-30)
+            upd_ = g / jnp.sqrt(denom + 1e-30)
+            newf = {"vr": vr, "vc": vc}
+        else:
+            v = decay * f["v"] + (1 - decay) * g2
+            upd_ = g / jnp.sqrt(v + 1e-30)
+            newf = {"v": v}
+        # update clipping (Adafactor's RMS trick)
+        rms = jnp.sqrt(jnp.mean(upd_ ** 2) + 1e-30)
+        upd_ = upd_ / jnp.maximum(1.0, rms)
+        newp = (p.astype(jnp.float32)
+                - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32)))
+        return newp.astype(p.dtype), newf
+
+    is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_f = treedef.flatten_up_to(state["f"])
+    flat_p = treedef.flatten_up_to(params)
+    out = [upd(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_f = treedef.unflatten([o[1] for o in out])
+    return new_p, {"f": new_f, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+def init(cfg: OptConfig, params):
+    return adamw_init(params) if cfg.name == "adamw" else adafactor_init(params)
+
+
+def update(cfg: OptConfig, grads, state, params):
+    fn = adamw_update if cfg.name == "adamw" else adafactor_update
+    return fn(cfg, grads, state, params)

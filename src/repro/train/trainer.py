@@ -1,0 +1,118 @@
+"""Training step factory: gradient accumulation, optional int8 gradient
+compression with error feedback, AdamW/Adafactor, metrics.
+
+``make_train_step`` returns one jitted function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+whose in/out shardings the launcher assigns (launch/sharding.py); the trainer
+itself is mesh-agnostic. Gradient accumulation scans over microbatches so
+activation memory is bounded by one microbatch (the standard big-model
+recipe; kimi-k2's MoE dispatch buffer needs it -- DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.dist import NO_DIST, Dist
+from repro.models.registry import Model
+from repro.train import compression, optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    micro_batches: int = 1  # gradient-accumulation factor
+    compress_grads: bool = False  # int8 + error feedback on the DP reduce
+    opt: optimizer.OptConfig = dataclasses.field(default_factory=optimizer.OptConfig)
+
+
+def init_train_state(tcfg: TrainConfig, params) -> dict:
+    state = {"opt": optimizer.init(tcfg.opt, params)}
+    if tcfg.compress_grads:
+        state["err"] = compression.init_error(params)
+    return state
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for scanning; mrope positions keep axis 0."""
+    def split(key, x):
+        if key == "positions":  # (3, B, S)
+            return x.reshape(x.shape[0], n, -1, *x.shape[2:]).swapaxes(0, 1)
+        return x.reshape(n, -1, *x.shape[1:])
+
+    return {k: split(k, v) for k, v in batch.items()}
+
+
+def make_train_step(model: Model, tcfg: TrainConfig, dist: Dist = NO_DIST):
+    n_micro = tcfg.micro_batches
+
+    def loss_for_grad(params, mb):
+        loss, metrics = model.loss_fn(params, mb, dist)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_for_grad, has_aux=True)
+
+    def train_step(params, train_state, batch):
+        if n_micro == 1:
+            (loss, mets), grads = grad_fn(params, batch)
+        else:
+            micro = _split_micro(batch, n_micro)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                                   acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = loss_sum / n_micro
+            mets = {}
+
+        new_state = dict(train_state)
+        if tcfg.compress_grads:
+            grads, new_state["err"] = compression.compress_grads(
+                grads, train_state["err"])
+        params, new_state["opt"], opt_mets = optimizer.update(
+            tcfg.opt, grads, train_state["opt"], params)
+        metrics = {"loss": loss, **opt_mets, **mets}
+        return params, new_state, metrics
+
+    return train_step
+
+
+def train_loop(model: Model, tcfg: TrainConfig, data_spec, steps: int,
+               params=None, train_state=None, data_state=None,
+               supervisor=None, key=None, jit: bool = True):
+    """Reference single-host loop (examples + tests); the production driver
+    with mesh shardings lives in launch/train.py."""
+    from repro.data import pipeline
+
+    key = key if key is not None else jax.random.PRNGKey(0)
+    params = params if params is not None else model.init(key)
+    train_state = train_state or init_train_state(tcfg, params)
+    data_state = data_state or pipeline.DataState()
+    step_fn = make_train_step(model, tcfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+
+    history = []
+    start = int(train_state["opt"]["step"])
+    for _ in range(start, steps):
+        batch, data_state = pipeline.next_batch(data_spec, data_state)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, train_state, mets = step_fn(params, train_state, batch)
+        history.append({k: float(v) for k, v in mets.items()})
+        if supervisor is not None:
+            supervisor.maybe_save(
+                int(train_state["opt"]["step"]),
+                {"params": params, "train_state": train_state,
+                 "data_step": jnp.asarray(data_state.step)},
+            )
+    return params, train_state, data_state, history

@@ -1,0 +1,138 @@
+"""Per-architecture smoke tests (system prompt requirement): instantiate the
+REDUCED config of each family, run one forward/train step + prefill + decode
+on CPU, assert output shapes and no NaNs. Full configs are exercised only via
+the dry-run (ShapeDtypeStruct, no allocation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as config_lib
+from repro.configs.base import SHAPE_SPECS
+from repro.models import registry, transformer as T
+
+ARCHS = config_lib.all_archs()
+
+
+def small_batch(cfg, B=2, S=16, key=0):
+    rng = np.random.default_rng(key)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.mrope:
+        pos = np.broadcast_to(np.arange(S)[None, None], (3, B, S)).copy()
+        batch["positions"] = jnp.asarray(pos, jnp.int32)
+    if cfg.encdec:
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_frames, cfg.d_model)), cfg.dtype)
+    return batch
+
+
+@pytest.fixture(scope="module")
+def built():
+    out = {}
+    for arch in ARCHS:
+        cfg = config_lib.reduced(arch).replace(dtype=jnp.float32)
+        model = registry.build(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        out[arch] = (cfg, model, params)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestSmoke:
+    def test_train_step(self, built, arch):
+        cfg, model, params = built[arch]
+        batch = small_batch(cfg)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(p, batch), has_aux=True
+        )(params)
+        assert np.isfinite(float(loss)), f"{arch} loss not finite"
+        assert float(loss) > 0
+        leaves = jax.tree.leaves(grads)
+        assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves), (
+            f"{arch} has non-finite grads")
+        # at least some gradient signal somewhere
+        assert any(float(jnp.abs(l).max()) > 0 for l in leaves)
+
+    def test_prefill_then_decode_matches_parallel_forward(self, built, arch):
+        """Prefill S tokens, decode token S -- logits must equal a full
+        (S+1)-token parallel forward's last-position logits."""
+        cfg, model, params = built[arch]
+        B, S = 2, 8
+        batch = small_batch(cfg, B, S + 1)
+        full = dict(batch)
+        full.pop("labels")
+        if cfg.mrope:
+            full["positions"] = batch["positions"][:, :, : S + 1]
+
+        # parallel forward over S+1 tokens
+        h, _ = T.forward_train(cfg, params, full)
+        want = np.asarray(
+            jax.jit(lambda h: jnp.asarray(h))(h[:, -1] @ (
+                params["embed"]["tok"].T if cfg.tie_embeddings
+                else params["embed"]["unembed"]))
+        )
+
+        pre = dict(full)
+        pre["tokens"] = full["tokens"][:, :S]
+        if cfg.mrope:
+            pre["positions"] = full["positions"][:, :, :S]
+        logits_pre, cache = model.prefill(params, pre, max_seq=S + 8)
+        assert logits_pre.shape == (B, cfg.vocab)
+        got, cache = model.decode(params, cache, full["tokens"][:, S : S + 1])
+        assert got.shape == (B, cfg.vocab)
+        assert np.isfinite(np.asarray(got)).all()
+        np.testing.assert_allclose(
+            np.asarray(got), want, rtol=2e-2, atol=2e-2,
+        )
+
+    def test_decode_from_empty_cache(self, built, arch):
+        cfg, model, params = built[arch]
+        B = 2
+        cache = model.init_cache(B, max_seq=16)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        logits, cache = model.decode(params, cache, tok)
+        assert logits.shape == (B, cfg.vocab)
+        assert np.isfinite(np.asarray(logits)).all()
+        assert int(cache["lens"][0]) == 1
+        # decode a few more tokens; all finite
+        for _ in range(3):
+            logits, cache = model.decode(params, cache, tok)
+            assert np.isfinite(np.asarray(logits)).all()
+
+    def test_param_count_close_to_analytical(self, built, arch):
+        cfg, model, params = built[arch]
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert abs(n - est) / n < 0.35, (
+            f"{arch}: actual {n} vs analytical {est}")
+
+
+def test_full_configs_param_counts():
+    """Full (non-reduced) configs match their published scale."""
+    expected_b = {  # billions, loose bands
+        "qwen2-vl-2b": (1.2, 2.5),
+        "jamba-1.5-large-398b": (300, 450),
+        "kimi-k2-1t-a32b": (850, 1200),
+        "qwen2-moe-a2.7b": (12, 18),  # 14.3B total (2.7B active)
+        "internlm2-20b": (17, 23),
+        "gemma-7b": (7, 10),
+        "smollm-360m": (0.30, 0.45),
+        "qwen2-0.5b": (0.4, 0.65),
+        "whisper-tiny": (0.02, 0.08),
+        # assigned 48L/2048d/4H computes to ~2.0B with block-diagonal
+        # q/k/v + up/down projections (the published 1.3B uses a smaller
+        # proj factor); the assigned layer/width numbers are canonical here.
+        "xlstm-1.3b": (1.0, 2.5),
+    }
+    for arch, (lo, hi) in expected_b.items():
+        n = config_lib.get(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.2f}B not in [{lo}, {hi}]"
+
+
+def test_moe_active_params():
+    kimi = config_lib.get("kimi-k2-1t-a32b")
+    active = kimi.active_param_count() / 1e9
+    assert 20 <= active <= 45, f"kimi active {active:.1f}B"

@@ -1,0 +1,348 @@
+"""Invariant + property tests for the GPAC core (DESIGN.md §9).
+
+The invariants mirror what the paper's kernel code must maintain:
+  * page tables stay bijective on allocated pages (gpt/rmap, block_table/slot_owner);
+  * Algorithm 1 (consolidate_pages) and tier migration (swap_blocks) preserve
+    every logical page's payload byte-for-byte;
+  * consolidation monotonically reduces the number of skewed-hot huge pages;
+  * tier policies never exceed near-tier capacity (structurally impossible,
+    checked anyway) and never touch guest-level state.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GpacConfig,
+    address_space as asp,
+    consolidator,
+    filter as pfilter,
+    gpac,
+    init_state,
+    start_all_far,
+    telemetry,
+    tiering,
+)
+from repro.core.types import FREE, allocated_hp_mask
+
+
+def small_cfg(**kw):
+    d = dict(n_logical=96, hp_ratio=16, n_gpa_hp=10, n_near=4, base_elems=4, cl=8)
+    d.update(kw)
+    return GpacConfig(**d)
+
+
+def payload(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(cfg.n_logical, cfg.base_elems)), jnp.float32)
+
+
+def check_invariants(cfg, state):
+    gpt = np.asarray(state.gpt)
+    rmap = np.asarray(state.rmap)
+    bt = np.asarray(state.block_table)
+    so = np.asarray(state.slot_owner)
+    # gpt injective, rmap is its inverse
+    assert len(np.unique(gpt)) == cfg.n_logical, "gpt not injective"
+    assert (rmap[gpt] == np.arange(cfg.n_logical)).all(), "rmap∘gpt != id"
+    mapped = np.zeros(cfg.n_gpa, bool)
+    mapped[gpt] = True
+    assert (rmap[~mapped] == -1).all(), "unmapped gpa pages must have rmap FREE"
+    # block table is a permutation and slot_owner is its inverse
+    assert sorted(bt) == list(range(cfg.n_slots)), "block_table not a permutation"
+    assert (so[bt] == np.arange(cfg.n_gpa_hp)).all(), "slot_owner∘block_table != id"
+
+
+class TestInitAndTranslation:
+    def test_identity_init(self):
+        cfg = small_cfg()
+        state = init_state(cfg)
+        check_invariants(cfg, state)
+        assert int(state.epoch) == 0
+
+    def test_read_write_roundtrip(self):
+        cfg = small_cfg()
+        data = payload(cfg)
+        state = init_state(cfg, fill=data)
+        got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(data))
+
+    def test_invalid_ids_read_zero_and_drop_writes(self):
+        cfg = small_cfg()
+        state = init_state(cfg, fill=payload(cfg))
+        bad = jnp.asarray([-1, cfg.n_logical, 5], jnp.int32)
+        out = asp.read_logical(cfg, state, bad)
+        assert (np.asarray(out[:2]) == 0).all()
+        before = np.asarray(asp.read_logical(cfg, state, jnp.arange(cfg.n_logical)))
+        state2 = asp.write_logical(cfg, state, bad[:2], jnp.ones((2, cfg.base_elems)))
+        after = np.asarray(asp.read_logical(cfg, state2, jnp.arange(cfg.n_logical)))
+        np.testing.assert_array_equal(before, after)
+
+    def test_fused_translation_matches_two_level(self):
+        cfg = small_cfg()
+        state = init_state(cfg, fill=payload(cfg))
+        state = start_all_far(cfg, state)
+        ids = jnp.arange(cfg.n_logical, dtype=jnp.int32)
+        slot, off, _ = asp.translate(cfg, state, ids)
+        fused = asp.fused_translation(cfg, state)
+        np.testing.assert_array_equal(
+            np.asarray(slot * cfg.hp_ratio + off), np.asarray(fused)
+        )
+
+    def test_start_all_far_moves_all_allocated(self):
+        cfg = small_cfg()
+        state = start_all_far(cfg, init_state(cfg, fill=payload(cfg)))
+        check_invariants(cfg, state)
+        alloc = np.asarray(allocated_hp_mask(cfg, state))
+        in_near = np.asarray(state.block_table) < cfg.n_near
+        assert not (alloc & in_near).any(), "allocated blocks must start far"
+        got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(payload(cfg)))
+
+
+class TestConsolidator:
+    def test_algorithm1_preserves_data_and_invariants(self):
+        cfg = small_cfg()
+        data = payload(cfg)
+        state = init_state(cfg, fill=data)
+        # scatter: one hot page inside each of the first 6 huge pages
+        pages = jnp.asarray(
+            [h * cfg.hp_ratio + 3 for h in range(6)] + [-1] * (cfg.hp_ratio - 6),
+            jnp.int32,
+        )
+        state = consolidator.consolidate_pages(cfg, state, pages)
+        check_invariants(cfg, state)
+        got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(data))
+        # the 6 pages now live in one huge page
+        hp = np.asarray(state.gpt)[np.asarray(pages[:6])] // cfg.hp_ratio
+        assert len(set(hp.tolist())) == 1
+        assert int(state.stats["consolidated_pages"]) == 6
+        assert int(state.stats["consolidation_calls"]) == 1
+
+    def test_enomem_when_no_free_region(self):
+        # n_logical == n_gpa -> no fully free huge page exists
+        cfg = GpacConfig(
+            n_logical=64, hp_ratio=16, n_gpa_hp=4, n_near=2, base_elems=4, cl=8
+        )
+        state = init_state(cfg, fill=payload(cfg))
+        pages = jnp.asarray([1, 17] + [-1] * 14, jnp.int32)
+        st2 = consolidator.consolidate_pages(cfg, state, pages)
+        check_invariants(cfg, st2)
+        assert int(st2.stats["consolidation_enomem"]) == 1
+        np.testing.assert_array_equal(np.asarray(st2.gpt), np.asarray(state.gpt))
+
+    def test_empty_batch_is_noop(self):
+        cfg = small_cfg()
+        state = init_state(cfg, fill=payload(cfg))
+        st2 = consolidator.consolidate_pages(
+            cfg, state, jnp.full((cfg.hp_ratio,), -1, jnp.int32)
+        )
+        assert int(st2.stats["consolidation_calls"]) == 0
+        np.testing.assert_array_equal(np.asarray(st2.gpt), np.asarray(state.gpt))
+
+
+class TestTiering:
+    def test_swap_preserves_data(self):
+        cfg = small_cfg()
+        data = payload(cfg)
+        state = init_state(cfg, fill=data)
+        far_ids = jnp.asarray([4, 5, -1], jnp.int32)  # hp 4,5 start far (n_near=4)
+        near_ids = jnp.asarray([0, 1, -1], jnp.int32)
+        state = tiering.swap_blocks(cfg, state, far_ids, near_ids, jnp.int32(2))
+        check_invariants(cfg, state)
+        got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(data))
+        assert int(state.stats["promoted_blocks"]) == 2
+        assert int(state.stats["demoted_blocks"]) == 2
+
+    def test_swap_rejects_mismatched_tiers(self):
+        cfg = small_cfg()
+        state = init_state(cfg, fill=payload(cfg))
+        # both already near -> dropped
+        st2 = tiering.swap_blocks(
+            cfg, state, jnp.asarray([0], jnp.int32), jnp.asarray([1], jnp.int32), 1
+        )
+        np.testing.assert_array_equal(
+            np.asarray(st2.block_table), np.asarray(state.block_table)
+        )
+
+    @pytest.mark.parametrize("policy", tiering.POLICIES)
+    def test_policies_preserve_data_and_never_touch_guest_state(self, policy):
+        cfg = small_cfg()
+        data = payload(cfg)
+        state = start_all_far(cfg, init_state(cfg, fill=data))
+        # make huge pages 0 and 1 hot in the host view
+        hot_pages = jnp.arange(2 * cfg.hp_ratio, dtype=jnp.int32)
+        for _ in range(3):
+            state = asp.record_accesses(cfg, state, hot_pages)
+            state = tiering.tick(cfg, state, policy)
+            gpt_before = np.asarray(state.gpt)
+            state = telemetry.end_window(cfg, state)
+            np.testing.assert_array_equal(np.asarray(state.gpt), gpt_before)
+        check_invariants(cfg, state)
+        got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(data))
+        # hot blocks should have been promoted by every policy
+        bt = np.asarray(state.block_table)
+        assert (bt[:2] < cfg.n_near).all(), f"{policy} failed to promote hot blocks"
+
+
+class TestGpacEndToEnd:
+    def test_consolidation_densifies_and_reduces_near_usage(self):
+        """The paper's headline mechanism: scattered hot pages -> GPAC -> fewer
+        hot huge pages at host -> less near memory used at equal hit rate."""
+        from repro.core import metrics
+
+        cfg = GpacConfig(
+            n_logical=512, hp_ratio=16, n_gpa_hp=48, n_near=16, base_elems=4, cl=8,
+            ipt_min_hits=1,
+        )
+        # one hot base page per huge page (maximally skewed, like Masim)
+        hot = jnp.asarray(
+            [h * cfg.hp_ratio for h in range(cfg.n_logical // cfg.hp_ratio)],
+            jnp.int32,
+        )
+        results = {}
+        for use_gpac in (False, True):
+            state = start_all_far(cfg, init_state(cfg, fill=payload(cfg)))
+            # 12 windows: the 8-deep access-bit history must age out before
+            # memtierd's proactive demotion classifies a block as cold.
+            for _ in range(12):
+                state = gpac.window_step(
+                    cfg, state, hot, policy="memtierd", use_gpac=use_gpac
+                )
+            check_invariants(cfg, state)
+            # data survival
+            got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+            np.testing.assert_allclose(np.asarray(got), np.asarray(payload(cfg)))
+            alloc = np.asarray(allocated_hp_mask(cfg, state))
+            in_near = np.asarray(state.block_table) < cfg.n_near
+            results[use_gpac] = dict(
+                near_blocks=int((alloc & in_near).sum()),
+                hit=float(metrics.hit_rate(state)),
+            )
+        # GPAC must serve the hot set from strictly fewer near blocks
+        assert results[True]["near_blocks"] < results[False]["near_blocks"]
+        # and with a hit rate at least as good at steady state
+        assert results[True]["hit"] >= results[False]["hit"] - 0.05
+
+    def test_skewed_hot_count_decreases(self):
+        cfg = small_cfg(n_logical=128, n_gpa_hp=12)
+        state = init_state(cfg, fill=payload(cfg))
+        hot_ids = jnp.asarray([0, 17, 33, 49, 65], jnp.int32)  # 1 per huge page
+        state = asp.record_accesses(cfg, state, hot_ids)
+        hot = telemetry.hot_mask(cfg, state, "ipt")
+        before = np.asarray(telemetry.hot_subpages_per_hp(cfg, state, hot))
+        skew_before = int(((before > 0) & (before < cfg.cl)).sum())
+        state = gpac.gpac_maintenance(cfg, state, "ipt", max_batches=2)
+        hot = telemetry.hot_mask(cfg, state, "ipt")
+        after = np.asarray(telemetry.hot_subpages_per_hp(cfg, state, hot))
+        skew_after = int(((after > 0) & (after < cfg.cl)).sum())
+        assert skew_after < skew_before
+        assert skew_after <= 1  # at most the (possibly partial) fresh region
+
+    @pytest.mark.parametrize("backend", telemetry.BACKENDS)
+    @pytest.mark.parametrize("policy", tiering.POLICIES)
+    def test_agnosticism_matrix(self, backend, policy):
+        """Design goals 2 & 4: same GPAC core under any telemetry x any policy."""
+        cfg = small_cfg(n_logical=128, n_gpa_hp=12, hot_threshold=1)
+        state = start_all_far(cfg, init_state(cfg, fill=payload(cfg)))
+        hot_ids = jnp.asarray([0, 17, 33, 49], jnp.int32)
+        for _ in range(4):
+            state = gpac.window_step(
+                cfg, state, hot_ids, policy=policy, backend=backend, use_gpac=True
+            )
+        check_invariants(cfg, state)
+        got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(payload(cfg)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+@st.composite
+def cfg_and_ops(draw):
+    hp_ratio = draw(st.sampled_from([4, 8, 16]))
+    n_hp = draw(st.integers(4, 12))
+    n_logical = draw(st.integers(hp_ratio, (n_hp - 2) * hp_ratio))
+    n_near = draw(st.integers(1, n_hp - 1))
+    cl = draw(st.integers(1, hp_ratio))
+    cfg = GpacConfig(
+        n_logical=n_logical, hp_ratio=hp_ratio, n_gpa_hp=n_hp, n_near=n_near,
+        base_elems=2, cl=cl,
+    )
+    n_ops = draw(st.integers(1, 5))
+    ops = []
+    for _ in range(n_ops):
+        kind = draw(st.sampled_from(["access", "consolidate", "tier", "window"]))
+        if kind == "access":
+            ids = draw(
+                st.lists(st.integers(-2, n_logical + 2), min_size=1, max_size=16)
+            )
+            ops.append(("access", ids))
+        elif kind == "consolidate":
+            ids = draw(
+                st.lists(
+                    st.integers(0, n_logical - 1),
+                    min_size=1,
+                    max_size=hp_ratio,
+                    unique=True,
+                )
+            )
+            ops.append(("consolidate", ids))
+        elif kind == "tier":
+            ops.append(("tier", draw(st.sampled_from(tiering.POLICIES))))
+        else:
+            ops.append(("window", None))
+    return cfg, ops
+
+
+@given(cfg_and_ops())
+@settings(max_examples=25, deadline=None)
+def test_random_op_sequences_hold_invariants(cfg_ops):
+    """Any interleaving of accesses, Algorithm-1 calls, tier ticks and window
+    rolls keeps the address space bijective and the payload intact."""
+    cfg, ops = cfg_ops
+    data = payload(cfg, seed=1)
+    state = init_state(cfg, fill=data)
+    for kind, arg in ops:
+        if kind == "access":
+            state = asp.record_accesses(cfg, state, jnp.asarray(arg, jnp.int32))
+        elif kind == "consolidate":
+            pages = np.full((cfg.hp_ratio,), -1, np.int32)
+            pages[: len(arg)] = arg
+            state = consolidator.consolidate_pages(cfg, state, jnp.asarray(pages))
+        elif kind == "tier":
+            state = tiering.tick(cfg, state, arg)
+        else:
+            state = telemetry.end_window(cfg, state)
+    check_invariants(cfg, state)
+    got = asp.read_logical(cfg, state, jnp.arange(cfg.n_logical, dtype=jnp.int32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(data), rtol=0, atol=0)
+
+
+@given(st.integers(1, 16), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_filter_respects_cl(cl, seed):
+    """No selected candidate may live in a huge page with >= CL hot subpages."""
+    cfg = GpacConfig(
+        n_logical=128, hp_ratio=16, n_gpa_hp=12, n_near=4, base_elems=2, cl=cl
+    )
+    rng = np.random.default_rng(seed)
+    state = init_state(cfg, fill=payload(cfg))
+    ids = jnp.asarray(rng.integers(0, cfg.n_logical, size=64), jnp.int32)
+    state = asp.record_accesses(cfg, state, ids)
+    hot = telemetry.hot_mask(cfg, state, "ipt")
+    cand = np.asarray(pfilter.candidate_mask(cfg, state, hot))
+    per_hp = np.asarray(telemetry.hot_subpages_per_hp(cfg, state, hot))
+    hp_of = np.asarray(state.gpt) // cfg.hp_ratio
+    assert not cand[per_hp[hp_of] >= cl].any()
+    batches, counts = pfilter.select_batches(cfg, state, hot, max_batches=2)
+    b = np.asarray(batches)
+    assert b.shape == (2, cfg.hp_ratio)
+    valid = b[b >= 0]
+    assert len(np.unique(valid)) == len(valid)  # no duplicates across batches
+    assert (np.asarray(counts) == (b >= 0).sum(axis=1)).all()

@@ -1,0 +1,190 @@
+"""Per-kernel allclose sweeps: every Pallas kernel in interpret mode vs the
+pure-jnp oracle, across shapes and dtypes (system-prompt requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.consolidate import ops as cons_ops
+from repro.kernels.consolidate import ref as cons_ref
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.flash_attention import kernel as fa_kernel
+from repro.kernels.hotness_scan import ops as hs_ops
+from repro.kernels.hotness_scan import ref as hs_ref
+from repro.kernels.paged_attention import ops as pa_ops
+from repro.kernels.paged_attention import ref as pa_ref
+from repro.kernels.tiered_lookup import ops as tl_ops
+from repro.kernels.tiered_lookup import ref as tl_ref
+
+
+def rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: dict(rtol=1e-6, atol=1e-6), jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestConsolidateKernel:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n_rows,elems,hp_ratio", [(64, 128, 16), (256, 256, 32), (32, 512, 8)])
+    def test_gather_sweep(self, rng, n_rows, elems, hp_ratio, dtype):
+        rows = rand(rng, (n_rows, elems), dtype)
+        ids = np.full((hp_ratio,), -1, np.int32)
+        k = rng.integers(1, hp_ratio + 1)
+        ids[:k] = rng.choice(n_rows, size=k, replace=False)
+        ids = jnp.asarray(ids)
+        got = cons_ops.consolidate_region(rows, ids, use_pallas=True)
+        want = cons_ref.consolidate_region_ref(rows, ids)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+        )
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_scatter_sweep(self, rng, dtype):
+        for n_rows, elems, hp_ratio in [(64, 128, 16), (48, 256, 8)]:
+            dst = rand(rng, (n_rows, elems), dtype)
+            region = rand(rng, (hp_ratio, elems), dtype)
+            ids = np.full((hp_ratio,), -1, np.int32)
+            k = rng.integers(1, hp_ratio + 1)
+            ids[:k] = rng.choice(n_rows, size=k, replace=False)
+            ids = jnp.asarray(ids)
+            got = cons_ops.scatter_region(dst, region, ids, use_pallas=True)
+            want = cons_ref.scatter_region_ref(dst, region, ids)
+            np.testing.assert_allclose(
+                np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+            )
+
+    def test_scatter_row0_target(self, rng):
+        """A real write to row 0 must win over padded-slot redirection."""
+        dst = rand(rng, (16, 128), jnp.float32)
+        region = rand(rng, (8, 128), jnp.float32)
+        ids = jnp.asarray([3, 0, -1, -1, 5, -1, -1, -1], jnp.int32)
+        got = cons_ops.scatter_region(dst, region, ids, use_pallas=True)
+        want = cons_ref.scatter_region_ref(dst, region, ids)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+class TestHotnessScan:
+    @pytest.mark.parametrize("n_hp,hp_ratio", [(7, 16), (32, 128), (100, 512), (1, 8)])
+    def test_sweep(self, rng, n_hp, hp_ratio):
+        bits = jnp.asarray(rng.integers(0, 2, size=(n_hp * hp_ratio,)), jnp.int32)
+        got = hs_ops.hot_count(bits, hp_ratio, use_pallas=True)
+        want = hs_ref.hot_count_ref(bits, hp_ratio)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_core_telemetry(self, rng):
+        """Kernel agrees with the core's jnp hot_subpages_per_hp on real state."""
+        from repro.core import GpacConfig, init_state, telemetry, address_space as asp
+
+        cfg = GpacConfig(n_logical=96, hp_ratio=16, n_gpa_hp=10, n_near=4, base_elems=2, cl=8)
+        state = init_state(cfg)
+        ids = jnp.asarray(rng.integers(0, cfg.n_logical, size=40), jnp.int32)
+        state = asp.record_accesses(cfg, state, ids)
+        hot = telemetry.hot_mask(cfg, state, "ipt")
+        want = telemetry.hot_subpages_per_hp(cfg, state, hot)
+        hot_gpa = jnp.where(state.rmap >= 0, hot[jnp.maximum(state.rmap, 0)], False)
+        got = hs_ops.hot_count(hot_gpa, cfg.hp_ratio, use_pallas=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestTieredLookup:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("n_logical,d,k", [(64, 128, 32), (256, 256, 100)])
+    def test_sweep(self, rng, n_logical, d, k, dtype):
+        n_rows = n_logical + 32
+        rows = rand(rng, (n_rows, d), dtype)
+        fused = jnp.asarray(rng.permutation(n_rows)[:n_logical], jnp.int32)
+        ids = rng.integers(-2, n_logical + 2, size=(k,)).astype(np.int32)
+        got = tl_ops.tiered_lookup(rows, fused, jnp.asarray(ids), use_pallas=True)
+        want = tl_ref.tiered_lookup_ref(rows, fused, jnp.asarray(ids))
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **TOL[dtype]
+        )
+
+    def test_multidim_ids(self, rng):
+        rows = rand(rng, (64, 128), jnp.float32)
+        fused = jnp.arange(64, dtype=jnp.int32)
+        ids = jnp.asarray(rng.integers(0, 64, size=(4, 8)), jnp.int32)
+        got = tl_ops.tiered_lookup(rows, fused, ids, use_pallas=True)
+        assert got.shape == (4, 8, 128)
+        want = tl_ref.tiered_lookup_ref(rows, fused, ids)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want))
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize(
+        "B,KVH,G,hd,page,pps", [(2, 2, 4, 64, 16, 4), (3, 1, 8, 128, 8, 3), (1, 4, 1, 64, 32, 2)]
+    )
+    def test_sweep(self, rng, B, KVH, G, hd, page, pps, dtype):
+        n_pages = B * pps + 4
+        q = rand(rng, (B, KVH, G, hd), dtype)
+        k = rand(rng, (KVH, n_pages, page, hd), dtype)
+        v = rand(rng, (KVH, n_pages, page, hd), dtype)
+        btab = jnp.asarray(
+            rng.permutation(n_pages)[: B * pps].reshape(B, pps), jnp.int32
+        )
+        lens = jnp.asarray(rng.integers(1, pps * page + 1, size=(B,)), jnp.int32)
+        got = pa_ops.paged_attention(q, k, v, btab, lens, use_pallas=True)
+        want = pa_ref.paged_attention_ref(q, k, v, btab, lens)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+            atol=2e-2 if dtype == jnp.bfloat16 else 1e-5,
+        )
+
+    def test_len_zero_sequence_is_finite(self, rng):
+        q = rand(rng, (1, 1, 2, 64), jnp.float32)
+        k = rand(rng, (1, 4, 8, 64), jnp.float32)
+        v = rand(rng, (1, 4, 8, 64), jnp.float32)
+        btab = jnp.zeros((1, 2), jnp.int32)
+        lens = jnp.zeros((1,), jnp.int32)
+        got = pa_ops.paged_attention(q, k, v, btab, lens, use_pallas=True)
+        assert np.isfinite(np.asarray(got)).all()
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("B,H,KVH,S,hd", [(2, 4, 2, 128, 64), (1, 8, 8, 256, 64), (1, 6, 2, 128, 128)])
+    def test_sweep(self, rng, B, H, KVH, S, hd, causal, dtype):
+        q = rand(rng, (B, H, S, hd), dtype)
+        k = rand(rng, (B, KVH, S, hd), dtype)
+        v = rand(rng, (B, KVH, S, hd), dtype)
+        got = fa_ops.gqa_attention(q, k, v, causal=causal, use_pallas=True,
+                                   block_q=64, block_k=64)
+        want = fa_ops.gqa_attention(q, k, v, causal=causal, use_pallas=False)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+            atol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+        )
+
+    def test_matches_naive_softmax(self, rng):
+        """Oracle itself cross-checked against an independent naive formula."""
+        B, H, S, hd = 1, 2, 32, 16
+        q = rand(rng, (B, H, S, hd), jnp.float32)
+        k = rand(rng, (B, H, S, hd), jnp.float32)
+        v = rand(rng, (B, H, S, hd), jnp.float32)
+        want = fa_ops.gqa_attention(q, k, v, causal=True, use_pallas=False)
+        s = np.einsum("bhqd,bhkd->bhqk", np.asarray(q), np.asarray(k)) / np.sqrt(hd)
+        mask = np.tril(np.ones((S, S), bool))
+        s = np.where(mask, s, -np.inf)
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p = p / p.sum(-1, keepdims=True)
+        naive = np.einsum("bhqk,bhkd->bhqd", p, np.asarray(v))
+        np.testing.assert_allclose(np.asarray(want), naive, rtol=1e-5, atol=1e-5)
+
+    def test_kernel_direct_group_fold(self, rng):
+        """Direct kernel call with group>1 vs ref with the same fold."""
+        BH, S, hd, G = 2, 64, 64, 2
+        q = rand(rng, (BH, S * G, hd), jnp.float32)
+        k = rand(rng, (BH, S, hd), jnp.float32)
+        v = rand(rng, (BH, S, hd), jnp.float32)
+        got = fa_kernel.flash_attention(
+            q, k, v, causal=True, group=G, block_q=64, block_k=64, interpret=True
+        )
+        want = fa_ref.flash_attention_ref(q, k, v, causal=True, group=G)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)

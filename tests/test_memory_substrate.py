@@ -1,0 +1,119 @@
+"""Tiered memory substrate: KV cache, embedding store, expert store."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as config_lib
+from repro.memory.embedding import EmbedSpec, TieredEmbeddingStore
+from repro.memory.kvcache import KVSpec, TieredKVCache
+from repro.memory.moe_store import ExpertStoreSpec, TieredExpertStore
+
+
+def _arch():
+    return config_lib.reduced("internlm2-20b").replace(dtype=jnp.float32)
+
+
+class TestTieredKVCache:
+    def _mk(self, **kw):
+        spec = KVSpec(arch=_arch(), max_seqs=2, max_seq_len=256,
+                      group_tokens=4, hp_ratio=4, near_fraction=0.4, cl=3, **kw)
+        return spec, TieredKVCache(spec)
+
+    def test_roundtrip(self, rng):
+        spec, kv = self._mk()
+        a = spec.arch
+        n_groups = 8
+        shape = (n_groups, a.n_attn_layers, a.n_kv_heads, spec.group_tokens, a.hd)
+        k = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        v = jnp.asarray(rng.normal(size=shape), jnp.float32)
+        kv.append_groups(0, k, v)
+        ids = jnp.asarray(kv.seq_groups(0), jnp.int32)
+        k2, v2 = kv.read_groups(ids)
+        np.testing.assert_allclose(np.asarray(k2), np.asarray(k), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(v), rtol=1e-6)
+
+    def test_maintenance_preserves_kv_and_reduces_near(self, rng):
+        spec, kv = self._mk()
+        a = spec.arch
+        n_groups = spec.groups_per_seq  # fill both sequences fully
+        shape = (n_groups, a.n_attn_layers, a.n_kv_heads, spec.group_tokens, a.hd)
+        ks, vs = {}, {}
+        for seq in (0, 1):
+            ks[seq] = jnp.asarray(rng.normal(size=shape), jnp.float32)
+            vs[seq] = jnp.asarray(rng.normal(size=shape), jnp.float32)
+            kv.append_groups(seq, ks[seq], vs[seq])
+        # skewed attention mass: one hot group per tier block
+        hot = np.asarray(kv.seq_groups(0))[:: spec.hp_ratio]
+        for _ in range(4):
+            kv.record_attention_mass(hot, np.full(hot.shape, 0.9))
+            kv.maintenance()
+        for seq in (0, 1):  # data survives consolidation + migration
+            ids = jnp.asarray(kv.seq_groups(seq), jnp.int32)
+            k2, v2 = kv.read_groups(ids)
+            np.testing.assert_allclose(np.asarray(k2), np.asarray(ks[seq]), rtol=1e-6)
+            np.testing.assert_allclose(np.asarray(v2), np.asarray(vs[seq]), rtol=1e-6)
+        assert 0 <= kv.near_usage() <= 1.0
+
+    def test_gpac_reduces_near_usage_vs_baseline(self, rng):
+        results = {}
+        for use_gpac in (False, True):
+            spec, kv = self._mk()
+            a = spec.arch
+            n_groups = spec.groups_per_seq
+            shape = (n_groups, a.n_attn_layers, a.n_kv_heads, spec.group_tokens, a.hd)
+            kv.append_groups(0, jnp.zeros(shape), jnp.zeros(shape))
+            kv.append_groups(1, jnp.zeros(shape), jnp.zeros(shape))
+            hot = np.concatenate(
+                [np.asarray(kv.seq_groups(s))[:: spec.hp_ratio] for s in (0, 1)])
+            for _ in range(12):
+                kv.record_attention_mass(hot, np.full(hot.shape, 0.9))
+                kv.maintenance(use_gpac=use_gpac)
+            results[use_gpac] = kv.stats()
+        # GPAC serves the same hot mass from fewer near blocks
+        assert (results[True]["near_capacity_used"]
+                < results[False]["near_capacity_used"])
+        assert results[True]["hit_rate"] >= results[False]["hit_rate"] - 0.05
+
+
+class TestTieredEmbedding:
+    def test_lookup_matches_table(self, rng):
+        arch = _arch()
+        table = jnp.asarray(rng.normal(size=(arch.vocab, arch.d_model)), jnp.float32)
+        spec = EmbedSpec(arch=arch, rows_per_page=4, hp_ratio=8,
+                         near_fraction=0.3, cl=4)
+        store = TieredEmbeddingStore(spec, table)
+        ids = jnp.asarray(rng.integers(0, arch.vocab, size=(5, 7)), jnp.int32)
+        got = store.lookup(ids)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(table[ids]), rtol=1e-6)
+
+    def test_lookup_survives_maintenance(self, rng):
+        arch = _arch()
+        table = jnp.asarray(rng.normal(size=(arch.vocab, arch.d_model)), jnp.float32)
+        spec = EmbedSpec(arch=arch, rows_per_page=4, hp_ratio=8,
+                         near_fraction=0.3, cl=4)
+        store = TieredEmbeddingStore(spec, table)
+        zipf_ids = np.minimum(rng.zipf(1.3, size=4096) - 1, arch.vocab - 1)
+        for _ in range(4):
+            store.record_batch(zipf_ids)
+            store.maintenance()
+        ids = jnp.asarray(rng.integers(0, arch.vocab, size=(64,)), jnp.int32)
+        got = store.lookup(ids)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(table[ids]), rtol=1e-6)
+
+
+class TestExpertStore:
+    def test_hot_experts_become_near_resident(self, rng):
+        arch = config_lib.reduced("kimi-k2-1t-a32b")
+        # 3 hot experts x 4 blocks = 12 blocks must fit the near budget
+        store = TieredExpertStore(ExpertStoreSpec(arch=arch, near_fraction=0.5))
+        hot = np.asarray([0, 3, 5])
+        for _ in range(12):
+            # hot experts picked 50x as often as the tail
+            sel = np.concatenate([np.repeat(hot, 50),
+                                  rng.integers(0, arch.n_experts, 3)])
+            store.record_routing(sel)
+            store.maintenance()
+        near = set(store.near_experts().tolist())
+        assert set(hot.tolist()) <= near, (hot, near)

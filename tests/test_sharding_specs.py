@@ -1,0 +1,147 @@
+"""Sharding-spec assignment rules (stub mesh -- no devices needed) and
+roofline analysis arithmetic."""
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as config_lib
+from repro.launch import sharding
+from repro.models import registry
+from repro.models.dist import Dist
+
+
+class StubMesh:
+    """Quacks like jax.sharding.Mesh for spec logic (shape dict only)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def dist16():
+    return Dist(mesh=StubMesh(pod=2, data=16, model=16),
+                dp=("pod", "data"), tp="model")
+
+
+def specs_for(arch: str, fsdp=None):
+    cfg = config_lib.reduced(arch)  # shapes don't matter for rule selection
+    full = config_lib.get(arch)
+    model = registry.build(full)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return full, sharding.param_specs(full, params, dist16(),
+                                      fsdp_threshold=fsdp)
+
+
+class TestParamSpecs:
+    def test_dense_tp_rules(self):
+        cfg, specs = specs_for("internlm2-20b", fsdp=None)
+        g = specs["groups"]["layer0"]
+        assert g["attn"]["wq"] == P(None, None, "model")  # leading group axis
+        assert g["attn"]["wo"] == P(None, "model", None)
+        assert g["ffn"]["wi_gate"] == P(None, None, "model")
+        assert g["ffn"]["wo"] == P(None, "model", None)
+        assert specs["embed"]["tok"] == P("model", None)
+        # KVH=8 does not divide model=16 -> KV replicated
+        assert g["attn"]["wk"] == P(None, None, None)
+
+    def test_indivisible_heads_replicate(self):
+        cfg, specs = specs_for("smollm-360m", fsdp=None)
+        g = specs["groups"]["layer0"]
+        # 15 heads don't divide 16 -> attention replicated, MLP still sharded
+        assert g["attn"]["wq"] == P(None, None, None)
+        assert g["ffn"]["wi_gate"] == P(None, None, "model")
+
+    def test_moe_expert_parallelism(self):
+        cfg, specs = specs_for("kimi-k2-1t-a32b", fsdp=None)
+        g = specs["groups"]["layer0"]
+        assert g["ffn"]["experts"]["wi_gate"][1] == "model"  # (G, E, d, ff)
+        assert g["ffn"]["router"] == P(None, None, "model")
+
+    def test_fsdp_extends_big_leaves(self):
+        cfg, specs = specs_for("internlm2-20b", fsdp=8 * 1024 * 1024)
+        g = specs["groups"]["layer0"]
+        # big MLP weights get an extra DP axis on a free dim
+        spec = g["ffn"]["wi_gate"]
+        assert "model" in spec and ("pod", "data") in spec
+        # small norm scales stay replicated
+        assert g["norm1"]["scale"] == P(None, None)
+
+    def test_zero1_opt_specs_shard_something(self):
+        from repro.train import optimizer, trainer
+
+        full = config_lib.get("qwen2-0.5b")
+        model = registry.build(full)
+        params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        tcfg = trainer.TrainConfig()
+        state = jax.eval_shape(lambda p: trainer.init_train_state(tcfg, p),
+                               params)
+        d = dist16()
+        p_spec = sharding.param_specs(full, params, d)
+        o_spec = sharding.opt_specs(full, state, p_spec, d)
+        m_spec = o_spec["opt"]["m"]["groups"]["layer0"]["ffn"]["wi_gate"]
+        flat = [a for a in jax.tree.leaves(m_spec, is_leaf=lambda x: x is not None)]
+        assert any(a is not None for a in m_spec), m_spec  # ZeRO-1 sharded
+        assert o_spec["opt"]["step"] == P()  # scalars replicate
+
+    def test_cache_specs_decode(self):
+        full = config_lib.get("internlm2-20b")
+        cache = registry.cache_specs(full, B=128, max_seq=32768)
+        d = dist16()
+        specs = sharding.cache_specs(full, cache, d)
+        kv = specs["layers"]["layer0"]["k_pages"]
+        # (G, B, KVH=8, pool, page, hd): KVH indivisible -> page dim sharded
+        assert kv == P(None, ("pod", "data"), None, None, "model", None)
+        assert specs["lens"] == P(("pod", "data"))
+
+    def test_divisibility_fallback_batch1(self):
+        full = config_lib.get("jamba-1.5-large-398b")
+        cache = registry.cache_specs(full, B=1, max_seq=1024)
+        specs = sharding.cache_specs(full, cache, dist16())
+        kv = specs["layers"]["layer0"]["k_pages"]
+        assert kv[1] is None  # batch=1 cannot shard over dp
+
+
+class TestRoofline:
+    def test_terms_and_dominance(self):
+        from repro.roofline import analysis
+
+        rec = dict(
+            arch="gemma-7b", shape="train_4k", mesh="single", n_devices=256,
+            cost_analysis={"flops": 1e15, "bytes accessed": 1e12},
+            collectives={"bytes": {"all-reduce": 1e10, "all-gather": 0,
+                                   "reduce-scatter": 0, "all-to-all": 0,
+                                   "collective-permute": 0},
+                         "counts": {}},
+            memory_analysis={},
+        )
+        out = analysis.analyze_cell(rec)
+        # gemma recipe has micro_batches=2
+        assert out["micro_batches"] == 2
+        np.testing.assert_allclose(out["t_compute_s"], 2e15 / 197e12)
+        np.testing.assert_allclose(out["t_memory_s"], 2e12 / 819e9)
+        np.testing.assert_allclose(out["t_collective_s"], 2 * 1e10 / 50e9)
+        assert out["dominant"] == "compute"
+        assert 0 < out["useful_flops_ratio"]
+
+    def test_time_scan_correction_only_for_ssm(self):
+        from repro.roofline import analysis
+
+        assert analysis.time_scan_correction("gemma-7b", "train_4k") == 0
+        assert analysis.time_scan_correction("xlstm-1.3b", "train_4k") > 0
+        assert analysis.time_scan_correction("jamba-1.5-large-398b",
+                                             "train_4k") > 0
+        assert analysis.time_scan_correction("xlstm-1.3b", "long_500k") == 0
+
+    def test_model_flops_moe_uses_active(self):
+        from repro.roofline import analysis
+
+        dense = analysis.model_flops("internlm2-20b", "train_4k")
+        assert dense == 6.0 * config_lib.get("internlm2-20b").param_count() \
+            * 256 * 4096
+        kimi = analysis.model_flops("kimi-k2-1t-a32b", "train_4k")
+        assert kimi < 6.0 * config_lib.get("kimi-k2-1t-a32b").param_count() \
+            * 256 * 4096

@@ -1,0 +1,92 @@
+"""Trace generators reproduce the paper's skew shapes; the multi-tenant
+simulator reproduces the paper's at-scale direction (GPAC >= baseline)."""
+import numpy as np
+import pytest
+
+from repro.core import metrics
+from repro.core.simulate import make_multi_guest, run_multi_guest
+from repro.data import traces as tr
+
+
+def skew_profile(workload, n_logical=4096, hp_ratio=64, k=8192):
+    spec = tr.TraceSpec(workload, n_logical, hp_ratio, n_windows=4,
+                        accesses_per_window=k, seed=0)
+    t = tr.generate(spec)
+    assert t.shape == (4, k) and t.dtype == np.int32
+    assert (t >= 0).all() and (t < n_logical).all()
+    # accessed subpages per huge page, over all windows
+    pages = np.unique(t)
+    per_hp = np.bincount(pages // hp_ratio, minlength=n_logical // hp_ratio)
+    return per_hp[per_hp > 0]
+
+
+class TestTraceSkewShapes:
+    def test_masim_maximal_skew(self):
+        per_hp = skew_profile("masim")
+        assert (per_hp == 1).all()  # exactly one hot subpage per huge page
+
+    def test_redis_scattered(self):
+        per_hp = skew_profile("redis")
+        # most touched huge pages are skewed (<25% of subpages hot)
+        assert np.quantile(per_hp, 0.75) < 0.25 * 64
+
+    def test_memcached_85pct_under_100_of_512(self):
+        # paper Fig. 2: ~85% of huge pages have <100/512 subpages accessed
+        per_hp = skew_profile("memcached", n_logical=2**15, hp_ratio=512, k=2**15)
+        frac = (per_hp < 100).mean()
+        assert frac > 0.6, f"memcached skew fraction {frac}"
+
+    def test_liblinear_dense(self):
+        per_hp = skew_profile("liblinear")
+        assert np.median(per_hp) > 0.9 * 64  # dense: nearly all subpages hot
+
+    def test_hash_moderate(self):
+        per_hp = skew_profile("hash")
+        med = np.median(per_hp) / 64
+        assert 0.1 < med < 0.9  # between the extremes (Fig. 16b)
+
+    def test_determinism(self):
+        spec = tr.TraceSpec("redis", 1024, 16, 2, 256, seed=7)
+        np.testing.assert_array_equal(tr.generate(spec), tr.generate(spec))
+
+    def test_unknown_workload_raises(self):
+        with pytest.raises(ValueError):
+            tr.generate(tr.TraceSpec("nope", 128))
+
+
+class TestMultiGuest:
+    def _run(self, use_gpac, near_fraction=0.3, n_guests=3):
+        mg, state = make_multi_guest(
+            n_guests=n_guests, logical_per_guest=256, hp_ratio=16,
+            near_fraction=near_fraction, base_elems=2, cl=8,
+        )
+        t = np.stack([
+            tr.generate(tr.TraceSpec("redis", 256, 16, 8, 512, seed=g))
+            for g in range(n_guests)
+        ])
+        return run_multi_guest(mg, state, t, use_gpac=use_gpac)
+
+    def test_gpac_improves_aggregate_hit_rate(self):
+        _, base = self._run(False)
+        _, with_gpac = self._run(True)
+        assert with_gpac["hit_rate"][-1].mean() >= base["hit_rate"][-1].mean()
+        assert with_gpac["throughput"][-1].mean() >= base["throughput"][-1].mean()
+
+    def test_guests_confined_to_own_segments(self):
+        mg, state = make_multi_guest(
+            n_guests=2, logical_per_guest=128, hp_ratio=16,
+            near_fraction=0.5, base_elems=2, cl=8,
+        )
+        t = np.stack([
+            tr.generate(tr.TraceSpec("masim", 128, 16, 4, 128, seed=g))
+            for g in range(2)
+        ])
+        state, _ = run_multi_guest(mg, state, t, use_gpac=True)
+        gpt = np.asarray(state.gpt)
+        for g in range(2):
+            lo, hi = mg.logical_range(g)
+            hp_lo, hp_hi = mg.hp_range(g)
+            hp_of = gpt[lo:hi] // mg.cfg.hp_ratio
+            assert (hp_of >= hp_lo).all() and (hp_of < hp_hi).all(), (
+                "guest pages escaped the guest's GPA segment"
+            )
