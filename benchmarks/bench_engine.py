@@ -1,0 +1,101 @@
+"""Engine perf benchmark: vectorized/scan-fused multi-tenant engine vs the
+seed per-guest/per-window reference path.
+
+Times ``simulate.run_multi_guest`` (guest-batched windows, scan-fused window
+loop, chunked host transfer) against ``simulate.run_multi_guest_reference``
+(unrolled per-guest ops, one host sync per window) across an
+(n_guests, n_logical, n_windows) grid. Trace generation and jit compilation
+are excluded (one warmup run per path, then best-of-``REPEATS`` wall clock).
+
+Writes ``BENCH_engine.json`` at the repo root (the perf-trajectory artifact
+CI archives) and ``experiments/benchmarks/bench_engine.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import simulate
+from repro.data import traces as tr
+
+REPEATS = 3
+HP_RATIO = 32
+ACCESSES = 2048
+
+# (n_guests, logical_per_guest, n_windows) -- n_guests >= 8 rows are the
+# at-scale regime the acceptance criterion targets
+GRID = (
+    (2, 1024, 12),
+    (4, 1024, 12),
+    (8, 1024, 12),
+    (12, 512, 12),
+)
+
+
+def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int) -> dict:
+    traces = np.stack([
+        tr.generate(tr.TraceSpec(
+            "redis", n_logical=logical_per_guest, hp_ratio=HP_RATIO,
+            n_windows=n_windows, accesses_per_window=ACCESSES, seed=g))
+        for g in range(n_guests)])
+
+    def make():
+        return simulate.make_multi_guest(
+            n_guests=n_guests, logical_per_guest=logical_per_guest,
+            hp_ratio=HP_RATIO, near_fraction=0.25, base_elems=2, cl=8)
+
+    case = dict(
+        n_guests=n_guests, logical_per_guest=logical_per_guest,
+        n_logical=n_guests * logical_per_guest, n_windows=n_windows,
+        hp_ratio=HP_RATIO, accesses_per_window=ACCESSES)
+    for name, runner in (
+        ("reference", simulate.run_multi_guest_reference),
+        ("engine", simulate.run_multi_guest),
+    ):
+        mg, state = make()
+        t0 = time.perf_counter()
+        runner(mg, state, traces)  # warmup: trace + compile, excluded
+        case[f"{name}_warmup_s"] = time.perf_counter() - t0
+        best = float("inf")
+        for _ in range(REPEATS):
+            mg, state = make()
+            t0 = time.perf_counter()
+            _, series = runner(mg, state, traces)
+            best = min(best, time.perf_counter() - t0)
+        case[f"{name}_s"] = best
+    case["speedup"] = case["reference_s"] / case["engine_s"]
+    return case
+
+
+def run() -> dict:
+    cases = []
+    for n_guests, logical_per_guest, n_windows in GRID:
+        case = _bench_case(n_guests, logical_per_guest, n_windows)
+        cases.append(case)
+        print(f"  n_guests={n_guests:3d} n_logical={case['n_logical']:6d} "
+              f"windows={n_windows:3d}: reference {case['reference_s']*1e3:8.1f} ms"
+              f" engine {case['engine_s']*1e3:8.1f} ms"
+              f" speedup {case['speedup']:5.2f}x")
+    at_scale = [c["speedup"] for c in cases if c["n_guests"] >= 8]
+    payload = dict(
+        backend=jax.default_backend(),
+        repeats=REPEATS,
+        cases=cases,
+        min_speedup_at_scale=min(at_scale),
+        target_speedup_at_scale=3.0,
+        meets_target=min(at_scale) >= 3.0,
+    )
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return common.save("bench_engine", payload)
+
+
+if __name__ == "__main__":
+    r = run()
+    print(f"min speedup at n_guests>=8: {r['min_speedup_at_scale']:.2f}x "
+          f"(target >= {r['target_speedup_at_scale']}x) "
+          f"-> {'OK' if r['meets_target'] else 'MISS'}")

@@ -14,6 +14,8 @@ from repro.data import traces as tr
 N_GUESTS = 6
 LOGICAL_PER_GUEST = 8 * 1024
 RATIOS = (0.1, 0.2, 0.3, 0.5, 0.7)
+# scan-fuse the window loop in chunks (see simulate.run_multi_guest)
+WINDOWS_PER_STEP = 10
 
 
 def run():
@@ -33,7 +35,8 @@ def run():
                 gpa_slack=1.0)
             _, series = run_multi_guest(
                 mg, state, traces, policy="memtierd", use_gpac=use_gpac,
-                cl=common.scaled_cl("redis"))
+                cl=common.scaled_cl("redis"),
+                windows_per_step=WINDOWS_PER_STEP)
             res["gpac" if use_gpac else "baseline"] = float(
                 series["throughput"][-5:].mean())
         res["delta"] = res["gpac"] / res["baseline"] - 1

@@ -18,6 +18,9 @@ from repro.data import traces as tr
 N_GUESTS = 6
 LOGICAL_PER_GUEST = 8 * 1024
 WINDOWS = 24
+# scan-fuse the window loop in chunks of this many windows (one device->host
+# metric transfer per chunk; see simulate.run_multi_guest)
+WINDOWS_PER_STEP = 12
 
 
 def run(policies=("memtierd", "tpp", "autonuma")):
@@ -37,7 +40,8 @@ def run(policies=("memtierd", "tpp", "autonuma")):
                 gpa_slack=1.0)
             state, series = run_multi_guest(
                 mg, state, traces, policy=policy, use_gpac=use_gpac,
-                cl=common.scaled_cl("redis"))
+                cl=common.scaled_cl("redis"),
+                windows_per_step=WINDOWS_PER_STEP)
             res["gpac" if use_gpac else "baseline"] = dict(
                 tput=series["throughput"][-6:].mean(axis=0).tolist(),
                 near_blocks=series["near_blocks"][-1].tolist(),

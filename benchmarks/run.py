@@ -1,11 +1,19 @@
 """Run the full benchmark suite (one module per paper table/figure) and print
-a summary against the paper's claims. ``python -m benchmarks.run``."""
+a summary against the paper's claims. ``python -m benchmarks.run``.
+
+``--only <name>`` (repeatable) runs a subset -- e.g. CI's fast lane is
+``--only bench_engine --only fig2_skew_cdf``; ``--json <path>`` dumps a
+machine-readable summary (per-benchmark results, timings, failures) so CI can
+archive it alongside ``BENCH_engine.json``."""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import time
 
 from benchmarks import (
+    bench_engine,
     fig2_skew_cdf,
     fig6_heatmap,
     fig7_memdist,
@@ -31,21 +39,45 @@ SUITE = [
     ("fig15_cl_sensitivity", fig15_cl_sensitivity),
     ("fig16_scatter_hist", fig16_scatter_hist),
     ("fig17_pressure", fig17_pressure),
+    ("bench_engine", bench_engine),
 ]
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--only", action="append", metavar="NAME",
+        help="run only this benchmark (repeatable); see SUITE for names")
+    ap.add_argument(
+        "--json", metavar="PATH",
+        help="write a machine-readable run summary to PATH")
+    args = ap.parse_args(argv)
+    if args.only:
+        known = {name for name, _ in SUITE}
+        unknown = sorted(set(args.only) - known)
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; have {sorted(known)}")
+    suite = [(n, m) for n, m in SUITE if not args.only or n in args.only]
+    if args.json:
+        try:  # fail before the suite runs, not minutes after -- append mode
+            open(args.json, "a").close()  # checks writability w/o truncating
+        except OSError as e:
+            ap.error(f"cannot write --json path {args.json!r}: {e}")
+
     results = {}
+    timings = {}
     t_total = time.time()
     failures = []
-    for name, mod in SUITE:
+    for name, mod in suite:
         t0 = time.time()
         print(f"\n=== {name} " + "=" * (60 - len(name)))
         try:
             results[name] = mod.run()
-            print(f"    ok ({time.time()-t0:.1f}s)")
+            timings[name] = time.time() - t0
+            print(f"    ok ({timings[name]:.1f}s)")
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
+            timings[name] = time.time() - t0
             print(f"    FAILED: {e!r}")
 
     print("\n" + "=" * 70)
@@ -75,10 +107,29 @@ def main():
         d = r["fig17_pressure"]
         print(f"Fig 17 benefit shrinks with more near memory: "
               f"{d['benefit_shrinks_with_more_near']}")
-    print(f"\ntotal {time.time()-t_total:.1f}s; "
-          f"{len(SUITE)-len(failures)}/{len(SUITE)} benchmarks ok")
+    if "bench_engine" in r:
+        d = r["bench_engine"]
+        print(f"Engine  speedup at n_guests>=8: "
+              f"{d['min_speedup_at_scale']:.2f}x "
+              f"(target >= {d['target_speedup_at_scale']}x)")
+    total_s = time.time() - t_total
+    print(f"\ntotal {total_s:.1f}s; "
+          f"{len(suite)-len(failures)}/{len(suite)} benchmarks ok")
     for name, err in failures:
         print(f"  FAILED {name}: {err}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                dict(
+                    results=results,
+                    timings_s=timings,
+                    failures=dict(failures),
+                    total_s=total_s,
+                    ran=[n for n, _ in suite],
+                ),
+                f, indent=1, default=float,
+            )
     return 1 if failures else 0
 
 

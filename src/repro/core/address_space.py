@@ -89,9 +89,15 @@ def record_accesses(
     The host side only ever sees the huge-page aggregate -- this is the
     information asymmetry the paper exploits.
     """
+    valid = (logical >= 0) & (logical < cfg.n_logical)
+    if counts is None and logical.size * 2 >= cfg.n_logical:
+        # large batches (the guest-batched engine flattens all guests'
+        # accesses into one call): histogram once, then update the host side
+        # per logical page instead of per access -- bit-identical integer
+        # sums, ~3x fewer scattered elements
+        return _record_accesses_aggregated(cfg, state, logical, valid)
     if counts is None:
         counts = jnp.ones(logical.shape, jnp.int32)
-    valid = (logical >= 0) & (logical < cfg.n_logical)
     counts = jnp.where(valid, counts, 0)
     l_idx = jnp.where(valid, logical, cfg.n_logical)
     guest = state.guest_counts.at[l_idx].add(counts, mode="drop")
@@ -114,6 +120,38 @@ def record_accesses(
         state,
         guest_counts=guest,
         host_counts=host,
+        last_touch_epoch=touch,
+        stats=stats,
+    )
+
+
+def _record_accesses_aggregated(
+    cfg: GpacConfig, state: TieredState, logical: jax.Array, valid: jax.Array
+) -> TieredState:
+    """Histogram formulation of :func:`record_accesses` for unweighted access
+    batches: one scatter builds the per-page histogram, and every host-side
+    quantity (huge-page counts, touch epochs, hit tiers) derives from it with
+    per-logical-page work. All sums are exact int32, so the result is
+    bit-identical to the per-access scatter path."""
+    flat = jnp.where(valid, logical, cfg.n_logical).reshape(-1).astype(jnp.int32)
+    h = jnp.zeros((cfg.n_logical + 1,), jnp.int32).at[flat].add(1)[: cfg.n_logical]
+    hp_of = state.gpt // cfg.hp_ratio
+    host_inc = jnp.zeros((cfg.n_gpa_hp,), jnp.int32).at[hp_of].add(h)
+    touch = jnp.where(
+        host_inc > 0,
+        jnp.maximum(state.last_touch_epoch, state.epoch),
+        state.last_touch_epoch,
+    )
+    slot_of = state.block_table[hp_of]
+    near_hits = jnp.where(slot_of < cfg.n_near, h, 0).sum()
+    far_hits = jnp.where(slot_of >= cfg.n_near, h, 0).sum()
+    stats = dict(state.stats)
+    stats["near_hits"] = stats["near_hits"] + near_hits.astype(jnp.int32)
+    stats["far_hits"] = stats["far_hits"] + far_hits.astype(jnp.int32)
+    return dataclasses_replace(
+        state,
+        guest_counts=state.guest_counts + h,
+        host_counts=state.host_counts + host_inc,
         last_touch_epoch=touch,
         stats=stats,
     )

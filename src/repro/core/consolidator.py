@@ -10,6 +10,14 @@ pages, exactly as in the paper. Returns -ENOMEM behaviour as a no-op +
 The data copy is the compute hot-spot; ``repro.kernels.consolidate`` provides
 the Pallas TPU kernel for the common near->near path, and this module is the
 general (mixed-tier, predicated) reference path used under jit on any backend.
+The copy gathers straight out of whichever pool holds each source page
+(zero-copy consolidation: a batch touches only ``hp_ratio`` rows, never a
+materialized [near_pool; far_pool] concatenation), and
+``consolidate_pages_multi`` / ``consolidate_batches_multi`` execute one
+Algorithm-1 invocation *per guest* at once for the batched multi-tenant
+engine (guests' GPA segments are disjoint, so rounds vectorize exactly).
+Both entry points share ``_apply_consolidation`` -- the single-guest call is
+the n=1 row of the batched one.
 """
 from __future__ import annotations
 
@@ -19,6 +27,99 @@ import jax.numpy as jnp
 from repro.core import address_space as asp
 from repro.core.address_space import dataclasses_replace
 from repro.core.types import FREE, GpacConfig, TieredState
+
+
+def _apply_consolidation(
+    cfg: GpacConfig,
+    state: TieredState,
+    pages: jax.Array,  # int32[n, hp_ratio] logical ids, -1 padded
+    region: jax.Array,  # int32[n] fresh region per row, -1 = -ENOMEM
+) -> TieredState:
+    """Shared core of Algorithm 1: execute ``n`` independent invocations at
+    once (rows must touch disjoint pages/regions -- one row, or one row per
+    guest segment).
+
+    Steps (mirroring Algorithm 1; step 1, the region allocation, is done by
+    the callers):
+      2. for each old_page i: copy payload old -> region[i]
+      3. set_pte_at: gpt[logical] = region*hp_ratio+i ; rmap updates
+      4. flush_tlb_mm_range: fused-translation caches are invalidated by
+         bumping stats['tlb_shootdowns'] (callers drop cached fused tables)
+      5. free(old_page): old gpa rmap entries -> FREE
+    """
+    valid = (pages >= 0) & (pages < cfg.n_logical)
+    ok = region >= 0
+    n_sel = valid.sum(axis=1)
+
+    safe_pages = jnp.where(valid, pages, 0)
+    old_gpa = state.gpt[safe_pages]  # [n, hp_ratio]
+    off = jnp.arange(cfg.hp_ratio, dtype=jnp.int32)
+    new_gpa = region[:, None] * cfg.hp_ratio + off
+    do_move = valid & ok[:, None]
+
+    # ---- 2. data copy (predicated dual-pool gather/scatter) -------------
+    # Gather hp_ratio rows straight out of whichever pool holds each source
+    # page -- no [near_pool; far_pool] concatenation, which would materialize
+    # every slot's payload inside each lax.scan invocation (the same idiom
+    # tiering.swap_blocks uses).
+    src_slot = state.block_table[old_gpa // cfg.hp_ratio]
+    src_off = old_gpa % cfg.hp_ratio
+    src_flat = jnp.where(do_move, src_slot * cfg.hp_ratio + src_off, 0)
+    src_is_near = src_flat < cfg.n_near * cfg.hp_ratio
+    near_rows = state.near_pool.reshape(-1, cfg.base_elems)
+    far_rows = state.far_pool.reshape(-1, cfg.base_elems)
+    payload = jnp.where(
+        src_is_near[..., None],
+        near_rows[jnp.where(src_is_near, src_flat, 0)],
+        far_rows[jnp.where(src_is_near, 0, src_flat - cfg.n_near * cfg.hp_ratio)],
+    )  # [n, hp_ratio, base_elems]
+
+    dst_slot = state.block_table[jnp.maximum(region, 0)][:, None]  # [n, 1]
+    near_idx = jnp.where(do_move & (dst_slot < cfg.n_near), dst_slot, cfg.n_near)
+    far_idx = jnp.where(
+        do_move & (dst_slot >= cfg.n_near), dst_slot - cfg.n_near, cfg.n_far
+    )
+    dst_off = jnp.broadcast_to(off, pages.shape)
+    near_pool = state.near_pool.at[near_idx, dst_off].set(payload, mode="drop")
+    far_pool = state.far_pool.at[far_idx, dst_off].set(payload, mode="drop")
+
+    # ---- 3/5. mapping updates (row-disjoint scatters) --------------------
+    gpt = state.gpt.at[jnp.where(do_move, pages, cfg.n_logical)].set(
+        new_gpa, mode="drop"
+    )
+    rmap = state.rmap.at[jnp.where(do_move, old_gpa, cfg.n_gpa)].set(FREE, mode="drop")
+    rmap = rmap.at[jnp.where(do_move, new_gpa, cfg.n_gpa)].set(
+        safe_pages, mode="drop"
+    )
+    region_epoch = state.region_epoch.at[
+        jnp.where(ok, region, cfg.n_gpa_hp)
+    ].set(state.epoch, mode="drop")
+
+    moved_per_row = do_move.sum(axis=1)
+    moved = moved_per_row.sum()
+    stats = dict(state.stats)
+    stats["consolidated_pages"] = stats["consolidated_pages"] + moved.astype(jnp.int32)
+    stats["consolidation_calls"] = stats["consolidation_calls"] + (
+        n_sel > 0
+    ).sum().astype(jnp.int32)
+    stats["consolidation_enomem"] = stats["consolidation_enomem"] + (
+        (n_sel > 0) & ~ok
+    ).sum().astype(jnp.int32)
+    stats["copied_bytes"] = stats["copied_bytes"] + (
+        moved.astype(jnp.int32) * cfg.base_bytes
+    )
+    stats["tlb_shootdowns"] = stats["tlb_shootdowns"] + (
+        moved_per_row > 0
+    ).sum().astype(jnp.int32)
+    return dataclasses_replace(
+        state,
+        gpt=gpt,
+        rmap=rmap,
+        near_pool=near_pool,
+        far_pool=far_pool,
+        region_epoch=region_epoch,
+        stats=stats,
+    )
 
 
 def consolidate_pages(
@@ -33,89 +134,13 @@ def consolidate_pages(
     packed into slots 0..k-1 of the fresh region in the given order.
     ``hp_range`` optionally confines the fresh region to one guest's GPA
     segment (multi-tenant simulation).
-
-    Steps (mirroring Algorithm 1):
-      1. huge_region <- alloc(HPAGE_SIZE)             (fully free GPA region)
-      2. for each old_page i: copy payload old -> region[i]
-      3. set_pte_at: gpt[logical] = region*hp_ratio+i ; rmap updates
-      4. flush_tlb_mm_range: fused-translation caches are invalidated by
-         bumping stats['tlb_shootdowns'] (callers drop cached fused tables)
-      5. free(old_page): old gpa rmap entries -> FREE
     """
     pages = pages.astype(jnp.int32)
     if pages.shape != (cfg.hp_ratio,):
         raise ValueError(f"pages must be int32[{cfg.hp_ratio}]")
-
-    valid = (pages >= 0) & (pages < cfg.n_logical)
-    # a page already sitting in a fully-free... (cannot be: it's mapped)
+    # 1. huge_region <- alloc(HPAGE_SIZE)              (fully free GPA region)
     region = asp.alloc_free_huge_region(cfg, state, hp_range)
-    ok = region >= 0
-    n_sel = valid.sum()
-
-    safe_pages = jnp.where(valid, pages, 0)
-    old_gpa = state.gpt[safe_pages]
-    # never move a page onto itself (possible if caller passes a page that
-    # already lives in `region`, which alloc guarantees not to happen)
-    new_gpa = region * cfg.hp_ratio + jnp.arange(cfg.hp_ratio, dtype=jnp.int32)
-    do_move = valid & ok
-
-    # ---- 2. data copy (predicated dual-pool gather/scatter) -------------
-    src_slot = state.block_table[old_gpa // cfg.hp_ratio]
-    src_off = old_gpa % cfg.hp_ratio
-    rows = jnp.concatenate(
-        [
-            state.near_pool.reshape(-1, cfg.base_elems),
-            state.far_pool.reshape(-1, cfg.base_elems),
-        ],
-        axis=0,
-    )
-    payload = rows[jnp.where(do_move, src_slot * cfg.hp_ratio + src_off, 0)]
-
-    dst_slot = state.block_table[jnp.maximum(region, 0)]
-    dst_off = jnp.arange(cfg.hp_ratio, dtype=jnp.int32)
-    near_idx = jnp.where(do_move & (dst_slot < cfg.n_near), dst_slot, cfg.n_near)
-    far_idx = jnp.where(
-        do_move & (dst_slot >= cfg.n_near), dst_slot - cfg.n_near, cfg.n_far
-    )
-    near_pool = state.near_pool.at[near_idx, dst_off].set(payload, mode="drop")
-    far_pool = state.far_pool.at[far_idx, dst_off].set(payload, mode="drop")
-
-    # ---- 3/5. mapping updates -------------------------------------------
-    gpt = state.gpt.at[jnp.where(do_move, pages, cfg.n_logical)].set(
-        new_gpa, mode="drop"
-    )
-    rmap = state.rmap.at[jnp.where(do_move, old_gpa, cfg.n_gpa)].set(FREE, mode="drop")
-    rmap = rmap.at[jnp.where(do_move, new_gpa, cfg.n_gpa)].set(
-        safe_pages, mode="drop"
-    )
-    region_epoch = state.region_epoch.at[jnp.maximum(region, 0)].set(
-        jnp.where(ok, state.epoch, state.region_epoch[jnp.maximum(region, 0)])
-    )
-
-    moved = do_move.sum()
-    stats = dict(state.stats)
-    stats["consolidated_pages"] = stats["consolidated_pages"] + moved.astype(jnp.int32)
-    stats["consolidation_calls"] = stats["consolidation_calls"] + jnp.where(
-        n_sel > 0, 1, 0
-    ).astype(jnp.int32)
-    stats["consolidation_enomem"] = stats["consolidation_enomem"] + jnp.where(
-        (n_sel > 0) & ~ok, 1, 0
-    ).astype(jnp.int32)
-    stats["copied_bytes"] = stats["copied_bytes"] + (
-        moved.astype(jnp.int32) * cfg.base_bytes
-    )
-    stats["tlb_shootdowns"] = stats["tlb_shootdowns"] + jnp.where(moved > 0, 1, 0).astype(
-        jnp.int32
-    )
-    return dataclasses_replace(
-        state,
-        gpt=gpt,
-        rmap=rmap,
-        near_pool=near_pool,
-        far_pool=far_pool,
-        region_epoch=region_epoch,
-        stats=stats,
-    )
+    return _apply_consolidation(cfg, state, pages[None, :], region[None])
 
 
 def consolidate_batches(
@@ -128,4 +153,60 @@ def consolidate_batches(
         return consolidate_pages(cfg, st, row, hp_range), None
 
     state, _ = jax.lax.scan(body, state, batches)
+    return state
+
+
+# --------------------------------------------------------------------------
+# multi-tenant batched rounds (one Algorithm-1 invocation per guest at once)
+# --------------------------------------------------------------------------
+def consolidate_pages_multi(
+    cfg: GpacConfig,
+    state: TieredState,
+    pages: jax.Array,  # int32[n_guests, hp_ratio] logical ids, -1 padded
+    hp_per_guest: int,
+) -> TieredState:
+    """One *round*: every guest's Algorithm-1 invocation executed at once.
+
+    Requires the N guests' GPA segments to tile ``[0, n_gpa_hp)`` in
+    ``hp_per_guest`` strides (the :class:`repro.core.simulate.MultiGuest`
+    layout). Guest g's fresh region comes from its own segment and its pages
+    live in its own segment, so the per-guest invocations touch disjoint
+    mapping/pool regions and one vectorized gather/scatter reproduces N
+    sequential :func:`consolidate_pages` calls bit-for-bit.
+    """
+    pages = pages.astype(jnp.int32)
+    n_guests = pages.shape[0]
+    if pages.shape != (n_guests, cfg.hp_ratio):
+        raise ValueError(f"pages must be int32[n_guests, {cfg.hp_ratio}]")
+    if n_guests * hp_per_guest != cfg.n_gpa_hp:
+        raise ValueError("guest GPA segments must tile the GPA space")
+
+    # 1. per-guest fresh region: first fully-free huge page of each segment
+    free = (state.rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) == FREE).all(axis=1)
+    free_seg = free.reshape(n_guests, hp_per_guest)
+    hp_lo = jnp.arange(n_guests, dtype=jnp.int32) * hp_per_guest
+    region = jnp.where(
+        free_seg.any(axis=1),
+        hp_lo + jnp.argmax(free_seg, axis=1).astype(jnp.int32),
+        jnp.int32(-1),
+    )  # int32[n_guests]
+    return _apply_consolidation(cfg, state, pages, region)
+
+
+def consolidate_batches_multi(
+    cfg: GpacConfig,
+    state: TieredState,
+    batches: jax.Array,  # int32[n_guests, max_batches, hp_ratio]
+    hp_per_guest: int,
+) -> TieredState:
+    """lax.scan over consolidation *rounds*: round b executes every guest's
+    b-th Algorithm-1 invocation at once. Guests' invocation sequences are
+    independent (disjoint segments), so round-major order produces exactly the
+    guest-major sequential result while shortening the scan from
+    ``n_guests * max_batches`` steps to ``max_batches``."""
+
+    def body(st, round_pages):
+        return consolidate_pages_multi(cfg, st, round_pages, hp_per_guest), None
+
+    state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
     return state

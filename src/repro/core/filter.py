@@ -8,6 +8,10 @@ huge page it currently occupies has fewer than CL hot subpages. Freshly
 consolidated regions are exempt for ``reconsolidate_cooldown`` epochs to stop
 ping-ponging of partially filled regions (implementation detail the paper
 leaves open; documented in DESIGN.md).
+
+``select_batches`` serves one daemon; ``select_batches_per_guest`` is the
+batched multi-tenant form -- one row-wise top-k over the
+``[n_guests, logical_per_guest]`` score matrix instead of N full-space sorts.
 """
 from __future__ import annotations
 
@@ -57,12 +61,7 @@ def select_batches(
     (current-window count, history popcount).
     """
     cand = candidate_mask(cfg, state, hot, cl, allow)
-    # rank: hotter first; stable by page id for determinism
-    score = (
-        state.guest_counts.astype(jnp.int32) * 256
-        + telemetry._popcount_u8(state.ipt_hist).astype(jnp.int32)
-    )
-    score = jnp.where(cand, score, -1)
+    score = jnp.where(cand, _hotness_score(state), -1)
     k = max_batches * cfg.hp_ratio
     k = min(k, cfg.n_logical)
     _, top_ids = jax.lax.top_k(score, k)
@@ -74,3 +73,51 @@ def select_batches(
     batches = ids.reshape(max_batches, cfg.hp_ratio)
     counts = (batches >= 0).sum(axis=1).astype(jnp.int32)
     return batches, counts
+
+
+def _hotness_score(state: TieredState) -> jax.Array:
+    """Candidate ranking: hotter first; stable by page id for determinism
+    (current-window count dominates, history popcount breaks ties)."""
+    return (
+        state.guest_counts.astype(jnp.int32) * 256
+        + telemetry._popcount_u8(state.ipt_hist).astype(jnp.int32)
+    )
+
+
+def select_batches_per_guest(
+    cfg: GpacConfig,
+    state: TieredState,
+    hot: jax.Array,
+    max_batches: int,
+    cl: int | jax.Array | None,
+    n_guests: int,
+    logical_per_guest: int,
+) -> jax.Array:
+    """Batched :func:`select_batches` for N symmetric guests whose logical
+    segments tile ``[0, n_logical)``: one row-wise ``top_k`` over the
+    ``[n_guests, logical_per_guest]`` score matrix replaces ``n_guests``
+    full-space sorts (each O(n_logical)), so the filter's work no longer grows
+    quadratically with guest count.
+
+    Returns ``int32[n_guests, max_batches, hp_ratio]`` logical-id batches,
+    padded with -1 -- row ``g`` is exactly what ``select_batches(...,
+    allow=guest g's segment)`` would produce, because a guest's candidate
+    mask, score, and in-segment ordering are all unaffected by the other
+    guests' segments.
+    """
+    assert n_guests * logical_per_guest == cfg.n_logical
+    cand = candidate_mask(cfg, state, hot, cl)
+    score = jnp.where(cand, _hotness_score(state), -1)
+    per_guest = score.reshape(n_guests, logical_per_guest)
+    k = min(max_batches * cfg.hp_ratio, logical_per_guest)
+    vals, idx = jax.lax.top_k(per_guest, k)  # row-wise, ties -> lowest index
+    offs = (
+        jnp.arange(n_guests, dtype=jnp.int32)[:, None] * logical_per_guest
+    )
+    ids = jnp.where(vals >= 0, idx.astype(jnp.int32) + offs, -1)
+    pad = max_batches * cfg.hp_ratio - k
+    if pad:
+        ids = jnp.concatenate(
+            [ids, jnp.full((n_guests, pad), -1, jnp.int32)], axis=1
+        )
+    return ids.reshape(n_guests, max_batches, cfg.hp_ratio)

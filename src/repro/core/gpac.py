@@ -4,6 +4,11 @@
 the full simulation step the benchmarks drive: accesses -> (optional GPAC) ->
 host tier tick -> window roll. Host and guest layers only communicate through
 the address space itself -- there is no API between them (design goal 1).
+
+``run_windows`` is the scan-fused driver: the whole window loop runs as one
+device-side ``lax.scan`` with stacked metric snapshots, chunked by a
+``windows_per_step`` knob, so the host syncs once per chunk instead of once
+per window (see ``run_windows_reference`` for the seed per-window loop).
 """
 from __future__ import annotations
 
@@ -42,6 +47,39 @@ def gpac_maintenance(
 
 @partial(
     jax.jit,
+    static_argnames=(
+        "cfg", "backend", "max_batches", "cl", "n_guests",
+        "logical_per_guest", "hp_per_guest",
+    ),
+)
+def gpac_maintenance_batched(
+    cfg: GpacConfig,
+    state: TieredState,
+    backend: str,
+    max_batches: int,
+    cl: int | None,
+    n_guests: int,
+    logical_per_guest: int,
+    hp_per_guest: int,
+) -> TieredState:
+    """All N guest daemons' GPAC passes in one batched invocation.
+
+    The guests' logical and GPA segments are disjoint and tile their spaces,
+    so one hot-mask classification, one row-wise batched filter
+    (:func:`repro.core.filter.select_batches_per_guest`) and ``max_batches``
+    guest-wide consolidation rounds
+    (:func:`repro.core.consolidator.consolidate_batches_multi`) reproduce N
+    sequential :func:`gpac_maintenance` calls bit-for-bit -- with O(1) trace
+    cost and ~n_guests x less classification/sort work."""
+    hot = telemetry.hot_mask(cfg, state, backend)
+    batches = pfilter.select_batches_per_guest(
+        cfg, state, hot, max_batches, cl, n_guests, logical_per_guest
+    )
+    return consolidator.consolidate_batches_multi(cfg, state, batches, hp_per_guest)
+
+
+@partial(
+    jax.jit,
     static_argnames=("cfg", "policy", "backend", "use_gpac", "max_batches", "budget"),
 )
 def window_step(
@@ -63,14 +101,87 @@ def window_step(
     return telemetry.end_window(cfg, state)
 
 
+@partial(
+    jax.jit,
+    static_argnames=("cfg", "policy", "backend", "use_gpac", "max_batches", "budget"),
+)
+def _run_windows_chunk(
+    cfg: GpacConfig,
+    state: TieredState,
+    chunk: jax.Array,  # int32[n_windows, accesses_per_window]
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+) -> tuple[TieredState, dict]:
+    """Scan-fused window loop: one traced window step, metric snapshots
+    stacked on device (no per-window host sync)."""
+    from repro.core import metrics
+
+    def body(st, acc):
+        st = window_step(cfg, st, acc, policy, backend, use_gpac, max_batches, budget)
+        return st, metrics.device_snapshot(cfg, st)
+
+    return jax.lax.scan(body, state, chunk)
+
+
 def run_windows(
+    cfg: GpacConfig,
+    state: TieredState,
+    trace: jax.Array,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 8,
+    budget: int = 64,
+    windows_per_step: int = 0,
+) -> tuple[TieredState, list[dict]]:
+    """Drive ``window_step`` over a (n_windows, accesses_per_window) trace,
+    collecting per-window metrics.
+
+    The loop is a device-side ``lax.scan``; ``windows_per_step`` bounds how
+    many windows each jitted step fuses (0 = the whole trace in one step) and
+    the stacked metric series crosses to the host once per chunk. Pick a
+    ``windows_per_step`` that divides ``n_windows`` -- a shorter trailing
+    chunk has a different scan shape and pays one extra trace/compile per
+    fresh process. Bit-for-bit equivalent to :func:`run_windows_reference`
+    (the seed per-window loop).
+    """
+    import numpy as np
+
+    from repro.core import metrics
+
+    n_w = trace.shape[0]
+    if n_w == 0:
+        return state, []
+    wps = n_w if windows_per_step <= 0 else min(windows_per_step, n_w)
+    chunks = []
+    for s in range(0, n_w, wps):
+        state, ys = _run_windows_chunk(
+            cfg, state, jnp.asarray(trace[s : s + wps]),
+            policy, backend, use_gpac, max_batches, budget,
+        )
+        chunks.append(ys)
+    host = {k: np.concatenate([np.asarray(y[k]) for y in chunks]) for k in chunks[0]}
+    series = [
+        {
+            k: (float(v[w]) if k in metrics.FLOAT_METRICS else int(v[w]))
+            for k, v in host.items()
+        }
+        for w in range(n_w)
+    ]
+    return state, series
+
+
+def run_windows_reference(
     cfg: GpacConfig,
     state: TieredState,
     trace: jax.Array,
     **kw,
 ) -> tuple[TieredState, list[dict]]:
-    """Drive ``window_step`` over a (n_windows, accesses_per_window) trace,
-    collecting per-window metrics (python loop: benchmarks want the series)."""
+    """Original python window loop (one host sync per window): the
+    equivalence oracle for the scan-fused :func:`run_windows`."""
     from repro.core import metrics
 
     series = []

@@ -80,11 +80,16 @@ def modeled_access_time_ns(
     return (h * near_t + f * far_t) / jnp.maximum(h + f, 1)
 
 
+# one calibration for every figure (see modeled_throughput's docstring)
+COMPUTE_NS_PER_OP = 700.0
+MEM_ACCESSES_PER_OP = 1.0
+
+
 def modeled_throughput(
     state: TieredState,
     tier_pair: str = "dram_nvmm",
-    compute_ns_per_op: float = 700.0,
-    mem_accesses_per_op: float = 1.0,
+    compute_ns_per_op: float = COMPUTE_NS_PER_OP,
+    mem_accesses_per_op: float = MEM_ACCESSES_PER_OP,
     migration_ns: float = 0.0,
 ) -> jax.Array:
     """Ops/sec under a simple bottleneck model: op latency = fixed compute +
@@ -101,13 +106,39 @@ def modeled_throughput(
     return 1e9 / op_ns
 
 
+def throughput_from_hits(
+    nh: np.ndarray, fh: np.ndarray, tier_pair: str = "dram_nvmm"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side (numpy) per-window hit-rate and modeled-throughput series
+    from near/far hit counts -- the same calibration as
+    :func:`modeled_throughput`, shared by the multi-guest window drivers."""
+    near_ns, far_ns = (TIER_LATENCY_NS[t] for t in TIER_PAIRS[tier_pair])
+    tot = np.maximum(nh + fh, 1)
+    amat = (nh * near_ns + fh * far_ns) / tot
+    return nh / tot, 1e9 / (COMPUTE_NS_PER_OP + MEM_ACCESSES_PER_OP * amat)
+
+
+# snapshot keys that are float-valued; everything else is an int counter
+# (shared by snapshot() and the scan-fused drivers that host-convert series)
+FLOAT_METRICS = ("near_usage", "near_capacity_used", "hit_rate")
+
+
+def device_snapshot(cfg: GpacConfig, state: TieredState) -> dict:
+    """Device-side analogue of :func:`snapshot`: a dict of scalar arrays, safe
+    to emit from inside jit / ``lax.scan`` (the scan-fused window drivers
+    stack these per window and cross to the host once)."""
+    return dict(
+        epoch=state.epoch,
+        near_usage=near_usage(cfg, state),
+        near_capacity_used=near_capacity_used(cfg, state),
+        hit_rate=hit_rate(state),
+        **state.stats,
+    )
+
+
 def snapshot(cfg: GpacConfig, state: TieredState) -> dict:
     """Device->host pull of the metrics a benchmark window records."""
-    s = {k: np.asarray(v) for k, v in state.stats.items()}
-    return dict(
-        epoch=int(state.epoch),
-        near_usage=float(near_usage(cfg, state)),
-        near_capacity_used=float(near_capacity_used(cfg, state)),
-        hit_rate=float(hit_rate(state)),
-        **{k: int(v) for k, v in s.items()},
-    )
+    d = device_snapshot(cfg, state)
+    return {
+        k: (float(v) if k in FLOAT_METRICS else int(v)) for k, v in d.items()
+    }

@@ -6,6 +6,29 @@ host block space; each guest runs its *own* GPAC daemon confined to its own
 logical pages and GPA segment, while a single host tiering policy competes all
 guests' huge pages for the shared near tier. Per-VM metrics (near share, hit
 rate, modeled throughput) mirror Figs. 9, 10, 12.
+
+Batched engine architecture
+---------------------------
+The hot path is guest-vectorized and device-resident:
+
+* ``multi_guest_window`` translates and records *all* guests' accesses in one
+  batched ``asp.translate`` / ``asp.record_accesses`` call (guest-segmented
+  hit reductions are row sums over the ``[n_guests, k]`` access matrix), runs
+  all N GPAC daemons as one batched pass
+  (:func:`repro.core.gpac.gpac_maintenance_batched`: one hot-mask
+  classification, a row-wise per-guest filter, and ``max_batches`` guest-wide
+  consolidation rounds -- trace/compile cost is O(1) in ``n_guests`` instead
+  of O(n_guests) unrolled), and computes the per-guest near-share with one
+  reshape-segmented reduction.
+* ``run_multi_guest`` fuses the window loop into ``lax.scan`` over the window
+  axis with device-side stacked metric series; the host sees one transfer per
+  ``windows_per_step`` chunk (default: one transfer for the whole run) instead
+  of a blocking sync every window.
+
+``multi_guest_window_reference`` / ``run_multi_guest_reference`` preserve the
+original per-guest / per-window formulation; equivalence tests pin the engine
+bit-for-bit against them and ``benchmarks/bench_engine.py`` tracks the
+speedup.
 """
 from __future__ import annotations
 
@@ -41,6 +64,15 @@ class MultiGuest:
         lo, _ = self.logical_range(g)
         return jnp.where(local_ids >= 0, local_ids + lo, -1)
 
+    def localize_all(self, local_ids: jax.Array) -> jax.Array:
+        """Batched :meth:`localize`: ``int32[n_guests, k]`` guest-local ids ->
+        combined-space ids in one shot (-1 passthrough)."""
+        lo = (
+            jnp.arange(self.n_guests, dtype=local_ids.dtype)[:, None]
+            * self.logical_per_guest
+        )
+        return jnp.where(local_ids >= 0, local_ids + lo, -1)
+
 
 def make_multi_guest(
     n_guests: int,
@@ -71,12 +103,12 @@ def make_multi_guest(
     # if segments are tight; with slack we must place pages per guest.
     gpt = np.full((cfg.n_logical,), -1, np.int64)
     rmap = np.full((cfg.n_gpa,), -1, np.int64)
-    for g in range(n_guests):
-        lo, hi = mg.logical_range(g)
-        hp_lo, _ = mg.hp_range(g)
-        gpa = hp_lo * hp_ratio + np.arange(logical_per_guest)
-        gpt[lo:hi] = gpa
-        rmap[gpa] = np.arange(lo, hi)
+    gpa = (
+        np.arange(n_guests)[:, None] * (hp_per_guest * hp_ratio)
+        + np.arange(logical_per_guest)[None, :]
+    ).reshape(-1)
+    gpt[:] = gpa
+    rmap[gpa] = np.arange(cfg.n_logical)
     state = init_state(cfg)
     state = asp.dataclasses_replace(
         state,
@@ -84,6 +116,53 @@ def make_multi_guest(
         rmap=jnp.asarray(rmap, jnp.int32),
     )
     return mg, state
+
+
+# --------------------------------------------------------------------------
+# vectorized engine
+# --------------------------------------------------------------------------
+def _window_core(
+    mg: MultiGuest,
+    state: TieredState,
+    accesses: jax.Array,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    cl: int | None,
+) -> tuple[TieredState, dict]:
+    """Traceable body of one multi-guest window (shared by the jitted
+    single-window entry point and the scan-fused driver)."""
+    cfg = mg.cfg
+    n_g = mg.n_guests
+    ids = mg.localize_all(accesses)  # int32[n_guests, k] combined-space ids
+    # one batched translate over every guest's accesses; hit tiers resolve
+    # against the placement in effect when the access happened (PEBS-like)
+    slot, _, valid = asp.translate(cfg, state, ids)
+    near_hits = (valid & (slot < cfg.n_near)).sum(axis=1)
+    far_hits = (valid & (slot >= cfg.n_near)).sum(axis=1)
+    state = asp.record_accesses(cfg, state, ids.reshape(-1))
+    if use_gpac:
+        # all N guest daemons in one batched GPAC pass: one hot-mask
+        # classification, one row-wise per-guest filter, and max_batches
+        # guest-wide consolidation rounds. Guests' logical/GPA segments are
+        # disjoint, so this matches the sequential per-guest reference
+        # bit-for-bit with O(1) trace cost in n_guests.
+        state = gpac.gpac_maintenance_batched(
+            cfg, state, backend, max_batches, cl,
+            n_g, mg.logical_per_guest, mg.hp_per_guest,
+        )
+    state = tiering.tick(cfg, state, policy, budget=budget)
+
+    # guest hp segments tile [0, n_gpa_hp), so the per-guest near share is one
+    # reshape-segmented reduction instead of n_guests masked sums
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    near_blocks = (alloc & in_near).reshape(n_g, mg.hp_per_guest).sum(axis=1)
+    out = dict(near_hits=near_hits, far_hits=far_hits, near_blocks=near_blocks)
+    state = telemetry.end_window(cfg, state)
+    return state, out
 
 
 @partial(
@@ -101,16 +180,122 @@ def multi_guest_window(
     budget: int = 64,
     cl: int | None = None,
 ) -> tuple[TieredState, dict]:
-    """One telemetry window for all guests + one host tier tick.
+    """One telemetry window for all guests + one host tier tick (vectorized).
 
     Returns per-guest metrics computed *at access time* (hit tiers resolved
     against the placement in effect when the access happened, like PEBS).
+    Bit-for-bit equivalent to :func:`multi_guest_window_reference`.
     """
+    return _window_core(
+        mg, state, accesses, policy, backend, use_gpac, max_batches, budget, cl
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("mg", "policy", "backend", "use_gpac", "max_batches", "budget", "cl"),
+)
+def _run_window_chunk(
+    mg: MultiGuest,
+    state: TieredState,
+    chunk: jax.Array,  # int32[n_windows, n_guests, k]
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    cl: int | None,
+) -> tuple[TieredState, dict]:
+    """Scan-fused run over a chunk of windows; metric series stay stacked on
+    device until the caller pulls them."""
+
+    def body(st, acc):
+        return _window_core(
+            mg, st, acc, policy, backend, use_gpac, max_batches, budget, cl
+        )
+
+    return jax.lax.scan(body, state, chunk)
+
+
+def run_multi_guest(
+    mg: MultiGuest,
+    state: TieredState,
+    traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
+    tier_pair: str = "dram_nvmm",
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    cl: int | None = None,
+    windows_per_step: int = 0,
+) -> tuple[TieredState, dict]:
+    """Drive all windows; return the per-guest time series the at-scale
+    benchmarks plot (near blocks, hit rate, modeled throughput).
+
+    The window loop is a device-side ``lax.scan``; ``windows_per_step``
+    bounds how many windows each jitted step fuses (0 = the whole run in one
+    step). Metric series are transferred to the host once per chunk instead
+    of once per window. Pick a ``windows_per_step`` that divides
+    ``n_windows``: a shorter trailing chunk has a different scan shape and
+    pays one extra trace/compile per fresh process.
+    """
+    n_g, n_w, _ = traces.shape
+    if n_w == 0:
+        return state, dict(
+            near_blocks=np.zeros((0, n_g), np.int64),
+            hit_rate=np.zeros((0, n_g)),
+            throughput=np.zeros((0, n_g)),
+        )
+    by_window = np.ascontiguousarray(np.transpose(np.asarray(traces), (1, 0, 2)))
+    wps = n_w if windows_per_step <= 0 else min(windows_per_step, n_w)
+    outs = []
+    for s in range(0, n_w, wps):
+        state, out = _run_window_chunk(
+            mg, state, jnp.asarray(by_window[s : s + wps]),
+            policy, backend, use_gpac, max_batches, budget, cl,
+        )
+        outs.append(out)
+    nh = np.concatenate([np.asarray(o["near_hits"]) for o in outs]).astype(np.float64)
+    fh = np.concatenate([np.asarray(o["far_hits"]) for o in outs]).astype(np.float64)
+    near_blocks = np.concatenate(
+        [np.asarray(o["near_blocks"]) for o in outs]
+    ).astype(np.int64)
+    hit_rate, throughput = metrics.throughput_from_hits(nh, fh, tier_pair)
+    series = dict(
+        near_blocks=near_blocks, hit_rate=hit_rate, throughput=throughput
+    )
+    return state, series
+
+
+# --------------------------------------------------------------------------
+# seed-equivalent reference path (per-guest / per-window formulation)
+# --------------------------------------------------------------------------
+@partial(
+    jax.jit,
+    static_argnames=("mg", "policy", "backend", "use_gpac", "max_batches", "budget", "cl"),
+)
+def multi_guest_window_reference(
+    mg: MultiGuest,
+    state: TieredState,
+    accesses: jax.Array,  # int32[n_guests, k] guest-LOCAL page ids, -1 padded
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    cl: int | None = None,
+) -> tuple[TieredState, dict]:
+    """Original per-guest-loop window (the seed semantics): the equivalence
+    oracle for :func:`multi_guest_window` and the baseline that
+    ``benchmarks/bench_engine.py`` times the engine against. Its trace cost
+    is O(n_guests) -- every guest's translate/record/GPAC pass is unrolled."""
     cfg = mg.cfg
     n_g = mg.n_guests
     per_guest_near = []
     per_guest_far = []
     logical_idx = jnp.arange(cfg.n_logical, dtype=jnp.int32)
+    hp_idx = jnp.arange(cfg.n_gpa_hp)
     for g in range(n_g):
         ids = mg.localize(g, accesses[g])
         slot, _, valid = asp.translate(cfg, state, ids)
@@ -127,12 +312,12 @@ def multi_guest_window(
             )
     state = tiering.tick(cfg, state, policy, budget=budget)
 
-    alloc = allocated_hpm = allocated_hp_mask(cfg, state)
+    alloc = allocated_hp_mask(cfg, state)
     in_near = state.block_table < cfg.n_near
     near_share = []
     for g in range(n_g):
         hp_lo, hp_hi = mg.hp_range(g)
-        seg = (jnp.arange(cfg.n_gpa_hp) >= hp_lo) & (jnp.arange(cfg.n_gpa_hp) < hp_hi)
+        seg = (hp_idx >= hp_lo) & (hp_idx < hp_hi)
         near_share.append((seg & alloc & in_near).sum())
     out = dict(
         near_hits=jnp.stack(per_guest_near),
@@ -143,32 +328,29 @@ def multi_guest_window(
     return state, out
 
 
-def run_multi_guest(
+def run_multi_guest_reference(
     mg: MultiGuest,
     state: TieredState,
     traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
     tier_pair: str = "dram_nvmm",
     **kw,
 ) -> tuple[TieredState, dict]:
-    """Drive all windows; return the per-guest time series the at-scale
-    benchmarks plot (near blocks, hit rate, modeled throughput)."""
+    """Original per-window python driver (one host sync per window): the
+    equivalence oracle for :func:`run_multi_guest`."""
     n_g, n_w, _ = traces.shape
     series = dict(
         near_blocks=np.zeros((n_w, n_g), np.int64),
         hit_rate=np.zeros((n_w, n_g)),
         throughput=np.zeros((n_w, n_g)),
     )
-    near_ns, far_ns = (
-        metrics.TIER_LATENCY_NS[t] for t in metrics.TIER_PAIRS[tier_pair]
-    )
     for w in range(n_w):
-        state, out = multi_guest_window(mg, state, jnp.asarray(traces[:, w]), **kw)
+        state, out = multi_guest_window_reference(
+            mg, state, jnp.asarray(traces[:, w]), **kw
+        )
         nh = np.asarray(out["near_hits"], np.float64)
         fh = np.asarray(out["far_hits"], np.float64)
-        hit = nh / np.maximum(nh + fh, 1)
-        amat = (nh * near_ns + fh * far_ns) / np.maximum(nh + fh, 1)
+        hit, tput = metrics.throughput_from_hits(nh, fh, tier_pair)
         series["near_blocks"][w] = np.asarray(out["near_blocks"])
         series["hit_rate"][w] = hit
-        # same calibration as metrics.modeled_throughput (700 ns + 1 access)
-        series["throughput"][w] = 1e9 / (700.0 + 1.0 * amat)
+        series["throughput"][w] = tput
     return state, series

@@ -42,10 +42,10 @@ def end_window(cfg: GpacConfig, state: TieredState) -> TieredState:
 
 
 def _popcount_u8(x: jax.Array) -> jax.Array:
-    n = jnp.zeros(x.shape, jnp.int32)
-    for i in range(8):
-        n = n + ((x >> i) & 1).astype(jnp.int32)
-    return n
+    """Set bits per uint8 history word, as int32 (single hardware popcount
+    instead of an 8-step shift/mask loop -- this runs on every window in both
+    the IPT hot mask and the host block score)."""
+    return jax.lax.population_count(x).astype(jnp.int32)
 
 
 def hot_mask_ipt(cfg: GpacConfig, state: TieredState) -> jax.Array:
@@ -114,7 +114,11 @@ def hot_subpages_per_hp(cfg: GpacConfig, state: TieredState, hot: jax.Array) -> 
 
 def accessed_subpages_per_hp(cfg: GpacConfig, state: TieredState) -> jax.Array:
     """int32[n_gpa_hp]: accessed (count>0) base pages per huge page -- the
-    exact statistic of paper Fig. 2."""
+    exact statistic of paper Fig. 2. Dispatches through the same
+    ``hotness_scan.hot_count`` wrapper (Pallas on TPU) as
+    :func:`hot_subpages_per_hp`."""
+    from repro.kernels.hotness_scan import hot_count
+
     acc = state.guest_counts > 0
     acc_gpa = jnp.where(state.rmap >= 0, acc[jnp.maximum(state.rmap, 0)], False)
-    return acc_gpa.reshape(cfg.n_gpa_hp, cfg.hp_ratio).sum(axis=1).astype(jnp.int32)
+    return hot_count(acc_gpa, cfg.hp_ratio)
