@@ -1,14 +1,16 @@
-"""Engine perf benchmark: vectorized/scan-fused multi-tenant engine vs the
-seed per-guest/per-window reference path.
+"""Engine perf benchmark: the shared scan-fused engine driver vs the seed
+per-guest/per-window reference path.
 
-Times ``simulate.run_multi_guest`` (guest-batched windows, scan-fused window
-loop, chunked host transfer) against ``simulate.run_multi_guest_reference``
+Times ``simulate.run_multi_guest`` (now a shim over the unified
+``repro.core.engine.run``: guest-batched windows, scan-fused window loop,
+chunked host transfer) against ``simulate.run_multi_guest_reference``
 (unrolled per-guest ops, one host sync per window) across an
 (n_guests, n_logical, n_windows) grid. Trace generation and jit compilation
 are excluded (one warmup run per path, then best-of-``REPEATS`` wall clock).
 
 Writes ``BENCH_engine.json`` at the repo root (the perf-trajectory artifact
-CI archives) and ``experiments/benchmarks/bench_engine.json``.
+CI archives) and ``experiments/benchmarks/<NAME>.json`` (``NAME`` comes from
+the shared suite registry, ``benchmarks.registry``).
 """
 from __future__ import annotations
 
@@ -18,9 +20,12 @@ import time
 import jax
 import numpy as np
 
-from benchmarks import common
+from benchmarks import common, registry
 from repro.core import simulate
 from repro.data import traces as tr
+
+NAME = "bench_engine"
+assert NAME in registry.SUITES, "suite must be registered in benchmarks.registry"
 
 REPEATS = 3
 HP_RATIO = 32
@@ -82,6 +87,8 @@ def run() -> dict:
               f" speedup {case['speedup']:5.2f}x")
     at_scale = [c["speedup"] for c in cases if c["n_guests"] >= 8]
     payload = dict(
+        suite=NAME,
+        description=registry.describe(NAME),
         backend=jax.default_backend(),
         repeats=REPEATS,
         cases=cases,
@@ -91,7 +98,7 @@ def run() -> dict:
     )
     with open("BENCH_engine.json", "w") as f:
         json.dump(payload, f, indent=1, default=float)
-    return common.save("bench_engine", payload)
+    return common.save(NAME, payload)
 
 
 if __name__ == "__main__":

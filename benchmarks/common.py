@@ -13,12 +13,9 @@ import json
 import os
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import GpacConfig, gpac, init_state, metrics, start_all_far
-from repro.core import address_space as asp
-from repro.core import telemetry as tele
+from repro.core import GpacConfig, engine, init_state, metrics, start_all_far
 from repro.data import traces as tr
 
 OUT_DIR = os.path.join("experiments", "benchmarks")
@@ -63,31 +60,62 @@ def workload_trace(workload: str, n_windows: int = WINDOWS,
 def run_single_guest(workload: str, use_gpac: bool, policy: str = "memtierd",
                      near_fraction: float = 0.5, cl: int | None = None,
                      start_far: bool = True, seed: int = 0,
-                     n_windows: int = WINDOWS, tier_pair: str = "dram_nvmm"):
+                     n_windows: int = WINDOWS, tier_pair: str = "dram_nvmm",
+                     windows_per_step: int = 0):
     """Paper §5.2 setting: one guest, tiering active, optional GPAC.
 
-    Returns (final state snapshot, per-window series dict).
+    Runs on the shared scan-fused engine driver (``n_guests=1``): the whole
+    window loop is one device-side scan with the ``snapshot`` collector, and
+    metric series cross to the host once per ``windows_per_step`` chunk
+    (0 = once for the whole run) instead of once per window.
+
+    Returns (config, final state, per-window series dict).
     """
     cfg = guest_config(near_fraction, cl or scaled_cl(workload))
     state = init_state(cfg)
     if start_far:
         state = start_all_far(cfg, state)
+    if n_windows == 0:
+        return cfg, state, {k: [] for k in (
+            "near_usage", "near_capacity", "hit_rate", "tput",
+            "promoted", "demoted")}
     trace = workload_trace(workload, n_windows=n_windows, seed=seed)
-    series = dict(near_usage=[], near_capacity=[], hit_rate=[], tput=[],
-                  promoted=[], demoted=[])
-    for w in range(trace.shape[0]):
-        state = gpac.window_step(
-            cfg, state, jnp.asarray(trace[w]), policy=policy,
-            use_gpac=use_gpac, max_batches=16, budget=256)
-        series["near_usage"].append(float(metrics.near_usage(cfg, state)))
-        series["near_capacity"].append(
-            float(metrics.near_capacity_used(cfg, state)))
-        series["hit_rate"].append(float(metrics.hit_rate(state)))
-        series["tput"].append(
-            float(metrics.modeled_throughput(state, tier_pair)))
-        series["promoted"].append(int(state.stats["promoted_blocks"]))
-        series["demoted"].append(int(state.stats["demoted_blocks"]))
+    spec = engine.spec_from_config(cfg, workload=workload, seed=seed)
+    state, snap = engine.run(
+        spec, state, trace[None], policy=policy, use_gpac=use_gpac,
+        max_batches=16, budget=256, windows_per_step=windows_per_step,
+        collect=("snapshot",))
+    # modeled throughput from the cumulative hit counters, same calibration
+    # as metrics.modeled_throughput (the per-window loop used to pull it
+    # from the device one window at a time)
+    _, tput = metrics.throughput_from_hits(
+        snap["near_hits"].astype(np.float64),
+        snap["far_hits"].astype(np.float64), tier_pair)
+    series = dict(
+        near_usage=[float(x) for x in snap["near_usage"]],
+        near_capacity=[float(x) for x in snap["near_capacity_used"]],
+        hit_rate=[float(x) for x in snap["hit_rate"]],
+        tput=[float(x) for x in tput],
+        promoted=[int(x) for x in snap["promoted_blocks"]],
+        demoted=[int(x) for x in snap["demoted_blocks"]],
+    )
     return cfg, state, series
+
+
+def make_symmetric_engine(n_guests: int, logical_per_guest: int,
+                          near_fraction: float, workload: str = "redis",
+                          gpa_slack: float = 1.0, cl: int | None = None):
+    """N equal guests of one workload on the shared engine (the multi-guest
+    fig benchmarks' common geometry: per-guest seeds, benchmark base_elems,
+    CL scaled from the paper's per-workload values)."""
+    cl = cl or scaled_cl(workload)
+    guests = tuple(
+        engine.GuestSpec(n_logical=logical_per_guest, cl=cl,
+                         gpa_slack=gpa_slack, workload=workload, seed=g)
+        for g in range(n_guests))
+    host = engine.HostSpec(hp_ratio=HP_RATIO, near_fraction=near_fraction,
+                           base_elems=2, cl=cl, ipt_min_hits=1)
+    return engine.build(guests, host)
 
 
 def steady(xs: list, tail: int = 6) -> float:

@@ -5,35 +5,29 @@ consolidation means far fewer (dense) blocks carry the hot set.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
-from repro.core.simulate import make_multi_guest, run_multi_guest
-from repro.data import traces as tr
+from repro.core import engine
 
 N_GUESTS = 4
 LOGICAL_PER_GUEST = 8 * 1024
 
 
+def make_engine():
+    # near fraction sized so the CONSOLIDATED hot set fits (the paper's
+    # "DRAM space for actual hot huge pages") while the scattered
+    # baseline set (~3x larger) does not
+    return common.make_symmetric_engine(N_GUESTS, LOGICAL_PER_GUEST,
+                                        near_fraction=0.4)
+
+
 def run():
-    traces = np.stack([
-        tr.generate(tr.TraceSpec(
-            "redis", n_logical=LOGICAL_PER_GUEST, hp_ratio=common.HP_RATIO,
-            n_windows=24, accesses_per_window=8192, seed=g))
-        for g in range(N_GUESTS)])
+    spec, _ = make_engine()
+    traces = engine.guest_traces(spec, n_windows=24, accesses_per_window=8192)
     out = {}
     for use_gpac in (False, True):
-        # near fraction sized so the CONSOLIDATED hot set fits (the paper's
-        # "DRAM space for actual hot huge pages") while the scattered
-        # baseline set (~3x larger) does not
-        mg, state = make_multi_guest(
-            n_guests=N_GUESTS, logical_per_guest=LOGICAL_PER_GUEST,
-            hp_ratio=common.HP_RATIO, near_fraction=0.4,
-            base_elems=2, cl=common.scaled_cl("redis"), ipt_min_hits=1,
-                gpa_slack=1.0)
-        state, _ = run_multi_guest(mg, state, traces, policy="tpp",
-                                   use_gpac=use_gpac, budget=256,
-                                   cl=common.scaled_cl("redis"))
+        spec, state = make_engine()
+        state, _ = engine.run_series(spec, state, traces, policy="tpp",
+                                     use_gpac=use_gpac, budget=256)
         out["gpac" if use_gpac else "baseline"] = dict(
             promoted=int(state.stats["promoted_blocks"]),
             demoted=int(state.stats["demoted_blocks"]),

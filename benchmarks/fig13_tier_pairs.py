@@ -5,34 +5,29 @@ Paper: +6.3% (CXL) and +5.3% (HBM) average throughput with Memtierd+GPAC.
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
-from repro.core.simulate import make_multi_guest, run_multi_guest
-from repro.data import traces as tr
+from repro.core import engine
 
 N_GUESTS = 6
 LOGICAL_PER_GUEST = 8 * 1024
 
 
+def make_engine():
+    return common.make_symmetric_engine(N_GUESTS, LOGICAL_PER_GUEST,
+                                        near_fraction=0.3)
+
+
 def run(tier_pairs=("dram_cxl", "hbm_dram")):
-    traces = np.stack([
-        tr.generate(tr.TraceSpec(
-            "redis", n_logical=LOGICAL_PER_GUEST, hp_ratio=common.HP_RATIO,
-            n_windows=24, accesses_per_window=8192, seed=g))
-        for g in range(N_GUESTS)])
+    spec, _ = make_engine()
+    traces = engine.guest_traces(spec, n_windows=24, accesses_per_window=8192)
     out = {}
     for pair in tier_pairs:
         res = {}
         for use_gpac in (False, True):
-            mg, state = make_multi_guest(
-                n_guests=N_GUESTS, logical_per_guest=LOGICAL_PER_GUEST,
-                hp_ratio=common.HP_RATIO, near_fraction=0.3,
-                base_elems=2, cl=common.scaled_cl("redis"), ipt_min_hits=1,
-                gpa_slack=1.0)
-            _, series = run_multi_guest(
-                mg, state, traces, tier_pair=pair, policy="memtierd",
-                use_gpac=use_gpac, cl=common.scaled_cl("redis"))
+            spec, state = make_engine()
+            _, series = engine.run_series(
+                spec, state, traces, tier_pair=pair, policy="memtierd",
+                use_gpac=use_gpac)
             res["gpac" if use_gpac else "baseline"] = float(
                 series["throughput"][-6:].mean())
         res["delta"] = res["gpac"] / res["baseline"] - 1

@@ -5,37 +5,31 @@ Paper: big wins at 10:90 / 20:80 / 30:70, shrinking as near memory grows
 """
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common
-from repro.core.simulate import make_multi_guest, run_multi_guest
-from repro.data import traces as tr
+from repro.core import engine
 
 N_GUESTS = 6
 LOGICAL_PER_GUEST = 8 * 1024
 RATIOS = (0.1, 0.2, 0.3, 0.5, 0.7)
-# scan-fuse the window loop in chunks (see simulate.run_multi_guest)
+# scan-fuse the window loop in chunks (see repro.core.engine.run)
 WINDOWS_PER_STEP = 10
 
 
+def make_engine(near_fraction):
+    return common.make_symmetric_engine(N_GUESTS, LOGICAL_PER_GUEST,
+                                        near_fraction=near_fraction)
+
+
 def run():
-    traces = np.stack([
-        tr.generate(tr.TraceSpec(
-            "redis", n_logical=LOGICAL_PER_GUEST, hp_ratio=common.HP_RATIO,
-            n_windows=20, accesses_per_window=8192, seed=g))
-        for g in range(N_GUESTS)])
+    spec, _ = make_engine(RATIOS[0])
+    traces = engine.guest_traces(spec, n_windows=20, accesses_per_window=8192)
     out = {}
     for ratio in RATIOS:
         res = {}
         for use_gpac in (False, True):
-            mg, state = make_multi_guest(
-                n_guests=N_GUESTS, logical_per_guest=LOGICAL_PER_GUEST,
-                hp_ratio=common.HP_RATIO, near_fraction=ratio,
-                base_elems=2, cl=common.scaled_cl("redis"), ipt_min_hits=1,
-                gpa_slack=1.0)
-            _, series = run_multi_guest(
-                mg, state, traces, policy="memtierd", use_gpac=use_gpac,
-                cl=common.scaled_cl("redis"),
+            spec, state = make_engine(ratio)
+            _, series = engine.run_series(
+                spec, state, traces, policy="memtierd", use_gpac=use_gpac,
                 windows_per_step=WINDOWS_PER_STEP)
             res["gpac" if use_gpac else "baseline"] = float(
                 series["throughput"][-5:].mean())

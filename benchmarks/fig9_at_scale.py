@@ -12,35 +12,33 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common
-from repro.core.simulate import make_multi_guest, run_multi_guest
-from repro.data import traces as tr
+from repro.core import engine
 
 N_GUESTS = 6
 LOGICAL_PER_GUEST = 8 * 1024
 WINDOWS = 24
+ACCESSES = 8192
 # scan-fuse the window loop in chunks of this many windows (one device->host
-# metric transfer per chunk; see simulate.run_multi_guest)
+# metric transfer per chunk; see repro.core.engine.run)
 WINDOWS_PER_STEP = 12
 
 
+def make_engine():
+    return common.make_symmetric_engine(N_GUESTS, LOGICAL_PER_GUEST,
+                                        near_fraction=0.25)
+
+
 def run(policies=("memtierd", "tpp", "autonuma")):
-    traces = np.stack([
-        tr.generate(tr.TraceSpec(
-            "redis", n_logical=LOGICAL_PER_GUEST, hp_ratio=common.HP_RATIO,
-            n_windows=WINDOWS, accesses_per_window=8192, seed=g))
-        for g in range(N_GUESTS)])
+    spec, _ = make_engine()
+    traces = engine.guest_traces(spec, n_windows=WINDOWS,
+                                 accesses_per_window=ACCESSES)
     out = {}
     for policy in policies:
         res = {}
         for use_gpac in (False, True):
-            mg, state = make_multi_guest(
-                n_guests=N_GUESTS, logical_per_guest=LOGICAL_PER_GUEST,
-                hp_ratio=common.HP_RATIO, near_fraction=0.25,
-                base_elems=2, cl=common.scaled_cl("redis"), ipt_min_hits=1,
-                gpa_slack=1.0)
-            state, series = run_multi_guest(
-                mg, state, traces, policy=policy, use_gpac=use_gpac,
-                cl=common.scaled_cl("redis"),
+            spec, state = make_engine()
+            state, series = engine.run_series(
+                spec, state, traces, policy=policy, use_gpac=use_gpac,
                 windows_per_step=WINDOWS_PER_STEP)
             res["gpac" if use_gpac else "baseline"] = dict(
                 tput=series["throughput"][-6:].mean(axis=0).tolist(),

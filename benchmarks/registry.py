@@ -1,0 +1,41 @@
+"""The single registry of benchmark suites.
+
+One ordered table of ``name -> (one-line description)``; modules are imported
+lazily by :func:`load`. ``benchmarks.run`` drives the whole table (or a
+``--only`` subset) and ``--list`` prints it; individual modules (e.g.
+``bench_engine``) reference their own entry instead of hard-coding names, so
+the table never gets out of sync with the suite.
+"""
+from __future__ import annotations
+
+import importlib
+
+SUITES: dict[str, str] = {
+    "fig2_skew_cdf": "CDF of accessed subpages per huge page (paper Fig. 2)",
+    "table3_consolidation": "consolidation work per workload (paper Table 3)",
+    "fig6_heatmap": "access heatmap before/after consolidation (Fig. 6)",
+    "fig7_memdist": "near/far memory distribution over time (Fig. 7)",
+    "fig8_dram_reduction": "near-memory reduction per workload (Fig. 8)",
+    "fig9_at_scale": "multi-tenant at-scale throughput (Figs. 9/10/12)",
+    "fig11_migration": "promotion/demotion traffic under TPP (Fig. 11)",
+    "fig13_tier_pairs": "GPAC across DRAM/CXL and HBM/DRAM pairs (Figs. 13-14)",
+    "fig15_cl_sensitivity": "Consolidation-Limit sweep (Fig. 15)",
+    "fig16_scatter_hist": "hot-subpage histograms (Fig. 16)",
+    "fig17_pressure": "benefit vs near:far capacity ratio (Fig. 17)",
+    "bench_engine": "engine vs seed-reference wall-clock (BENCH_engine.json)",
+}
+
+
+def names() -> tuple[str, ...]:
+    return tuple(SUITES)
+
+
+def describe(name: str) -> str:
+    return SUITES[name]
+
+
+def load(name: str):
+    """Import and return the suite module (must expose ``run()``)."""
+    if name not in SUITES:
+        raise KeyError(f"unknown benchmark {name!r}; have {sorted(SUITES)}")
+    return importlib.import_module(f"benchmarks.{name}")

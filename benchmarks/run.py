@@ -1,7 +1,9 @@
 """Run the full benchmark suite (one module per paper table/figure) and print
 a summary against the paper's claims. ``python -m benchmarks.run``.
 
-``--only <name>`` (repeatable) runs a subset -- e.g. CI's fast lane is
+The suite table lives in :mod:`benchmarks.registry` (one registry shared by
+this driver and the individual modules). ``--list`` enumerates the registered
+suites; ``--only <name>`` (repeatable) runs a subset -- e.g. CI's fast lane is
 ``--only bench_engine --only fig2_skew_cdf``; ``--json <path>`` dumps a
 machine-readable summary (per-benchmark results, timings, failures) so CI can
 archive it alongside ``BENCH_engine.json``."""
@@ -12,52 +14,32 @@ import json
 import sys
 import time
 
-from benchmarks import (
-    bench_engine,
-    fig2_skew_cdf,
-    fig6_heatmap,
-    fig7_memdist,
-    fig8_dram_reduction,
-    fig9_at_scale,
-    fig11_migration,
-    fig13_tier_pairs,
-    fig15_cl_sensitivity,
-    fig16_scatter_hist,
-    fig17_pressure,
-    table3_consolidation,
-)
-
-SUITE = [
-    ("fig2_skew_cdf", fig2_skew_cdf),
-    ("table3_consolidation", table3_consolidation),
-    ("fig6_heatmap", fig6_heatmap),
-    ("fig7_memdist", fig7_memdist),
-    ("fig8_dram_reduction", fig8_dram_reduction),
-    ("fig9_at_scale", fig9_at_scale),
-    ("fig11_migration", fig11_migration),
-    ("fig13_tier_pairs", fig13_tier_pairs),
-    ("fig15_cl_sensitivity", fig15_cl_sensitivity),
-    ("fig16_scatter_hist", fig16_scatter_hist),
-    ("fig17_pressure", fig17_pressure),
-    ("bench_engine", bench_engine),
-]
+from benchmarks import registry
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
+        "--list", action="store_true",
+        help="list registered benchmark suites and exit")
+    ap.add_argument(
         "--only", action="append", metavar="NAME",
-        help="run only this benchmark (repeatable); see SUITE for names")
+        help="run only this benchmark (repeatable); see --list for names")
     ap.add_argument(
         "--json", metavar="PATH",
         help="write a machine-readable run summary to PATH")
     args = ap.parse_args(argv)
+    if args.list:
+        width = max(map(len, registry.names()))
+        for name in registry.names():
+            print(f"{name:<{width}}  {registry.describe(name)}")
+        return 0
     if args.only:
-        known = {name for name, _ in SUITE}
-        unknown = sorted(set(args.only) - known)
+        unknown = sorted(set(args.only) - set(registry.names()))
         if unknown:
-            ap.error(f"unknown benchmark(s) {unknown}; have {sorted(known)}")
-    suite = [(n, m) for n, m in SUITE if not args.only or n in args.only]
+            ap.error(
+                f"unknown benchmark(s) {unknown}; have {sorted(registry.names())}")
+    suite = [n for n in registry.names() if not args.only or n in args.only]
     if args.json:
         try:  # fail before the suite runs, not minutes after -- append mode
             open(args.json, "a").close()  # checks writability w/o truncating
@@ -68,11 +50,11 @@ def main(argv=None):
     timings = {}
     t_total = time.time()
     failures = []
-    for name, mod in suite:
+    for name in suite:
         t0 = time.time()
         print(f"\n=== {name} " + "=" * (60 - len(name)))
         try:
-            results[name] = mod.run()
+            results[name] = registry.load(name).run()
             timings[name] = time.time() - t0
             print(f"    ok ({timings[name]:.1f}s)")
         except Exception as e:  # noqa: BLE001
@@ -126,7 +108,7 @@ def main(argv=None):
                     timings_s=timings,
                     failures=dict(failures),
                     total_s=total_s,
-                    ran=[n for n, _ in suite],
+                    ran=suite,
                 ),
                 f, indent=1, default=float,
             )

@@ -13,9 +13,15 @@ from repro.core.types import (  # noqa: F401
 from repro.core import (  # noqa: F401
     address_space,
     consolidator,
+    engine,
     filter,
     gpac,
     metrics,
     telemetry,
     tiering,
+)
+from repro.core.engine import (  # noqa: F401
+    EngineSpec,
+    GuestSpec,
+    HostSpec,
 )

@@ -13,9 +13,10 @@ general (mixed-tier, predicated) reference path used under jit on any backend.
 The copy gathers straight out of whichever pool holds each source page
 (zero-copy consolidation: a batch touches only ``hp_ratio`` rows, never a
 materialized [near_pool; far_pool] concatenation), and
-``consolidate_pages_multi`` / ``consolidate_batches_multi`` execute one
+``consolidate_pages_ragged`` / ``consolidate_batches_ragged`` execute one
 Algorithm-1 invocation *per guest* at once for the batched multi-tenant
-engine (guests' GPA segments are disjoint, so rounds vectorize exactly).
+engine, driven by the engine's segment-offset tables so guests may be
+asymmetric (guests' GPA segments are disjoint, so rounds vectorize exactly).
 Both entry points share ``_apply_consolidation`` -- the single-guest call is
 the n=1 row of the batched one.
 """
@@ -159,45 +160,47 @@ def consolidate_batches(
 # --------------------------------------------------------------------------
 # multi-tenant batched rounds (one Algorithm-1 invocation per guest at once)
 # --------------------------------------------------------------------------
-def consolidate_pages_multi(
-    cfg: GpacConfig,
+def _alloc_regions_ragged(
+    cfg: GpacConfig, state: TieredState, hp_pad_idx: jax.Array
+) -> jax.Array:
+    """Per-guest fresh region: the first fully-free huge page of each guest's
+    GPA segment, found through the padded segment table ``hp_pad_idx``
+    (``int32[n_guests, max_hp]``, -1 past each segment). -1 = -ENOMEM."""
+    free = (state.rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) == FREE).all(axis=1)
+    fp = (hp_pad_idx >= 0) & free[jnp.maximum(hp_pad_idx, 0)]
+    first = jnp.argmax(fp, axis=1)
+    region = jnp.take_along_axis(hp_pad_idx, first[:, None], axis=1)[:, 0]
+    return jnp.where(fp.any(axis=1), region, jnp.int32(-1))
+
+
+def consolidate_pages_ragged(
+    spec,  # repro.core.engine.EngineSpec
     state: TieredState,
     pages: jax.Array,  # int32[n_guests, hp_ratio] logical ids, -1 padded
-    hp_per_guest: int,
 ) -> TieredState:
     """One *round*: every guest's Algorithm-1 invocation executed at once.
 
-    Requires the N guests' GPA segments to tile ``[0, n_gpa_hp)`` in
-    ``hp_per_guest`` strides (the :class:`repro.core.simulate.MultiGuest`
-    layout). Guest g's fresh region comes from its own segment and its pages
-    live in its own segment, so the per-guest invocations touch disjoint
-    mapping/pool regions and one vectorized gather/scatter reproduces N
-    sequential :func:`consolidate_pages` calls bit-for-bit.
+    Guests may be ragged; their GPA segments (the spec's offset tables) are
+    disjoint and tile ``[0, n_gpa_hp)``. Guest g's fresh region comes from
+    its own segment and its pages live in its own segment, so the per-guest
+    invocations touch disjoint mapping/pool regions and one vectorized
+    gather/scatter reproduces N sequential :func:`consolidate_pages` calls
+    bit-for-bit.
     """
+    cfg = spec.cfg
     pages = pages.astype(jnp.int32)
-    n_guests = pages.shape[0]
-    if pages.shape != (n_guests, cfg.hp_ratio):
-        raise ValueError(f"pages must be int32[n_guests, {cfg.hp_ratio}]")
-    if n_guests * hp_per_guest != cfg.n_gpa_hp:
-        raise ValueError("guest GPA segments must tile the GPA space")
-
-    # 1. per-guest fresh region: first fully-free huge page of each segment
-    free = (state.rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) == FREE).all(axis=1)
-    free_seg = free.reshape(n_guests, hp_per_guest)
-    hp_lo = jnp.arange(n_guests, dtype=jnp.int32) * hp_per_guest
-    region = jnp.where(
-        free_seg.any(axis=1),
-        hp_lo + jnp.argmax(free_seg, axis=1).astype(jnp.int32),
-        jnp.int32(-1),
-    )  # int32[n_guests]
+    if pages.shape != (spec.n_guests, cfg.hp_ratio):
+        raise ValueError(
+            f"pages must be int32[{spec.n_guests}, {cfg.hp_ratio}], got {pages.shape}"
+        )
+    region = _alloc_regions_ragged(cfg, state, jnp.asarray(spec.hp_pad_index()))
     return _apply_consolidation(cfg, state, pages, region)
 
 
-def consolidate_batches_multi(
-    cfg: GpacConfig,
+def consolidate_batches_ragged(
+    spec,
     state: TieredState,
     batches: jax.Array,  # int32[n_guests, max_batches, hp_ratio]
-    hp_per_guest: int,
 ) -> TieredState:
     """lax.scan over consolidation *rounds*: round b executes every guest's
     b-th Algorithm-1 invocation at once. Guests' invocation sequences are
@@ -206,7 +209,49 @@ def consolidate_batches_multi(
     ``n_guests * max_batches`` steps to ``max_batches``."""
 
     def body(st, round_pages):
-        return consolidate_pages_multi(cfg, st, round_pages, hp_per_guest), None
+        return consolidate_pages_ragged(spec, st, round_pages), None
+
+    state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
+    return state
+
+
+def _uniform_hp_pad(cfg: GpacConfig, n_guests: int, hp_per_guest: int):
+    """Segment table for N equal GPA segments (the old ``*_multi`` contract:
+    only the GPA space must tile; the logical space is unconstrained)."""
+    import numpy as np
+
+    if n_guests * hp_per_guest != cfg.n_gpa_hp:
+        raise ValueError("guest GPA segments must tile the GPA space")
+    return jnp.asarray(
+        np.arange(cfg.n_gpa_hp, dtype=np.int32).reshape(n_guests, hp_per_guest)
+    )
+
+
+def consolidate_pages_multi(
+    cfg: GpacConfig,
+    state: TieredState,
+    pages: jax.Array,  # int32[n_guests, hp_ratio]
+    hp_per_guest: int,
+) -> TieredState:
+    """Deprecated symmetric wrapper: one round over N equal GPA segments."""
+    hp_pad = _uniform_hp_pad(cfg, pages.shape[0], hp_per_guest)
+    region = _alloc_regions_ragged(cfg, state, hp_pad)
+    return _apply_consolidation(cfg, state, pages.astype(jnp.int32), region)
+
+
+def consolidate_batches_multi(
+    cfg: GpacConfig,
+    state: TieredState,
+    batches: jax.Array,  # int32[n_guests, max_batches, hp_ratio]
+    hp_per_guest: int,
+) -> TieredState:
+    """Deprecated symmetric wrapper: scanned rounds over N equal GPA
+    segments."""
+    hp_pad = _uniform_hp_pad(cfg, batches.shape[0], hp_per_guest)
+
+    def body(st, round_pages):
+        region = _alloc_regions_ragged(cfg, st, hp_pad)
+        return _apply_consolidation(cfg, st, round_pages.astype(jnp.int32), region), None
 
     state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
     return state

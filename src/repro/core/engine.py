@@ -1,0 +1,665 @@
+"""Unified simulation engine: ragged multi-tenant guests on one shared driver.
+
+This module is the single entry point for every paper-figure simulation,
+single- or multi-guest (DESIGN.md §7). It replaces the old symmetric-only
+``simulate.MultiGuest`` surface with explicit geometry specs:
+
+* :class:`GuestSpec` -- one guest's shape: ``n_logical`` base pages, an
+  optional per-guest Consolidation Limit, GPA slack, and the trace
+  workload/seed the helpers use to synthesize its accesses.
+* :class:`HostSpec` -- the shared host: huge-page ratio, near-tier sizing,
+  telemetry/policy knobs that fill the combined :class:`GpacConfig`.
+* :class:`EngineSpec` -- the compiled-in geometry: the combined config plus
+  **segment-offset tables** mapping each guest to its logical and GPA huge
+  page ranges. Guests may be *ragged* (distinct sizes, slacks and CLs);
+  nothing assumes the uniform tiling the old reshape-based reductions needed.
+
+On top of the geometry sits **one** scan-fused driver, :func:`run`: the
+window loop of the old ``gpac.run_windows`` and ``simulate.run_multi_guest``
+(both now thin deprecation shims over this function) runs as a device-side
+``lax.scan`` chunked by ``windows_per_step``, with one host transfer per
+chunk. Per-window measurement is pluggable: on-device **metric collectors**
+registered via :func:`register_collector` run inside the scan and their
+stacked outputs cross to the host once per chunk.
+
+Equivalence: :func:`run_reference` preserves the sequential per-guest /
+per-window formulation (guest g's GPAC daemon confined to its own segment
+via ``allow``/``hp_range``); tests pin the ragged engine bit-for-bit against
+it across every registered policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import address_space as asp
+from repro.core import gpac, metrics, telemetry, tiering
+from repro.core.types import GpacConfig, TieredState, allocated_hp_mask, init_state
+
+
+# --------------------------------------------------------------------------
+# geometry specs
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class GuestSpec:
+    """One guest's geometry and trace identity.
+
+    ``cl=None`` inherits the host default (``GpacConfig.cl``); a value gives
+    this guest its own Consolidation Limit (paper §4.3.1 -- Table 3 tunes CL
+    per workload, so heterogeneous tenants need per-guest CLs).
+    ``gpa_slack`` is the extra GPA huge-page headroom beyond the minimum
+    ``ceil(n_logical / hp_ratio)`` (the paper's far tier is much larger than
+    the guests, so consolidation never starves for free regions).
+    """
+
+    n_logical: int
+    cl: int | None = None
+    gpa_slack: float = 0.25
+    workload: str = "redis"
+    seed: int = 0
+
+    def hp_need(self, hp_ratio: int) -> int:
+        return -(-self.n_logical // hp_ratio)
+
+    def hp_size(self, hp_ratio: int) -> int:
+        need = self.hp_need(hp_ratio)
+        return need + max(2, int(need * self.gpa_slack))
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    """Shared host geometry + default policy knobs for the combined config.
+
+    ``near_fraction`` sizes the near tier as a fraction of the guests' total
+    *needed* huge pages (the paper's DRAM:NVMM ratio knob, Fig. 17);
+    ``n_near`` overrides it with an explicit block count.
+    """
+
+    hp_ratio: int = 512
+    near_fraction: float = 0.5
+    n_near: int = 0
+    base_elems: int = 8
+    cl: int = 64
+    hot_threshold: int = 1
+    ipt_windows: int = 8
+    ipt_min_hits: int = 1
+    reconsolidate_cooldown: int = 2
+    dtype: Any = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """Static engine geometry: combined config + per-guest segment offsets.
+
+    ``logical_offsets`` / ``hp_offsets`` are cumulative: guest ``g`` owns
+    logical pages ``[logical_offsets[g], logical_offsets[g+1])`` and GPA huge
+    pages ``[hp_offsets[g], hp_offsets[g+1])``. Segments are disjoint and
+    tile their spaces, which is what lets N per-guest GPAC daemons run as one
+    batched pass bit-for-bit (DESIGN.md §7). Hashable, so it jits as a static
+    argument; the padded index tables below are numpy constants baked in at
+    trace time.
+    """
+
+    cfg: GpacConfig
+    guests: tuple[GuestSpec, ...]
+    logical_offsets: tuple[int, ...]  # len n_guests+1
+    hp_offsets: tuple[int, ...]  # len n_guests+1
+
+    @property
+    def n_guests(self) -> int:
+        return len(self.guests)
+
+    def logical_range(self, g: int) -> tuple[int, int]:
+        return self.logical_offsets[g], self.logical_offsets[g + 1]
+
+    def hp_range(self, g: int) -> tuple[int, int]:
+        return self.hp_offsets[g], self.hp_offsets[g + 1]
+
+    def guest_cl(self, g: int) -> int:
+        cl = self.guests[g].cl
+        return self.cfg.cl if cl is None else cl
+
+    @property
+    def max_logical(self) -> int:
+        return max(hi - lo for lo, hi in zip(self.logical_offsets, self.logical_offsets[1:]))
+
+    @property
+    def max_hp(self) -> int:
+        return max(hi - lo for lo, hi in zip(self.hp_offsets, self.hp_offsets[1:]))
+
+    # ---- segment-offset tables (numpy: trace-time constants) ------------
+    def logical_pad_index(self) -> np.ndarray:
+        """int32[n_guests, max_logical]: row g = guest g's global logical ids,
+        -1 padded past its segment (the ragged replacement for the old
+        ``score.reshape(n_guests, logical_per_guest)``)."""
+        out = np.full((self.n_guests, self.max_logical), -1, np.int32)
+        for g in range(self.n_guests):
+            lo, hi = self.logical_range(g)
+            out[g, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        return out
+
+    def hp_pad_index(self) -> np.ndarray:
+        """int32[n_guests, max_hp]: row g = guest g's global GPA huge-page
+        ids, -1 padded."""
+        out = np.full((self.n_guests, self.max_hp), -1, np.int32)
+        for g in range(self.n_guests):
+            lo, hi = self.hp_range(g)
+            out[g, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        return out
+
+    def cl_per_logical(self) -> np.ndarray:
+        """int32[n_logical]: the effective CL of the guest owning each
+        logical page (lets one global candidate mask honour per-guest CLs)."""
+        out = np.empty((self.cfg.n_logical,), np.int32)
+        for g in range(self.n_guests):
+            lo, hi = self.logical_range(g)
+            out[lo:hi] = self.guest_cl(g)
+        return out
+
+    def localize(self, local_ids: jax.Array) -> jax.Array:
+        """Guest-local page ids ``int32[n_guests, k]`` -> combined-space ids
+        (-1 padding passes through), via the per-guest segment offsets."""
+        lo = jnp.asarray(
+            np.asarray(self.logical_offsets[:-1], np.int32)
+        )[:, None]
+        return jnp.where(local_ids >= 0, local_ids + lo, -1)
+
+    def canonical(self) -> "EngineSpec":
+        """The spec with trace-identity fields (workload, seed) normalized
+        away. Those fields never enter traced computation, but as part of the
+        static jit key they would force a full recompile per seed/workload
+        sweep -- the drivers dispatch on this canonical form instead."""
+        guests = tuple(
+            dataclasses.replace(g, workload="", seed=0) for g in self.guests
+        )
+        return dataclasses.replace(self, guests=guests)
+
+
+# --------------------------------------------------------------------------
+# construction
+# --------------------------------------------------------------------------
+def build(
+    guests: tuple[GuestSpec, ...] | list,
+    host: HostSpec = HostSpec(),
+) -> tuple[EngineSpec, TieredState]:
+    """Build N (possibly ragged) guests over one shared host space.
+
+    Returns the static :class:`EngineSpec` and the initial state: guest g's
+    logical pages are identity-placed at the start of its own GPA segment
+    (same layout the old ``make_multi_guest`` produced for symmetric guests).
+    """
+    guests = tuple(
+        GuestSpec(n_logical=g) if isinstance(g, int) else g for g in guests
+    )
+    if not guests:
+        raise ValueError("need at least one GuestSpec")
+    hp_sizes = [g.hp_size(host.hp_ratio) for g in guests]
+    logical_offsets = tuple(np.cumsum([0] + [g.n_logical for g in guests]).tolist())
+    hp_offsets = tuple(np.cumsum([0] + hp_sizes).tolist())
+    n_hp = hp_offsets[-1]
+    total_need = sum(g.hp_need(host.hp_ratio) for g in guests)
+    n_near = host.n_near or max(1, int(host.near_fraction * total_need))
+    cfg = GpacConfig(
+        n_logical=logical_offsets[-1],
+        hp_ratio=host.hp_ratio,
+        n_gpa_hp=n_hp,
+        n_near=min(n_near, n_hp - 1),
+        base_elems=host.base_elems,
+        cl=host.cl,
+        hot_threshold=host.hot_threshold,
+        ipt_windows=host.ipt_windows,
+        ipt_min_hits=host.ipt_min_hits,
+        reconsolidate_cooldown=host.reconsolidate_cooldown,
+        dtype=host.dtype,
+    )
+    spec = EngineSpec(cfg, guests, logical_offsets, hp_offsets)
+    return spec, init_engine_state(spec)
+
+
+def init_engine_state(spec: EngineSpec) -> TieredState:
+    """Identity-map each guest's logical pages into its own GPA segment."""
+    cfg = spec.cfg
+    gpt = np.full((cfg.n_logical,), -1, np.int64)
+    rmap = np.full((cfg.n_gpa,), -1, np.int64)
+    for g, guest in enumerate(spec.guests):
+        lo, hi = spec.logical_range(g)
+        hp_lo, _ = spec.hp_range(g)
+        gpa = hp_lo * cfg.hp_ratio + np.arange(guest.n_logical)
+        gpt[lo:hi] = gpa
+        rmap[gpa] = np.arange(lo, hi)
+    state = init_state(cfg)
+    return asp.dataclasses_replace(
+        state,
+        gpt=jnp.asarray(gpt, jnp.int32),
+        rmap=jnp.asarray(rmap, jnp.int32),
+    )
+
+
+def spec_from_config(
+    cfg: GpacConfig, workload: str = "redis", seed: int = 0
+) -> EngineSpec:
+    """Single-guest spec spanning an existing config's whole space (the
+    ``n_guests=1`` port of the old ``gpac.window_step`` callers)."""
+    guest = GuestSpec(
+        n_logical=cfg.n_logical, cl=cfg.cl, workload=workload, seed=seed
+    )
+    return EngineSpec(cfg, (guest,), (0, cfg.n_logical), (0, cfg.n_gpa_hp))
+
+
+def symmetric_spec(
+    cfg: GpacConfig, n_guests: int, cl: int | None = None
+) -> EngineSpec:
+    """Spec for N equal guests tiling an existing combined config (backs the
+    deprecated ``MultiGuest``-era entry points)."""
+    if cfg.n_logical % n_guests or cfg.n_gpa_hp % n_guests:
+        raise ValueError(
+            f"symmetric_spec: n_logical={cfg.n_logical} / n_gpa_hp="
+            f"{cfg.n_gpa_hp} not divisible by n_guests={n_guests}"
+        )
+    lpg = cfg.n_logical // n_guests
+    hpg = cfg.n_gpa_hp // n_guests
+    guests = tuple(GuestSpec(n_logical=lpg, cl=cl) for _ in range(n_guests))
+    return EngineSpec(
+        cfg,
+        guests,
+        tuple(range(0, cfg.n_logical + 1, lpg)),
+        tuple(range(0, cfg.n_gpa_hp + 1, hpg)),
+    )
+
+
+# --------------------------------------------------------------------------
+# trace helpers
+# --------------------------------------------------------------------------
+def pack_traces(per_guest: list[np.ndarray]) -> np.ndarray:
+    """Stack ragged per-guest traces ``[n_windows, k_g]`` into one padded
+    ``int32[n_guests, n_windows, k_max]`` array (-1 padding -- the engine
+    treats negative ids as no-ops end to end)."""
+    n_w = {t.shape[0] for t in per_guest}
+    if len(n_w) != 1:
+        raise ValueError(f"guests disagree on n_windows: {sorted(n_w)}")
+    k = max(t.shape[1] for t in per_guest)
+    out = np.full((len(per_guest), n_w.pop(), k), -1, np.int32)
+    for g, t in enumerate(per_guest):
+        out[g, :, : t.shape[1]] = t
+    return out
+
+
+def guest_traces(
+    spec: EngineSpec,
+    n_windows: int,
+    accesses_per_window: int,
+) -> np.ndarray:
+    """Synthesize each guest's trace from its :class:`GuestSpec`
+    workload/seed and pack them (``repro.data.traces`` generators)."""
+    from repro.data import traces as tr
+
+    return pack_traces([
+        tr.generate(tr.TraceSpec(
+            g.workload, n_logical=g.n_logical, hp_ratio=spec.cfg.hp_ratio,
+            n_windows=n_windows, accesses_per_window=accesses_per_window,
+            seed=g.seed))
+        for g in spec.guests
+    ])
+
+
+# --------------------------------------------------------------------------
+# metric collector registry (on-device, runs inside the scan)
+# --------------------------------------------------------------------------
+_COLLECTORS: dict[str, Callable] = {}
+
+
+def register_collector(name: str, fn: Callable | None = None):
+    """Register an on-device metric collector ``fn(spec, state, window) ->
+    dict[str, jax.Array]``; usable as ``@register_collector("name")``.
+
+    ``window`` carries access-time values (``near_hits``/``far_hits`` per
+    guest, resolved against the placement in effect when the access happened,
+    like PEBS); ``state`` is the post-window state. Outputs are stacked along
+    the window axis on device and cross to the host once per chunk.
+    """
+    if fn is None:
+        return lambda f: register_collector(name, f)
+    if name in _COLLECTORS:
+        raise ValueError(f"metric collector {name!r} already registered")
+    _COLLECTORS[name] = fn
+    return fn
+
+
+def get_collector(name: str) -> Callable:
+    try:
+        return _COLLECTORS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown metric collector {name!r} (have {collectors()})"
+        ) from None
+
+
+def collectors() -> tuple[str, ...]:
+    return tuple(_COLLECTORS)
+
+
+@register_collector("hits")
+def _collect_hits(spec: EngineSpec, state: TieredState, window: dict) -> dict:
+    """Per-guest near/far hit counts for this window (access-time tiers)."""
+    return dict(near_hits=window["near_hits"], far_hits=window["far_hits"])
+
+
+@register_collector("near_blocks")
+def _collect_near_blocks(spec, state, window) -> dict:
+    """Per-guest allocated blocks currently in the near tier: one padded
+    segment gather-reduce (ragged replacement for the old uniform
+    ``reshape(n_guests, hp_per_guest)`` sum)."""
+    cfg = spec.cfg
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    hp_pad = jnp.asarray(spec.hp_pad_index())
+    seg = (hp_pad >= 0) & (alloc & in_near)[jnp.maximum(hp_pad, 0)]
+    return dict(near_blocks=seg.sum(axis=1))
+
+
+@register_collector("snapshot")
+def _collect_snapshot(spec, state, window) -> dict:
+    """Host-space scalar metrics (``metrics.device_snapshot``): near usage,
+    cumulative hit rate, and every running stats counter.
+
+    Not composable with the ``hits`` collector: both emit ``near_hits`` /
+    ``far_hits`` (cumulative host-wide here, per-guest per-window there) and
+    the driver rejects colliding keys rather than silently overwrite. The
+    key names are pinned by the ``gpac.run_windows`` shim's bit-for-bit
+    contract with ``metrics.snapshot``; register a custom collector with
+    prefixed names to combine both views.
+    """
+    return metrics.device_snapshot(spec.cfg, state)
+
+
+# --------------------------------------------------------------------------
+# the one shared driver
+# --------------------------------------------------------------------------
+def _window(
+    spec: EngineSpec,
+    state: TieredState,
+    accesses: jax.Array,  # int32[n_guests, k] guest-local ids, -1 padded
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    """Traceable body of one engine window: batched translate/record over all
+    guests, one ragged batched GPAC pass, one host tier tick, window roll,
+    then the requested collectors."""
+    cfg = spec.cfg
+    ids = spec.localize(accesses)
+    slot, _, valid = asp.translate(cfg, state, ids)
+    window = dict(
+        near_hits=(valid & (slot < cfg.n_near)).sum(axis=1),
+        far_hits=(valid & (slot >= cfg.n_near)).sum(axis=1),
+    )
+    state = asp.record_accesses(cfg, state, ids.reshape(-1))
+    if use_gpac:
+        # all N guest daemons in one batched pass over the segment-offset
+        # tables; disjoint segments make this bit-equal to N sequential
+        # per-guest gpac_maintenance calls (see run_reference)
+        state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
+    state = tiering.tick(cfg, state, policy, budget=budget)
+    state = telemetry.end_window(cfg, state)
+    out = {}
+    for name in collect:
+        emitted = get_collector(name)(spec, state, window)
+        clash = set(emitted) & set(out)
+        if clash:
+            raise ValueError(
+                f"collector {name!r} emits keys {sorted(clash)} already "
+                f"produced by an earlier collector in {collect}"
+            )
+        out.update(emitted)
+    return state, out
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "policy", "backend", "use_gpac", "max_batches", "budget", "collect",
+    ),
+)
+def _step_impl(
+    spec: EngineSpec,
+    state: TieredState,
+    accesses: jax.Array,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    return _window(
+        spec, state, accesses, policy, backend, use_gpac, max_batches, budget, collect
+    )
+
+
+def step(
+    spec: EngineSpec,
+    state: TieredState,
+    accesses: jax.Array,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    collect: tuple[str, ...] = ("hits", "near_blocks"),
+) -> tuple[TieredState, dict]:
+    """One engine window (jitted single-window entry point)."""
+    return _step_impl(
+        spec.canonical(), state, accesses, policy, backend, use_gpac,
+        max_batches, budget, tuple(collect),
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "policy", "backend", "use_gpac", "max_batches", "budget", "collect",
+    ),
+)
+def _run_chunk(
+    spec: EngineSpec,
+    state: TieredState,
+    chunk: jax.Array,  # int32[n_windows, n_guests, k]
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    def body(st, acc):
+        return _window(
+            spec, st, acc, policy, backend, use_gpac, max_batches, budget, collect
+        )
+
+    return jax.lax.scan(body, state, chunk)
+
+
+def run(
+    spec: EngineSpec,
+    state: TieredState,
+    traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
+    *,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    windows_per_step: int = 0,
+    collect: tuple[str, ...] = ("hits", "near_blocks"),
+) -> tuple[TieredState, dict]:
+    """Drive every window through the scan-fused engine.
+
+    The window loop is a device-side ``lax.scan``; ``windows_per_step``
+    bounds how many windows each jitted step fuses (0 = the whole run in one
+    step) and the stacked collector series cross to the host **once per
+    chunk**. Pick a ``windows_per_step`` that divides ``n_windows``: a
+    shorter trailing chunk has a different scan shape and pays one extra
+    trace/compile per fresh process.
+
+    Returns ``(state, series)`` where ``series[k]`` is a host numpy array of
+    shape ``[n_windows, ...]`` per collector output; empty dict when the
+    trace has no windows.
+    """
+    traces = np.asarray(traces)
+    if traces.ndim != 3 or traces.shape[0] != spec.n_guests:
+        raise ValueError(
+            f"traces must be [n_guests={spec.n_guests}, n_windows, k], "
+            f"got {traces.shape}"
+        )
+    collect = tuple(collect)
+    for name in collect:
+        get_collector(name)  # fail fast on unknown collectors
+    spec = spec.canonical()  # don't recompile across seed/workload sweeps
+    n_w = traces.shape[1]
+    if n_w == 0:
+        return state, {}
+    by_window = np.ascontiguousarray(np.transpose(traces, (1, 0, 2)))
+    wps = n_w if windows_per_step <= 0 else min(windows_per_step, n_w)
+    chunks = []
+    for s in range(0, n_w, wps):
+        state, out = _run_chunk(
+            spec, state, jnp.asarray(by_window[s : s + wps]),
+            policy, backend, use_gpac, max_batches, budget, collect,
+        )
+        chunks.append(out)
+    series = {
+        k: np.concatenate([np.asarray(c[k]) for c in chunks]) for k in chunks[0]
+    }
+    return state, series
+
+
+def run_series(
+    spec: EngineSpec,
+    state: TieredState,
+    traces: np.ndarray,
+    tier_pair: str = "dram_nvmm",
+    **kw,
+) -> tuple[TieredState, dict]:
+    """:func:`run` + the per-VM time series the at-scale figures plot
+    (near blocks, per-window hit rate, modeled throughput)."""
+    n_g = spec.n_guests
+    traces = np.asarray(traces)
+    if traces.ndim == 3 and traces.shape[1] == 0:
+        return state, dict(
+            near_blocks=np.zeros((0, n_g), np.int64),
+            hit_rate=np.zeros((0, n_g)),
+            throughput=np.zeros((0, n_g)),
+        )
+    state, out = run(spec, state, traces, collect=("hits", "near_blocks"), **kw)
+    nh = out["near_hits"].astype(np.float64)
+    fh = out["far_hits"].astype(np.float64)
+    hit_rate, throughput = metrics.throughput_from_hits(nh, fh, tier_pair)
+    return state, dict(
+        near_blocks=out["near_blocks"].astype(np.int64),
+        hit_rate=hit_rate,
+        throughput=throughput,
+    )
+
+
+# --------------------------------------------------------------------------
+# sequential per-guest reference (the ragged equivalence oracle)
+# --------------------------------------------------------------------------
+def step_reference(
+    spec: EngineSpec,
+    state: TieredState,
+    accesses: jax.Array,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+) -> tuple[TieredState, dict]:
+    """One window in the sequential formulation: each guest translates,
+    records and runs its own GPAC daemon (confined via ``allow``/``hp_range``
+    and its own CL) one after another. O(n_guests) trace cost -- kept only as
+    the equivalence oracle for :func:`step` / :func:`run`."""
+    return _step_reference_impl(
+        spec.canonical(), state, accesses, policy, backend, use_gpac,
+        max_batches, budget,
+    )
+
+
+@partial(
+    jax.jit,
+    static_argnames=("spec", "policy", "backend", "use_gpac", "max_batches", "budget"),
+)
+def _step_reference_impl(
+    spec: EngineSpec,
+    state: TieredState,
+    accesses: jax.Array,  # int32[n_guests, k] guest-local ids, -1 padded
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+) -> tuple[TieredState, dict]:
+    cfg = spec.cfg
+    near_hits, far_hits = [], []
+    logical_idx = jnp.arange(cfg.n_logical, dtype=jnp.int32)
+    hp_idx = jnp.arange(cfg.n_gpa_hp)
+    for g in range(spec.n_guests):
+        lo, _ = spec.logical_range(g)
+        ids = jnp.where(accesses[g] >= 0, accesses[g] + lo, -1)
+        slot, _, valid = asp.translate(cfg, state, ids)
+        near_hits.append(jnp.where(valid & (slot < cfg.n_near), 1, 0).sum())
+        far_hits.append(jnp.where(valid & (slot >= cfg.n_near), 1, 0).sum())
+        state = asp.record_accesses(cfg, state, ids)
+    if use_gpac:
+        for g in range(spec.n_guests):
+            lo, hi = spec.logical_range(g)
+            allow = (logical_idx >= lo) & (logical_idx < hi)
+            state = gpac.gpac_maintenance(
+                cfg, state, backend, max_batches, spec.guest_cl(g),
+                allow=allow, hp_range=spec.hp_range(g),
+            )
+    state = tiering.tick(cfg, state, policy, budget=budget)
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    near_blocks = []
+    for g in range(spec.n_guests):
+        hp_lo, hp_hi = spec.hp_range(g)
+        seg = (hp_idx >= hp_lo) & (hp_idx < hp_hi)
+        near_blocks.append((seg & alloc & in_near).sum())
+    out = dict(
+        near_hits=jnp.stack(near_hits),
+        far_hits=jnp.stack(far_hits),
+        near_blocks=jnp.stack(near_blocks),
+    )
+    state = telemetry.end_window(cfg, state)
+    return state, out
+
+
+def run_reference(
+    spec: EngineSpec,
+    state: TieredState,
+    traces: np.ndarray,
+    **kw,
+) -> tuple[TieredState, dict]:
+    """Per-window python driver over :func:`step_reference` (one host sync
+    per window): the equivalence oracle for :func:`run` with the default
+    ``("hits", "near_blocks")`` collectors."""
+    traces = np.asarray(traces)
+    n_g, n_w, _ = traces.shape
+    series = dict(
+        near_hits=np.zeros((n_w, n_g), np.int32),
+        far_hits=np.zeros((n_w, n_g), np.int32),
+        near_blocks=np.zeros((n_w, n_g), np.int32),
+    )
+    for w in range(n_w):
+        state, out = step_reference(spec, state, jnp.asarray(traces[:, w]), **kw)
+        for k in series:
+            series[k][w] = np.asarray(out[k])
+    return state, series

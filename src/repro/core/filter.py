@@ -9,9 +9,12 @@ consolidated regions are exempt for ``reconsolidate_cooldown`` epochs to stop
 ping-ponging of partially filled regions (implementation detail the paper
 leaves open; documented in DESIGN.md).
 
-``select_batches`` serves one daemon; ``select_batches_per_guest`` is the
-batched multi-tenant form -- one row-wise top-k over the
-``[n_guests, logical_per_guest]`` score matrix instead of N full-space sorts.
+``select_batches`` serves one daemon; ``select_batches_ragged`` is the
+batched multi-tenant form -- one row-wise top-k over the padded
+``[n_guests, max_logical]`` score matrix built from the engine's
+segment-offset tables (guests may have distinct sizes and CLs) instead of N
+full-space sorts. ``select_batches_per_guest`` is the deprecated symmetric
+wrapper kept for the old ``MultiGuest`` entry points.
 """
 from __future__ import annotations
 
@@ -84,40 +87,57 @@ def _hotness_score(state: TieredState) -> jax.Array:
     )
 
 
+def select_batches_ragged(
+    spec,  # repro.core.engine.EngineSpec
+    state: TieredState,
+    hot: jax.Array,
+    max_batches: int,
+) -> jax.Array:
+    """Batched :func:`select_batches` for N **ragged** guests: one row-wise
+    ``top_k`` over the padded ``[n_guests, max_logical]`` score matrix built
+    from the spec's segment-offset tables replaces ``n_guests`` full-space
+    sorts (each O(n_logical)), so the filter's work no longer grows
+    quadratically with guest count -- and guests may have distinct sizes and
+    per-guest Consolidation Limits.
+
+    Returns ``int32[n_guests, max_batches, hp_ratio]`` logical-id batches,
+    padded with -1 -- row ``g`` is exactly what ``select_batches(...,
+    cl=guest g's CL, allow=guest g's segment)`` would produce, because a
+    guest's candidate mask, score, and in-segment ordering are all unaffected
+    by the other guests' segments, and row-wise ``top_k`` tie-breaking by
+    column index preserves the global id order inside each segment.
+    """
+    cfg = spec.cfg
+    cand = candidate_mask(cfg, state, hot, jnp.asarray(spec.cl_per_logical()))
+    score = jnp.where(cand, _hotness_score(state), -1)
+    pad_idx = jnp.asarray(spec.logical_pad_index())  # [n_guests, max_logical]
+    mat = jnp.where(pad_idx >= 0, score[jnp.maximum(pad_idx, 0)], -1)
+    k = min(max_batches * cfg.hp_ratio, mat.shape[1])
+    vals, col = jax.lax.top_k(mat, k)  # row-wise, ties -> lowest column
+    ids = jnp.where(vals >= 0, jnp.take_along_axis(pad_idx, col, axis=1), -1)
+    pad = max_batches * cfg.hp_ratio - k
+    if pad:
+        ids = jnp.concatenate(
+            [ids, jnp.full((spec.n_guests, pad), -1, jnp.int32)], axis=1
+        )
+    return ids.reshape(spec.n_guests, max_batches, cfg.hp_ratio)
+
+
 def select_batches_per_guest(
     cfg: GpacConfig,
     state: TieredState,
     hot: jax.Array,
     max_batches: int,
-    cl: int | jax.Array | None,
+    cl: int | None,
     n_guests: int,
     logical_per_guest: int,
 ) -> jax.Array:
-    """Batched :func:`select_batches` for N symmetric guests whose logical
-    segments tile ``[0, n_logical)``: one row-wise ``top_k`` over the
-    ``[n_guests, logical_per_guest]`` score matrix replaces ``n_guests``
-    full-space sorts (each O(n_logical)), so the filter's work no longer grows
-    quadratically with guest count.
+    """Deprecated symmetric wrapper over :func:`select_batches_ragged` (kept
+    for the old ``MultiGuest`` entry points)."""
+    from repro.core.engine import symmetric_spec
 
-    Returns ``int32[n_guests, max_batches, hp_ratio]`` logical-id batches,
-    padded with -1 -- row ``g`` is exactly what ``select_batches(...,
-    allow=guest g's segment)`` would produce, because a guest's candidate
-    mask, score, and in-segment ordering are all unaffected by the other
-    guests' segments.
-    """
-    assert n_guests * logical_per_guest == cfg.n_logical
-    cand = candidate_mask(cfg, state, hot, cl)
-    score = jnp.where(cand, _hotness_score(state), -1)
-    per_guest = score.reshape(n_guests, logical_per_guest)
-    k = min(max_batches * cfg.hp_ratio, logical_per_guest)
-    vals, idx = jax.lax.top_k(per_guest, k)  # row-wise, ties -> lowest index
-    offs = (
-        jnp.arange(n_guests, dtype=jnp.int32)[:, None] * logical_per_guest
+    if n_guests * logical_per_guest != cfg.n_logical:
+        raise ValueError("guest logical segments must tile the logical space")
+    return select_batches_ragged(
+        symmetric_spec(cfg, n_guests, cl=cl), state, hot, max_batches
     )
-    ids = jnp.where(vals >= 0, idx.astype(jnp.int32) + offs, -1)
-    pad = max_batches * cfg.hp_ratio - k
-    if pad:
-        ids = jnp.concatenate(
-            [ids, jnp.full((n_guests, pad), -1, jnp.int32)], axis=1
-        )
-    return ids.reshape(n_guests, max_batches, cfg.hp_ratio)

@@ -1,18 +1,18 @@
 """GPAC orchestration (paper Fig. 5): telemetry -> filter -> consolidate.
 
-``gpac_maintenance`` is the guest daemon's periodic pass; ``window_step`` is
-the full simulation step the benchmarks drive: accesses -> (optional GPAC) ->
-host tier tick -> window roll. Host and guest layers only communicate through
-the address space itself -- there is no API between them (design goal 1).
+``gpac_maintenance`` is one guest daemon's periodic pass; ``window_step`` is
+the full single-guest simulation step: accesses -> (optional GPAC) -> host
+tier tick -> window roll. Host and guest layers only communicate through the
+address space itself -- there is no API between them (design goal 1).
 
-``run_windows`` is the scan-fused driver: the whole window loop runs as one
-device-side ``lax.scan`` with stacked metric snapshots, chunked by a
-``windows_per_step`` knob, so the host syncs once per chunk instead of once
-per window (see ``run_windows_reference`` for the seed per-window loop).
+``gpac_maintenance_ragged`` runs N (possibly asymmetric) guest daemons as one
+batched pass over an :class:`repro.core.engine.EngineSpec`'s segment-offset
+tables. ``run_windows`` is now a thin shim over the one shared scan-fused
+driver, :func:`repro.core.engine.run` (``run_windows_reference`` keeps the
+seed per-window loop as the equivalence oracle).
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
@@ -45,13 +45,29 @@ def gpac_maintenance(
     return consolidator.consolidate_batches(cfg, state, batches, hp_range)
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "cfg", "backend", "max_batches", "cl", "n_guests",
-        "logical_per_guest", "hp_per_guest",
-    ),
-)
+@partial(jax.jit, static_argnames=("spec", "backend", "max_batches"))
+def gpac_maintenance_ragged(
+    spec,  # repro.core.engine.EngineSpec
+    state: TieredState,
+    backend: str = "ipt",
+    max_batches: int = 8,
+) -> TieredState:
+    """All N guest daemons' GPAC passes in one batched invocation, for
+    ragged/asymmetric guests.
+
+    The guests' logical and GPA segments (the spec's segment-offset tables)
+    are disjoint and tile their spaces, so one hot-mask classification, one
+    row-wise batched filter (:func:`repro.core.filter.select_batches_ragged`,
+    honouring per-guest CLs) and ``max_batches`` guest-wide consolidation
+    rounds (:func:`repro.core.consolidator.consolidate_batches_ragged`)
+    reproduce N sequential :func:`gpac_maintenance` calls bit-for-bit -- with
+    O(1) trace cost and ~n_guests x less classification/sort work."""
+    cfg = spec.cfg
+    hot = telemetry.hot_mask(cfg, state, backend)
+    batches = pfilter.select_batches_ragged(spec, state, hot, max_batches)
+    return consolidator.consolidate_batches_ragged(spec, state, batches)
+
+
 def gpac_maintenance_batched(
     cfg: GpacConfig,
     state: TieredState,
@@ -62,20 +78,15 @@ def gpac_maintenance_batched(
     logical_per_guest: int,
     hp_per_guest: int,
 ) -> TieredState:
-    """All N guest daemons' GPAC passes in one batched invocation.
+    """Deprecated symmetric wrapper over :func:`gpac_maintenance_ragged`."""
+    from repro.core.engine import symmetric_spec
 
-    The guests' logical and GPA segments are disjoint and tile their spaces,
-    so one hot-mask classification, one row-wise batched filter
-    (:func:`repro.core.filter.select_batches_per_guest`) and ``max_batches``
-    guest-wide consolidation rounds
-    (:func:`repro.core.consolidator.consolidate_batches_multi`) reproduce N
-    sequential :func:`gpac_maintenance` calls bit-for-bit -- with O(1) trace
-    cost and ~n_guests x less classification/sort work."""
-    hot = telemetry.hot_mask(cfg, state, backend)
-    batches = pfilter.select_batches_per_guest(
-        cfg, state, hot, max_batches, cl, n_guests, logical_per_guest
-    )
-    return consolidator.consolidate_batches_multi(cfg, state, batches, hp_per_guest)
+    if n_guests * logical_per_guest != cfg.n_logical:
+        raise ValueError("guest logical segments must tile the logical space")
+    if n_guests * hp_per_guest != cfg.n_gpa_hp:
+        raise ValueError("guest GPA segments must tile the GPA space")
+    spec = symmetric_spec(cfg, n_guests, cl=cl)
+    return gpac_maintenance_ragged(spec, state, backend, max_batches)
 
 
 @partial(
@@ -101,31 +112,6 @@ def window_step(
     return telemetry.end_window(cfg, state)
 
 
-@partial(
-    jax.jit,
-    static_argnames=("cfg", "policy", "backend", "use_gpac", "max_batches", "budget"),
-)
-def _run_windows_chunk(
-    cfg: GpacConfig,
-    state: TieredState,
-    chunk: jax.Array,  # int32[n_windows, accesses_per_window]
-    policy: str,
-    backend: str,
-    use_gpac: bool,
-    max_batches: int,
-    budget: int,
-) -> tuple[TieredState, dict]:
-    """Scan-fused window loop: one traced window step, metric snapshots
-    stacked on device (no per-window host sync)."""
-    from repro.core import metrics
-
-    def body(st, acc):
-        st = window_step(cfg, st, acc, policy, backend, use_gpac, max_batches, budget)
-        return st, metrics.device_snapshot(cfg, st)
-
-    return jax.lax.scan(body, state, chunk)
-
-
 def run_windows(
     cfg: GpacConfig,
     state: TieredState,
@@ -137,33 +123,30 @@ def run_windows(
     budget: int = 64,
     windows_per_step: int = 0,
 ) -> tuple[TieredState, list[dict]]:
-    """Drive ``window_step`` over a (n_windows, accesses_per_window) trace,
-    collecting per-window metrics.
+    """Drive a (n_windows, accesses_per_window) single-guest trace on the
+    shared scan-fused engine driver, collecting per-window metric snapshots.
 
-    The loop is a device-side ``lax.scan``; ``windows_per_step`` bounds how
-    many windows each jitted step fuses (0 = the whole trace in one step) and
-    the stacked metric series crosses to the host once per chunk. Pick a
-    ``windows_per_step`` that divides ``n_windows`` -- a shorter trailing
-    chunk has a different scan shape and pays one extra trace/compile per
-    fresh process. Bit-for-bit equivalent to :func:`run_windows_reference`
-    (the seed per-window loop).
+    Deprecation shim: new code should call :func:`repro.core.engine.run`
+    directly (``spec = engine.spec_from_config(cfg)``; the ``snapshot``
+    collector reproduces this function's series). Semantics and chunking
+    (``windows_per_step``, one host transfer per chunk) are the engine's;
+    bit-for-bit equivalent to :func:`run_windows_reference` (the seed
+    per-window loop).
     """
     import numpy as np
 
-    from repro.core import metrics
+    from repro.core import engine, metrics
 
+    trace = np.asarray(trace)
     n_w = trace.shape[0]
     if n_w == 0:
         return state, []
-    wps = n_w if windows_per_step <= 0 else min(windows_per_step, n_w)
-    chunks = []
-    for s in range(0, n_w, wps):
-        state, ys = _run_windows_chunk(
-            cfg, state, jnp.asarray(trace[s : s + wps]),
-            policy, backend, use_gpac, max_batches, budget,
-        )
-        chunks.append(ys)
-    host = {k: np.concatenate([np.asarray(y[k]) for y in chunks]) for k in chunks[0]}
+    state, host = engine.run(
+        engine.spec_from_config(cfg), state, trace[None],
+        policy=policy, backend=backend, use_gpac=use_gpac,
+        max_batches=max_batches, budget=budget,
+        windows_per_step=windows_per_step, collect=("snapshot",),
+    )
     series = [
         {
             k: (float(v[w]) if k in metrics.FLOAT_METRICS else int(v[w]))

@@ -1,34 +1,18 @@
-"""Trace-driven guest/host simulator (drives every paper-figure benchmark).
+"""Deprecated multi-tenant simulation surface (symmetric guests only).
 
-Single-guest runs use :func:`repro.core.gpac.window_step` directly. This module
-adds the **multi-tenant** setting of paper §5.3: N symmetric guests share one
-host block space; each guest runs its *own* GPAC daemon confined to its own
-logical pages and GPA segment, while a single host tiering policy competes all
-guests' huge pages for the shared near tier. Per-VM metrics (near share, hit
-rate, modeled throughput) mirror Figs. 9, 10, 12.
+This module predates :mod:`repro.core.engine`, which is the one simulation
+API now: :class:`repro.core.engine.GuestSpec` geometry supports ragged /
+asymmetric guests (distinct sizes, slacks, per-guest CLs) and
+:func:`repro.core.engine.run` is the single scan-fused driver every
+benchmark uses. Everything here is either
 
-Batched engine architecture
----------------------------
-The hot path is guest-vectorized and device-resident:
-
-* ``multi_guest_window`` translates and records *all* guests' accesses in one
-  batched ``asp.translate`` / ``asp.record_accesses`` call (guest-segmented
-  hit reductions are row sums over the ``[n_guests, k]`` access matrix), runs
-  all N GPAC daemons as one batched pass
-  (:func:`repro.core.gpac.gpac_maintenance_batched`: one hot-mask
-  classification, a row-wise per-guest filter, and ``max_batches`` guest-wide
-  consolidation rounds -- trace/compile cost is O(1) in ``n_guests`` instead
-  of O(n_guests) unrolled), and computes the per-guest near-share with one
-  reshape-segmented reduction.
-* ``run_multi_guest`` fuses the window loop into ``lax.scan`` over the window
-  axis with device-side stacked metric series; the host sees one transfer per
-  ``windows_per_step`` chunk (default: one transfer for the whole run) instead
-  of a blocking sync every window.
-
-``multi_guest_window_reference`` / ``run_multi_guest_reference`` preserve the
-original per-guest / per-window formulation; equivalence tests pin the engine
-bit-for-bit against them and ``benchmarks/bench_engine.py`` tracks the
-speedup.
+* a **thin deprecation shim** (:class:`MultiGuest`, :func:`make_multi_guest`,
+  :func:`multi_guest_window`, :func:`run_multi_guest`) that maps the old
+  symmetric-tiling API onto an :class:`~repro.core.engine.EngineSpec`, or
+* the **seed-equivalent reference path** (``multi_guest_window_reference`` /
+  ``run_multi_guest_reference``): the original per-guest / per-window
+  formulation that equivalence tests pin the engine against bit-for-bit and
+  that ``benchmarks/bench_engine.py`` times the engine's speedup over.
 """
 from __future__ import annotations
 
@@ -40,13 +24,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import address_space as asp
-from repro.core import gpac, metrics, telemetry, tiering
-from repro.core.types import GpacConfig, TieredState, allocated_hp_mask, init_state
+from repro.core import engine, gpac, metrics, telemetry, tiering
+from repro.core.types import GpacConfig, TieredState, allocated_hp_mask
 
 
 @dataclasses.dataclass(frozen=True)
 class MultiGuest:
-    """Geometry of N symmetric guests packed into one host block space."""
+    """Geometry of N *symmetric* guests packed into one host block space.
+
+    Deprecated: use :class:`repro.core.engine.GuestSpec` /
+    :func:`repro.core.engine.build`, which also cover ragged guests.
+    """
 
     cfg: GpacConfig  # combined space
     n_guests: int
@@ -67,11 +55,11 @@ class MultiGuest:
     def localize_all(self, local_ids: jax.Array) -> jax.Array:
         """Batched :meth:`localize`: ``int32[n_guests, k]`` guest-local ids ->
         combined-space ids in one shot (-1 passthrough)."""
-        lo = (
-            jnp.arange(self.n_guests, dtype=local_ids.dtype)[:, None]
-            * self.logical_per_guest
-        )
-        return jnp.where(local_ids >= 0, local_ids + lo, -1)
+        return self.spec().localize(local_ids)
+
+    def spec(self, cl: int | None = None) -> engine.EngineSpec:
+        """The equivalent :class:`~repro.core.engine.EngineSpec`."""
+        return engine.symmetric_spec(self.cfg, self.n_guests, cl=cl)
 
 
 def make_multi_guest(
@@ -82,93 +70,38 @@ def make_multi_guest(
     gpa_slack: float = 0.25,
     **cfg_kw,
 ) -> tuple[MultiGuest, TieredState]:
-    """Build N guests over one host space.
+    """Build N symmetric guests over one host space (deprecated shim over
+    :func:`repro.core.engine.build`).
 
     ``near_fraction``: near-tier capacity as a fraction of *total allocated*
     huge pages across guests (the paper's DRAM:NVMM ratio knob, Fig. 17).
     """
-    hp_need = -(-logical_per_guest // hp_ratio)
-    hp_per_guest = hp_need + max(2, int(hp_need * gpa_slack))
-    n_hp = n_guests * hp_per_guest
-    n_near = max(1, int(near_fraction * n_guests * hp_need))
-    cfg = GpacConfig(
-        n_logical=n_guests * logical_per_guest,
+    host = engine.HostSpec(
         hp_ratio=hp_ratio,
-        n_gpa_hp=n_hp,
-        n_near=min(n_near, n_hp - 1),
-        **cfg_kw,
+        near_fraction=near_fraction,
+        **{k: cfg_kw.pop(k) for k in tuple(cfg_kw) if k in (
+            "base_elems", "cl", "hot_threshold", "ipt_windows", "ipt_min_hits",
+            "reconsolidate_cooldown", "dtype",
+        )},
     )
-    mg = MultiGuest(cfg, n_guests, logical_per_guest, hp_per_guest)
-    # Identity init maps guest g's logical pages into its own hp segment only
-    # if segments are tight; with slack we must place pages per guest.
-    gpt = np.full((cfg.n_logical,), -1, np.int64)
-    rmap = np.full((cfg.n_gpa,), -1, np.int64)
-    gpa = (
-        np.arange(n_guests)[:, None] * (hp_per_guest * hp_ratio)
-        + np.arange(logical_per_guest)[None, :]
-    ).reshape(-1)
-    gpt[:] = gpa
-    rmap[gpa] = np.arange(cfg.n_logical)
-    state = init_state(cfg)
-    state = asp.dataclasses_replace(
-        state,
-        gpt=jnp.asarray(gpt, jnp.int32),
-        rmap=jnp.asarray(rmap, jnp.int32),
+    if cfg_kw:
+        raise TypeError(f"unknown config keywords {sorted(cfg_kw)}")
+    guests = tuple(
+        engine.GuestSpec(
+            n_logical=logical_per_guest, gpa_slack=gpa_slack, seed=g
+        )
+        for g in range(n_guests)
+    )
+    spec, state = engine.build(guests, host)
+    mg = MultiGuest(
+        spec.cfg, n_guests, logical_per_guest, spec.cfg.n_gpa_hp // n_guests
     )
     return mg, state
 
 
 # --------------------------------------------------------------------------
-# vectorized engine
+# deprecated engine entry points (shims over repro.core.engine)
 # --------------------------------------------------------------------------
-def _window_core(
-    mg: MultiGuest,
-    state: TieredState,
-    accesses: jax.Array,
-    policy: str,
-    backend: str,
-    use_gpac: bool,
-    max_batches: int,
-    budget: int,
-    cl: int | None,
-) -> tuple[TieredState, dict]:
-    """Traceable body of one multi-guest window (shared by the jitted
-    single-window entry point and the scan-fused driver)."""
-    cfg = mg.cfg
-    n_g = mg.n_guests
-    ids = mg.localize_all(accesses)  # int32[n_guests, k] combined-space ids
-    # one batched translate over every guest's accesses; hit tiers resolve
-    # against the placement in effect when the access happened (PEBS-like)
-    slot, _, valid = asp.translate(cfg, state, ids)
-    near_hits = (valid & (slot < cfg.n_near)).sum(axis=1)
-    far_hits = (valid & (slot >= cfg.n_near)).sum(axis=1)
-    state = asp.record_accesses(cfg, state, ids.reshape(-1))
-    if use_gpac:
-        # all N guest daemons in one batched GPAC pass: one hot-mask
-        # classification, one row-wise per-guest filter, and max_batches
-        # guest-wide consolidation rounds. Guests' logical/GPA segments are
-        # disjoint, so this matches the sequential per-guest reference
-        # bit-for-bit with O(1) trace cost in n_guests.
-        state = gpac.gpac_maintenance_batched(
-            cfg, state, backend, max_batches, cl,
-            n_g, mg.logical_per_guest, mg.hp_per_guest,
-        )
-    state = tiering.tick(cfg, state, policy, budget=budget)
-
-    # guest hp segments tile [0, n_gpa_hp), so the per-guest near share is one
-    # reshape-segmented reduction instead of n_guests masked sums
-    alloc = allocated_hp_mask(cfg, state)
-    in_near = state.block_table < cfg.n_near
-    near_blocks = (alloc & in_near).reshape(n_g, mg.hp_per_guest).sum(axis=1)
-    out = dict(near_hits=near_hits, far_hits=far_hits, near_blocks=near_blocks)
-    state = telemetry.end_window(cfg, state)
-    return state, out
-
-
-@partial(
-    jax.jit,
-    static_argnames=("mg", "policy", "backend", "use_gpac", "max_batches", "budget", "cl"),
-)
 def multi_guest_window(
     mg: MultiGuest,
     state: TieredState,
@@ -180,41 +113,15 @@ def multi_guest_window(
     budget: int = 64,
     cl: int | None = None,
 ) -> tuple[TieredState, dict]:
-    """One telemetry window for all guests + one host tier tick (vectorized).
-
-    Returns per-guest metrics computed *at access time* (hit tiers resolved
-    against the placement in effect when the access happened, like PEBS).
-    Bit-for-bit equivalent to :func:`multi_guest_window_reference`.
-    """
-    return _window_core(
-        mg, state, accesses, policy, backend, use_gpac, max_batches, budget, cl
+    """One telemetry window for all guests + one host tier tick (deprecated
+    shim over :func:`repro.core.engine.step`). Bit-for-bit equivalent to
+    :func:`multi_guest_window_reference`."""
+    return engine.step(
+        mg.spec(cl), state, accesses,
+        policy=policy, backend=backend, use_gpac=use_gpac,
+        max_batches=max_batches, budget=budget,
+        collect=("hits", "near_blocks"),
     )
-
-
-@partial(
-    jax.jit,
-    static_argnames=("mg", "policy", "backend", "use_gpac", "max_batches", "budget", "cl"),
-)
-def _run_window_chunk(
-    mg: MultiGuest,
-    state: TieredState,
-    chunk: jax.Array,  # int32[n_windows, n_guests, k]
-    policy: str,
-    backend: str,
-    use_gpac: bool,
-    max_batches: int,
-    budget: int,
-    cl: int | None,
-) -> tuple[TieredState, dict]:
-    """Scan-fused run over a chunk of windows; metric series stay stacked on
-    device until the caller pulls them."""
-
-    def body(st, acc):
-        return _window_core(
-            mg, st, acc, policy, backend, use_gpac, max_batches, budget, cl
-        )
-
-    return jax.lax.scan(body, state, chunk)
 
 
 def run_multi_guest(
@@ -230,42 +137,16 @@ def run_multi_guest(
     cl: int | None = None,
     windows_per_step: int = 0,
 ) -> tuple[TieredState, dict]:
-    """Drive all windows; return the per-guest time series the at-scale
-    benchmarks plot (near blocks, hit rate, modeled throughput).
-
-    The window loop is a device-side ``lax.scan``; ``windows_per_step``
-    bounds how many windows each jitted step fuses (0 = the whole run in one
-    step). Metric series are transferred to the host once per chunk instead
-    of once per window. Pick a ``windows_per_step`` that divides
-    ``n_windows``: a shorter trailing chunk has a different scan shape and
-    pays one extra trace/compile per fresh process.
-    """
-    n_g, n_w, _ = traces.shape
-    if n_w == 0:
-        return state, dict(
-            near_blocks=np.zeros((0, n_g), np.int64),
-            hit_rate=np.zeros((0, n_g)),
-            throughput=np.zeros((0, n_g)),
-        )
-    by_window = np.ascontiguousarray(np.transpose(np.asarray(traces), (1, 0, 2)))
-    wps = n_w if windows_per_step <= 0 else min(windows_per_step, n_w)
-    outs = []
-    for s in range(0, n_w, wps):
-        state, out = _run_window_chunk(
-            mg, state, jnp.asarray(by_window[s : s + wps]),
-            policy, backend, use_gpac, max_batches, budget, cl,
-        )
-        outs.append(out)
-    nh = np.concatenate([np.asarray(o["near_hits"]) for o in outs]).astype(np.float64)
-    fh = np.concatenate([np.asarray(o["far_hits"]) for o in outs]).astype(np.float64)
-    near_blocks = np.concatenate(
-        [np.asarray(o["near_blocks"]) for o in outs]
-    ).astype(np.int64)
-    hit_rate, throughput = metrics.throughput_from_hits(nh, fh, tier_pair)
-    series = dict(
-        near_blocks=near_blocks, hit_rate=hit_rate, throughput=throughput
+    """Drive all windows on the shared scan-fused engine driver (deprecated
+    shim over :func:`repro.core.engine.run_series`); returns the per-guest
+    time series the at-scale benchmarks plot. Bit-for-bit equivalent to
+    :func:`run_multi_guest_reference`."""
+    return engine.run_series(
+        mg.spec(cl), state, traces, tier_pair=tier_pair,
+        policy=policy, backend=backend, use_gpac=use_gpac,
+        max_batches=max_batches, budget=budget,
+        windows_per_step=windows_per_step,
     )
-    return state, series
 
 
 # --------------------------------------------------------------------------

@@ -4,7 +4,7 @@ GPAC is *telemetry-agnostic* (design goal 4): every backend here consumes raw
 per-window access counts and produces the same artifact, a ``bool[n_logical]``
 hot mask. The host never sees any of this -- it only gets huge-page counts.
 
-Backends:
+Built-in backends:
   * ``ipt``   -- Idle Page Tracking-like: per-window accessed bit, hot if the
                  bit is set in >= ``ipt_min_hits`` of the last ``ipt_windows``
                  windows (the paper's prototype telemetry).
@@ -12,8 +12,15 @@ Backends:
                  threshold (hardware-counter flavour).
   * ``damon`` -- DAMON-like region estimate: hotness smeared over adaptive
                  power-of-two regions (cheap, coarse).
+
+New hotness sources plug in without editing this module:
+:func:`register_backend` adds a ``fn(cfg, state, **kw) -> bool[n_logical]``
+to the registry and every ``hot_mask(...)`` call site (the engine, GPAC, the
+benchmarks) can name it (DESIGN.md §8).
 """
 from __future__ import annotations
+
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +28,27 @@ import jax.numpy as jnp
 from repro.core.address_space import dataclasses_replace
 from repro.core.types import GpacConfig, TieredState
 
+# builtin names (kept for back-compat; the live set is backends())
 BACKENDS = ("ipt", "pebs", "damon")
+
+_BACKENDS: dict[str, Callable] = {}
+
+
+def register_backend(name: str, fn: Callable | None = None):
+    """Register a hotness classifier ``fn(cfg, state, **kw) ->
+    bool[n_logical]``; usable as ``@register_backend("name")``. The name
+    becomes valid everywhere a ``backend=`` string is accepted."""
+    if fn is None:
+        return lambda f: register_backend(name, f)
+    if name in _BACKENDS:
+        raise ValueError(f"telemetry backend {name!r} already registered")
+    _BACKENDS[name] = fn
+    return fn
+
+
+def backends() -> tuple[str, ...]:
+    """Names of all registered telemetry backends."""
+    return tuple(_BACKENDS)
 
 
 def end_window(cfg: GpacConfig, state: TieredState) -> TieredState:
@@ -85,14 +112,20 @@ def hot_mask_damon(
     return jnp.repeat(region_hot, region_pages)[:n]
 
 
+register_backend("ipt", hot_mask_ipt)
+register_backend("pebs", hot_mask_pebs)
+register_backend("damon", hot_mask_damon)
+
+
 def hot_mask(cfg: GpacConfig, state: TieredState, backend: str = "ipt", **kw) -> jax.Array:
-    if backend == "ipt":
-        return hot_mask_ipt(cfg, state)
-    if backend == "pebs":
-        return hot_mask_pebs(cfg, state, **kw)
-    if backend == "damon":
-        return hot_mask_damon(cfg, state, **kw)
-    raise ValueError(f"unknown telemetry backend {backend!r} (have {BACKENDS})")
+    """Dispatch to a registered hotness classifier by name."""
+    try:
+        fn = _BACKENDS[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown telemetry backend {backend!r} (have {backends()})"
+        ) from None
+    return fn(cfg, state, **kw)
 
 
 # --------------------------------------------------------------------------

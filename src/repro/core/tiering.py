@@ -6,7 +6,7 @@ and far pools. GPAC never modifies anything here -- that is the paper's
 host-agnosticism, and the test matrix runs every policy against the same
 guest-side GPAC unchanged.
 
-Three faithful policy flavours:
+Three faithful built-in policy flavours:
   * ``memtierd`` -- proactive userspace ranking: keep the globally hottest
     blocks near, even without memory pressure (paper §5.2 uses this).
   * ``autonuma`` -- hint-fault-style promotion (>=2 touches while far) and
@@ -14,11 +14,18 @@ Three faithful policy flavours:
   * ``tpp``      -- fault promotion with a free-page watermark: demote coldest
     blocks until a headroom fraction of near is kept free.
 
+New placement policies plug in without editing this module:
+:func:`register_policy` adds a ``fn(cfg, state, **kw) -> TieredState`` to the
+registry and every ``policy=`` string (the engine driver, ``tick``, the
+benchmarks) can name it (DESIGN.md §8).
+
 Migration primitive: ``swap_blocks`` -- exchange the placement of a far block
 and a near block (data + block_table + slot_owner), the functional analogue of
 NUMA page migration at block granularity.
 """
 from __future__ import annotations
+
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +34,29 @@ from repro.core.address_space import dataclasses_replace
 from repro.core.telemetry import _popcount_u8
 from repro.core.types import GpacConfig, TieredState, allocated_hp_mask
 
+# builtin names (kept for back-compat; the live set is policies())
 POLICIES = ("memtierd", "autonuma", "tpp")
 NEG = jnp.int32(-(2**31) + 1)
+
+_POLICIES: dict[str, Callable] = {}
+
+
+def register_policy(name: str, fn: Callable | None = None):
+    """Register a host tiering policy ``fn(cfg, state, **kw) -> TieredState``
+    (keyword args include at least ``budget``); usable as
+    ``@register_policy("name")``. The name becomes valid everywhere a
+    ``policy=`` string is accepted."""
+    if fn is None:
+        return lambda f: register_policy(name, f)
+    if name in _POLICIES:
+        raise ValueError(f"tiering policy {name!r} already registered")
+    _POLICIES[name] = fn
+    return fn
+
+
+def policies() -> tuple[str, ...]:
+    """Names of all registered tiering policies."""
+    return tuple(_POLICIES)
 
 
 def swap_blocks(
@@ -226,11 +254,17 @@ def tpp_tick(
     return swap_blocks(cfg, state, far_ids, near_ids, k_p)
 
 
+register_policy("memtierd", memtierd_tick)
+register_policy("autonuma", autonuma_tick)
+register_policy("tpp", tpp_tick)
+
+
 def tick(cfg: GpacConfig, state: TieredState, policy: str, **kw) -> TieredState:
-    if policy == "memtierd":
-        return memtierd_tick(cfg, state, **kw)
-    if policy == "autonuma":
-        return autonuma_tick(cfg, state, **kw)
-    if policy == "tpp":
-        return tpp_tick(cfg, state, **kw)
-    raise ValueError(f"unknown tiering policy {policy!r} (have {POLICIES})")
+    """Dispatch to a registered host tiering policy by name."""
+    try:
+        fn = _POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown tiering policy {policy!r} (have {policies()})"
+        ) from None
+    return fn(cfg, state, **kw)

@@ -65,17 +65,31 @@ class GpacConfig:
     dtype: Any = jnp.float32
 
     def __post_init__(self):
+        if self.n_logical < 1:
+            raise ValueError(f"n_logical must be >= 1, got {self.n_logical}")
+        if self.hp_ratio < 1:
+            raise ValueError(f"hp_ratio must be >= 1, got {self.hp_ratio}")
         need = -(-self.n_logical // self.hp_ratio)  # ceil
         if self.n_gpa_hp == 0:
             object.__setattr__(self, "n_gpa_hp", need + max(2, need // 4))
         if self.n_near == 0:
             object.__setattr__(self, "n_near", max(1, self.n_gpa_hp // 2))
         if self.n_gpa_hp * self.hp_ratio < self.n_logical:
-            raise ValueError("GPA space smaller than logical space")
-        if not (0 < self.n_near <= self.n_gpa_hp):
-            raise ValueError("need 0 < n_near <= n_gpa_hp")
+            raise ValueError(
+                f"GPA space smaller than logical space: n_gpa_hp={self.n_gpa_hp}"
+                f" x hp_ratio={self.hp_ratio} = {self.n_gpa_hp * self.hp_ratio}"
+                f" gpa pages cannot cover n_logical={self.n_logical}"
+            )
+        if not (0 < self.n_near < self.n_gpa_hp):
+            raise ValueError(
+                f"need 0 < n_near < n_gpa_hp (a non-empty far tier), got "
+                f"n_near={self.n_near}, n_gpa_hp={self.n_gpa_hp}"
+            )
         if not (1 <= self.cl <= self.hp_ratio):
-            raise ValueError("CL must be in [1, hp_ratio]")
+            raise ValueError(
+                f"Consolidation Limit must be in [1, hp_ratio={self.hp_ratio}]"
+                f", got cl={self.cl}"
+            )
 
     # ---- derived sizes -------------------------------------------------
     @property

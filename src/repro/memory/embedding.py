@@ -41,7 +41,7 @@ class EmbedSpec:
             n_logical=self.n_logical,
             hp_ratio=self.hp_ratio,
             n_gpa_hp=n_hp,
-            n_near=max(1, int(self.near_fraction * n_hp)),
+            n_near=min(max(1, int(self.near_fraction * n_hp)), n_hp - 1),
             base_elems=self.rows_per_page * self.arch.d_model,
             cl=self.cl,
             dtype=jnp.float32,

@@ -42,7 +42,7 @@ class ExpertStoreSpec:
             n_logical=n_logical,
             hp_ratio=1,  # block == base granule: no sub-block structure
             n_gpa_hp=n_hp,
-            n_near=max(1, int(self.near_fraction * n_hp)),
+            n_near=min(max(1, int(self.near_fraction * n_hp)), n_hp - 1),
             base_elems=8,  # placement bookkeeping only (slabs stay in params)
             cl=1,
             dtype=jnp.float32,

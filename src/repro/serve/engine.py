@@ -74,7 +74,7 @@ class Engine:
             n_logical=B * pps,
             hp_ratio=ecfg.pages_per_block,
             n_gpa_hp=n_hp,
-            n_near=max(1, int(ecfg.near_fraction * n_hp)),
+            n_near=min(max(1, int(ecfg.near_fraction * n_hp)), n_hp - 1),
             base_elems=2,  # placement bookkeeping only (KV lives in cache)
             # CL must be >= 2: a CL of 1 can never match (paper's rule is
             # "< CL hot subpages" and a hot block has at least one)

@@ -12,6 +12,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Gate the optional property-testing dep: containers without hypothesis skip
+# this module instead of failing tier-1 at collection time.
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -1,0 +1,247 @@
+"""Ragged multi-tenancy + the unified engine API.
+
+The engine (``repro.core.engine``) must reproduce the sequential per-guest /
+per-window formulation bit-for-bit even when guests are *asymmetric*
+(distinct ``n_logical``, slack and per-guest CL), across every registered
+policy, with gpac on and off, and independently of driver chunking. Also
+covers the policy/telemetry/collector registries and GpacConfig validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, gpac, telemetry, tiering
+from repro.core.types import GpacConfig, init_state
+from repro.data import traces as tr
+
+
+def assert_states_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+HP = 16
+
+
+def ragged_engine():
+    """Three asymmetric guests: distinct sizes, slacks, CLs and workloads."""
+    guests = (
+        engine.GuestSpec(n_logical=96, cl=3, gpa_slack=0.5, workload="redis", seed=0),
+        engine.GuestSpec(n_logical=176, cl=8, gpa_slack=0.25, workload="masim", seed=1),
+        engine.GuestSpec(n_logical=64, cl=None, gpa_slack=1.0, workload="hash", seed=2),
+    )
+    host = engine.HostSpec(hp_ratio=HP, near_fraction=0.4, base_elems=2, cl=6)
+    return engine.build(guests, host)
+
+
+def ragged_traces(spec, n_windows=5, k=192):
+    return engine.guest_traces(spec, n_windows=n_windows, accesses_per_window=k)
+
+
+class TestRaggedGeometry:
+    def test_segment_tables_tile_the_spaces(self):
+        spec, state = ragged_engine()
+        cfg = spec.cfg
+        assert spec.logical_offsets[-1] == cfg.n_logical
+        assert spec.hp_offsets[-1] == cfg.n_gpa_hp
+        lp = spec.logical_pad_index()
+        hp = spec.hp_pad_index()
+        # every id appears exactly once; padding is -1
+        np.testing.assert_array_equal(
+            np.sort(lp[lp >= 0]), np.arange(cfg.n_logical))
+        np.testing.assert_array_equal(
+            np.sort(hp[hp >= 0]), np.arange(cfg.n_gpa_hp))
+        cl = spec.cl_per_logical()
+        assert cl.shape == (cfg.n_logical,)
+        for g in range(spec.n_guests):
+            lo, hi = spec.logical_range(g)
+            assert (cl[lo:hi] == spec.guest_cl(g)).all()
+        assert spec.guest_cl(2) == cfg.cl  # cl=None inherits the host default
+
+    def test_localize_matches_per_guest_offsets(self):
+        spec, _ = ragged_engine()
+        k = 32
+        rng = np.random.default_rng(0)
+        acc = np.stack([
+            rng.integers(-1, g.n_logical, size=k) for g in spec.guests
+        ]).astype(np.int32)
+        out = np.asarray(spec.localize(jnp.asarray(acc)))
+        for g in range(spec.n_guests):
+            lo, _ = spec.logical_range(g)
+            ref = np.where(acc[g] >= 0, acc[g] + lo, -1)
+            np.testing.assert_array_equal(out[g], ref)
+
+    def test_pack_traces_pads_ragged_k(self):
+        a = np.zeros((4, 8), np.int32)
+        b = np.ones((4, 13), np.int32)
+        packed = engine.pack_traces([a, b])
+        assert packed.shape == (2, 4, 13)
+        assert (packed[0, :, 8:] == -1).all()
+        with pytest.raises(ValueError, match="n_windows"):
+            engine.pack_traces([a, np.zeros((3, 8), np.int32)])
+
+
+class TestRaggedEquivalence:
+    @pytest.mark.parametrize("use_gpac", [False, True])
+    @pytest.mark.parametrize("policy", sorted(tiering.POLICIES))
+    def test_engine_matches_sequential_reference(self, policy, use_gpac):
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec)
+        ref_state, ref_series = engine.run_reference(
+            spec, s0, traces, policy=policy, use_gpac=use_gpac)
+        new_state, new_series = engine.run(
+            spec, s0, traces, policy=policy, use_gpac=use_gpac)
+        assert_states_equal(ref_state, new_state)
+        assert set(ref_series) == set(new_series)
+        for k in ref_series:
+            np.testing.assert_array_equal(ref_series[k], new_series[k], err_msg=k)
+
+    def test_single_window_matches_reference(self):
+        spec, s0 = ragged_engine()
+        acc = jnp.asarray(ragged_traces(spec, n_windows=1)[:, 0])
+        ref_state, ref_out = engine.step_reference(spec, s0, acc)
+        new_state, new_out = engine.step(spec, s0, acc)
+        assert_states_equal(ref_state, new_state)
+        for k in ref_out:
+            np.testing.assert_array_equal(
+                np.asarray(ref_out[k]), np.asarray(new_out[k]), err_msg=k)
+
+    def test_chunking_is_invisible_on_shared_driver(self):
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec, n_windows=7)
+        full_state, full_series = engine.run(spec, s0, traces)
+        for wps in (1, 3, 100):
+            st, series = engine.run(spec, s0, traces, windows_per_step=wps)
+            assert_states_equal(full_state, st)
+            for k in full_series:
+                np.testing.assert_array_equal(full_series[k], series[k], err_msg=k)
+
+    def test_guests_confined_to_own_segments(self):
+        spec, s0 = ragged_engine()
+        state, _ = engine.run(spec, s0, ragged_traces(spec), use_gpac=True)
+        gpt = np.asarray(state.gpt)
+        for g in range(spec.n_guests):
+            lo, hi = spec.logical_range(g)
+            hp_lo, hp_hi = spec.hp_range(g)
+            hp_of = gpt[lo:hi] // spec.cfg.hp_ratio
+            assert (hp_of >= hp_lo).all() and (hp_of < hp_hi).all(), (
+                f"guest {g} pages escaped its GPA segment")
+
+    def test_single_guest_spec_matches_reference(self):
+        cfg = GpacConfig(n_logical=256, hp_ratio=HP, base_elems=2, cl=6)
+        spec = engine.spec_from_config(cfg)
+        trace = tr.generate(tr.TraceSpec("redis", 256, HP, 5, 128, seed=3))[None]
+        ref_state, ref_series = engine.run_reference(spec, init_state(cfg), trace)
+        new_state, new_series = engine.run(spec, init_state(cfg), trace)
+        assert_states_equal(ref_state, new_state)
+        for k in ref_series:
+            np.testing.assert_array_equal(ref_series[k], new_series[k], err_msg=k)
+
+    def test_zero_windows(self):
+        spec, s0 = ragged_engine()
+        empty = np.zeros((spec.n_guests, 0, 64), np.int32)
+        state, series = engine.run(spec, s0, empty)
+        assert_states_equal(state, s0)
+        assert series == {}
+        _, vm = engine.run_series(spec, s0, empty)
+        assert vm["near_blocks"].shape == (0, spec.n_guests)
+
+
+class TestRegistries:
+    def test_unknown_policy_and_backend_list_registered(self):
+        cfg = GpacConfig(n_logical=64, hp_ratio=16, base_elems=2, cl=4)
+        state = init_state(cfg)
+        with pytest.raises(ValueError, match="memtierd"):
+            tiering.tick(cfg, state, "nope")
+        with pytest.raises(ValueError, match="ipt"):
+            telemetry.hot_mask(cfg, state, "nope")
+        with pytest.raises(ValueError, match="snapshot"):
+            engine.get_collector("nope")
+
+    def test_duplicate_registration_raises(self):
+        with pytest.raises(ValueError, match="already registered"):
+            tiering.register_policy("memtierd", tiering.memtierd_tick)
+        with pytest.raises(ValueError, match="already registered"):
+            telemetry.register_backend("ipt", telemetry.hot_mask_ipt)
+        with pytest.raises(ValueError, match="already registered"):
+            engine.register_collector("hits", lambda *a: {})
+
+    def test_custom_policy_plugs_into_engine(self):
+        if "frozen" not in tiering.policies():
+            @tiering.register_policy("frozen")
+            def _frozen_tick(cfg, state, budget=0, **kw):
+                return state  # placement never changes
+
+        assert "frozen" in tiering.policies()
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec, n_windows=3)
+        state, series = engine.run(spec, s0, traces, policy="frozen")
+        ref_state, ref_series = engine.run_reference(spec, s0, traces, policy="frozen")
+        assert_states_equal(state, ref_state)
+        for k in ref_series:
+            np.testing.assert_array_equal(ref_series[k], series[k], err_msg=k)
+        # a frozen host never migrates; with gpac off nothing moves at all,
+        # so the per-guest near-block series is constant
+        _, still = engine.run(spec, s0, traces, policy="frozen", use_gpac=False)
+        assert (still["near_blocks"] == still["near_blocks"][0]).all()
+
+    def test_custom_backend_plugs_into_engine(self):
+        if "cold" not in telemetry.backends():
+            @telemetry.register_backend("cold")
+            def _cold(cfg, state, **kw):
+                return jnp.zeros((cfg.n_logical,), bool)  # nothing is hot
+
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec, n_windows=3)
+        state, _ = engine.run(spec, s0, traces, backend="cold", use_gpac=True)
+        # no hot pages -> the filter selects nothing -> no pages consolidated
+        assert int(state.stats["consolidated_pages"]) == 0
+
+    def test_colliding_collector_keys_raise(self):
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec, n_windows=2)
+        # 'hits' emits per-guest near_hits/far_hits; 'snapshot' emits the
+        # cumulative host-wide counters under the same names
+        with pytest.raises(ValueError, match="already produced"):
+            engine.run(spec, s0, traces, collect=("hits", "snapshot"))
+
+    def test_custom_collector_runs_on_device(self):
+        if "rss" not in engine.collectors():
+            @engine.register_collector("rss")
+            def _rss(spec, state, window):
+                from repro.core.types import allocated_hp_mask
+                return dict(rss_blocks=allocated_hp_mask(spec.cfg, state).sum())
+
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec, n_windows=4)
+        _, series = engine.run(spec, s0, traces, collect=("hits", "rss"))
+        assert series["rss_blocks"].shape == (4,)
+        assert (series["rss_blocks"] > 0).all()
+        assert set(series) == {"near_hits", "far_hits", "rss_blocks"}
+
+
+class TestGpacConfigValidation:
+    def test_near_tier_must_leave_far_capacity(self):
+        with pytest.raises(ValueError, match="n_near"):
+            GpacConfig(n_logical=64, hp_ratio=16, n_gpa_hp=8, n_near=8)
+
+    def test_gpa_space_must_cover_logical(self):
+        with pytest.raises(ValueError, match="cover"):
+            GpacConfig(n_logical=1024, hp_ratio=16, n_gpa_hp=4, n_near=2)
+
+    def test_cl_bounded_by_hp_ratio(self):
+        with pytest.raises(ValueError, match="Consolidation Limit"):
+            GpacConfig(n_logical=64, hp_ratio=16, cl=17)
+
+    def test_degenerate_sizes(self):
+        with pytest.raises(ValueError, match="n_logical"):
+            GpacConfig(n_logical=0)
+        with pytest.raises(ValueError, match="hp_ratio"):
+            GpacConfig(n_logical=64, hp_ratio=0)
+
+    def test_valid_config_unaffected(self):
+        cfg = GpacConfig(n_logical=64, hp_ratio=16, base_elems=2, cl=4)
+        assert cfg.n_near < cfg.n_gpa_hp
