@@ -118,6 +118,17 @@ def make_symmetric_engine(n_guests: int, logical_per_guest: int,
     return engine.build(guests, host)
 
 
+def default_guest_mesh():
+    """Mesh over every local device along the engine's ``"guest"`` axis, or
+    ``None`` on a single-device host (``engine.run_series(mesh=None)`` then
+    degrades to the unsharded driver). The at-scale benchmarks thread this
+    through so a multi-device host (or CI's forced
+    ``--xla_force_host_platform_device_count``) runs sharded end-to-end."""
+    from repro.core import sharding
+
+    return sharding.guest_mesh()
+
+
 def steady(xs: list, tail: int = 6) -> float:
     return float(np.mean(xs[-tail:]))
 

@@ -17,6 +17,7 @@ from repro.core import (  # noqa: F401
     filter,
     gpac,
     metrics,
+    sharding,
     telemetry,
     tiering,
 )

@@ -95,7 +95,9 @@ def record_accesses(
         # accesses into one call): histogram once, then update the host side
         # per logical page instead of per access -- bit-identical integer
         # sums, ~3x fewer scattered elements
-        return _record_accesses_aggregated(cfg, state, logical, valid)
+        return apply_access_histogram(
+            cfg, state, access_histogram(cfg, logical, valid)
+        )
     if counts is None:
         counts = jnp.ones(logical.shape, jnp.int32)
     counts = jnp.where(valid, counts, 0)
@@ -125,16 +127,26 @@ def record_accesses(
     )
 
 
-def _record_accesses_aggregated(
-    cfg: GpacConfig, state: TieredState, logical: jax.Array, valid: jax.Array
-) -> TieredState:
-    """Histogram formulation of :func:`record_accesses` for unweighted access
-    batches: one scatter builds the per-page histogram, and every host-side
-    quantity (huge-page counts, touch epochs, hit tiers) derives from it with
-    per-logical-page work. All sums are exact int32, so the result is
-    bit-identical to the per-access scatter path."""
+def access_histogram(
+    cfg: GpacConfig, logical: jax.Array, valid: jax.Array | None = None
+) -> jax.Array:
+    """int32[n_logical] per-page access counts of an unweighted id batch
+    (invalid / padded ids fall off the end of the scatter). The sharded
+    engine psums these per-device histograms into the global one -- integer
+    sums, so the combined result is bit-identical to one global scatter."""
+    if valid is None:
+        valid = (logical >= 0) & (logical < cfg.n_logical)
     flat = jnp.where(valid, logical, cfg.n_logical).reshape(-1).astype(jnp.int32)
-    h = jnp.zeros((cfg.n_logical + 1,), jnp.int32).at[flat].add(1)[: cfg.n_logical]
+    return jnp.zeros((cfg.n_logical + 1,), jnp.int32).at[flat].add(1)[: cfg.n_logical]
+
+
+def apply_access_histogram(
+    cfg: GpacConfig, state: TieredState, h: jax.Array
+) -> TieredState:
+    """Charge a full per-logical-page access histogram ``h`` to guest and host
+    telemetry: every host-side quantity (huge-page counts, touch epochs, hit
+    tiers) derives from ``h`` with per-logical-page work. All sums are exact
+    int32, so the result is bit-identical to the per-access scatter path."""
     hp_of = state.gpt // cfg.hp_ratio
     host_inc = jnp.zeros((cfg.n_gpa_hp,), jnp.int32).at[hp_of].add(h)
     touch = jnp.where(

@@ -197,6 +197,27 @@ def consolidate_pages_ragged(
     return _apply_consolidation(cfg, state, pages, region)
 
 
+def consolidate_rounds(
+    cfg: GpacConfig,
+    state: TieredState,
+    batches: jax.Array,  # int32[n_rows, max_batches, hp_ratio]
+    hp_pad_idx: jax.Array,  # int32[n_rows, max_hp] GPA segment table rows
+) -> TieredState:
+    """Round-major consolidation over any slice of guest segment rows:
+    round b allocates each row's fresh region from its own GPA segment
+    (``hp_pad_idx``) and executes every row's b-th Algorithm-1 invocation at
+    once. Shared by :func:`consolidate_batches_ragged` (all guests),
+    the deprecated symmetric wrappers, and the device-sharded engine (each
+    device passes only its own guests' rows)."""
+
+    def body(st, round_pages):
+        region = _alloc_regions_ragged(cfg, st, hp_pad_idx)
+        return _apply_consolidation(cfg, st, round_pages.astype(jnp.int32), region), None
+
+    state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
+    return state
+
+
 def consolidate_batches_ragged(
     spec,
     state: TieredState,
@@ -207,12 +228,9 @@ def consolidate_batches_ragged(
     independent (disjoint segments), so round-major order produces exactly the
     guest-major sequential result while shortening the scan from
     ``n_guests * max_batches`` steps to ``max_batches``."""
-
-    def body(st, round_pages):
-        return consolidate_pages_ragged(spec, st, round_pages), None
-
-    state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
-    return state
+    return consolidate_rounds(
+        spec.cfg, state, batches, jnp.asarray(spec.hp_pad_index())
+    )
 
 
 def _uniform_hp_pad(cfg: GpacConfig, n_guests: int, hp_per_guest: int):
@@ -248,10 +266,4 @@ def consolidate_batches_multi(
     """Deprecated symmetric wrapper: scanned rounds over N equal GPA
     segments."""
     hp_pad = _uniform_hp_pad(cfg, batches.shape[0], hp_per_guest)
-
-    def body(st, round_pages):
-        region = _alloc_regions_ragged(cfg, st, hp_pad)
-        return _apply_consolidation(cfg, st, round_pages.astype(jnp.int32), region), None
-
-    state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
-    return state
+    return consolidate_rounds(cfg, state, batches, hp_pad)

@@ -343,6 +343,26 @@ def collectors() -> tuple[str, ...]:
     return tuple(_COLLECTORS)
 
 
+def run_collectors(
+    spec: "EngineSpec", state: "TieredState", window: dict,
+    collect: tuple[str, ...],
+) -> dict:
+    """Run the requested collectors on a post-window state, rejecting
+    colliding output keys (shared by the unsharded and sharded window
+    bodies so both emit identical series and errors)."""
+    out = {}
+    for name in collect:
+        emitted = get_collector(name)(spec, state, window)
+        clash = set(emitted) & set(out)
+        if clash:
+            raise ValueError(
+                f"collector {name!r} emits keys {sorted(clash)} already "
+                f"produced by an earlier collector in {collect}"
+            )
+        out.update(emitted)
+    return out
+
+
 @register_collector("hits")
 def _collect_hits(spec: EngineSpec, state: TieredState, window: dict) -> dict:
     """Per-guest near/far hit counts for this window (access-time tiers)."""
@@ -409,17 +429,7 @@ def _window(
         state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
     state = tiering.tick(cfg, state, policy, budget=budget)
     state = telemetry.end_window(cfg, state)
-    out = {}
-    for name in collect:
-        emitted = get_collector(name)(spec, state, window)
-        clash = set(emitted) & set(out)
-        if clash:
-            raise ValueError(
-                f"collector {name!r} emits keys {sorted(clash)} already "
-                f"produced by an earlier collector in {collect}"
-            )
-        out.update(emitted)
-    return state, out
+    return state, run_collectors(spec, state, window, collect)
 
 
 @partial(
@@ -487,6 +497,62 @@ def _run_chunk(
     return jax.lax.scan(body, state, chunk)
 
 
+def _round_wps(n_windows: int, windows_per_step: int, strict: bool) -> int:
+    """Effective chunk size: ``windows_per_step`` rounded *down* to the
+    nearest divisor of ``n_windows`` (0 or oversized = the whole run). A
+    non-dividing chunk size would leave a shorter trailing chunk whose scan
+    has a different shape -- one silent extra trace/compile per fresh
+    process; ``strict=True`` keeps the requested size and pays it.
+
+    Guard rail: when the best divisor is so small that rounding would more
+    than double the number of chunks (worst case ``n_windows`` prime ->
+    divisor 1 -> one dispatch/transfer per window), the requested size is
+    kept instead -- the one extra compile is far cheaper than per-window
+    host round-trips."""
+    wps = n_windows if windows_per_step <= 0 else min(windows_per_step, n_windows)
+    if strict:
+        return wps
+    div = wps
+    while n_windows % div:
+        div -= 1
+    if n_windows // div > 2 * (-(-n_windows // wps)):
+        return wps
+    return div
+
+
+def _validate_run_args(spec: EngineSpec, traces: np.ndarray, collect) -> tuple:
+    if traces.ndim != 3 or traces.shape[0] != spec.n_guests:
+        raise ValueError(
+            f"traces must be [n_guests={spec.n_guests}, n_windows, k], "
+            f"got {traces.shape}"
+        )
+    collect = tuple(collect)
+    for name in collect:
+        get_collector(name)  # fail fast on unknown collectors
+    return collect
+
+
+def _drive_chunks(
+    chunk_fn, state: TieredState, by_window: np.ndarray, wps: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    """Shared chunk loop of :func:`run` / :func:`run_sharded`: one jitted
+    scan per chunk, one host transfer per chunk, concatenated host series.
+    ``collect=()`` is explicit: the simulation still runs (the state
+    advances) but no collectors execute and the series is ``{}``."""
+    n_w = by_window.shape[0]
+    chunks = []
+    for s in range(0, n_w, wps):
+        state, out = chunk_fn(state, jnp.asarray(by_window[s : s + wps]))
+        chunks.append(out)
+    if not collect:
+        return state, {}
+    series = {
+        k: np.concatenate([np.asarray(c[k]) for c in chunks]) for k in chunks[0]
+    }
+    return state, series
+
+
 def run(
     spec: EngineSpec,
     state: TieredState,
@@ -498,6 +564,7 @@ def run(
     max_batches: int = 4,
     budget: int = 64,
     windows_per_step: int = 0,
+    strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
 ) -> tuple[TieredState, dict]:
     """Drive every window through the scan-fused engine.
@@ -505,40 +572,94 @@ def run(
     The window loop is a device-side ``lax.scan``; ``windows_per_step``
     bounds how many windows each jitted step fuses (0 = the whole run in one
     step) and the stacked collector series cross to the host **once per
-    chunk**. Pick a ``windows_per_step`` that divides ``n_windows``: a
-    shorter trailing chunk has a different scan shape and pays one extra
-    trace/compile per fresh process.
+    chunk**. A ``windows_per_step`` that does not divide ``n_windows`` is
+    rounded down to the nearest divisor, so every chunk shares one scan
+    shape and one compilation (unless that would more than double the chunk
+    count -- e.g. a prime ``n_windows`` -- where the requested size wins);
+    pass ``strict_wps=True`` to always keep the exact requested size (the
+    shorter trailing chunk then pays one extra trace/compile per fresh
+    process).
 
     Returns ``(state, series)`` where ``series[k]`` is a host numpy array of
     shape ``[n_windows, ...]`` per collector output; empty dict when the
-    trace has no windows.
+    trace has no windows or ``collect`` is empty.
     """
     traces = np.asarray(traces)
-    if traces.ndim != 3 or traces.shape[0] != spec.n_guests:
-        raise ValueError(
-            f"traces must be [n_guests={spec.n_guests}, n_windows, k], "
-            f"got {traces.shape}"
-        )
-    collect = tuple(collect)
-    for name in collect:
-        get_collector(name)  # fail fast on unknown collectors
+    collect = _validate_run_args(spec, traces, collect)
     spec = spec.canonical()  # don't recompile across seed/workload sweeps
     n_w = traces.shape[1]
     if n_w == 0:
         return state, {}
     by_window = np.ascontiguousarray(np.transpose(traces, (1, 0, 2)))
-    wps = n_w if windows_per_step <= 0 else min(windows_per_step, n_w)
-    chunks = []
-    for s in range(0, n_w, wps):
-        state, out = _run_chunk(
-            spec, state, jnp.asarray(by_window[s : s + wps]),
-            policy, backend, use_gpac, max_batches, budget, collect,
+
+    def chunk_fn(st, chunk):
+        return _run_chunk(
+            spec, st, chunk, policy, backend, use_gpac, max_batches, budget,
+            collect,
         )
-        chunks.append(out)
-    series = {
-        k: np.concatenate([np.asarray(c[k]) for c in chunks]) for k in chunks[0]
-    }
-    return state, series
+
+    wps = _round_wps(n_w, windows_per_step, strict_wps)
+    return _drive_chunks(chunk_fn, state, by_window, wps, collect)
+
+
+def run_sharded(
+    spec: EngineSpec,
+    state: TieredState,
+    traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
+    *,
+    mesh=None,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    windows_per_step: int = 0,
+    strict_wps: bool = False,
+    collect: tuple[str, ...] = ("hits", "near_blocks"),
+) -> tuple[TieredState, dict]:
+    """:func:`run`, device-sharded over the guest axis (DESIGN.md §9).
+
+    ``mesh`` is a 1-D ``"guest"`` mesh (:func:`repro.core.sharding.
+    guest_mesh`); ``None`` builds one over every local device and **falls
+    back to** :func:`run` on a single-device host -- the same no-mesh
+    degradation as ``models.dist.Dist``. Guest counts that do not divide the
+    mesh are padded with no-op segment rows. Results are bit-for-bit equal
+    to :func:`run` on any mesh size: per-guest phases shard over disjoint
+    segments, the access histograms and GPAC writes merge through exact
+    integer / bit-pattern collectives, and the shared host near-tier tick
+    runs replicated on the merged state (deterministic arbitration).
+    """
+    from repro.core import sharding
+
+    if mesh is None:
+        mesh = sharding.guest_mesh()
+    if mesh is None:
+        return run(
+            spec, state, traces, policy=policy, backend=backend,
+            use_gpac=use_gpac, max_batches=max_batches, budget=budget,
+            windows_per_step=windows_per_step, strict_wps=strict_wps,
+            collect=collect,
+        )
+    traces = np.asarray(traces)
+    collect = _validate_run_args(spec, traces, collect)
+    spec = spec.canonical()
+    n_w = traces.shape[1]
+    if n_w == 0:
+        return state, {}
+    n_shards = sharding.mesh_size(mesh)
+    tables = sharding.guest_tables(spec, n_shards)
+    padded = sharding.pad_guest_rows(traces, n_shards)  # [G_pad, n_w, k]
+    by_window = np.ascontiguousarray(np.transpose(padded, (1, 0, 2)))
+
+    def chunk_fn(st, chunk):
+        return sharding.run_chunk_sharded(
+            spec, mesh, st, chunk, tables, policy=policy, backend=backend,
+            use_gpac=use_gpac, max_batches=max_batches, budget=budget,
+            collect=collect,
+        )
+
+    wps = _round_wps(n_w, windows_per_step, strict_wps)
+    return _drive_chunks(chunk_fn, state, by_window, wps, collect)
 
 
 def run_series(
@@ -546,10 +667,13 @@ def run_series(
     state: TieredState,
     traces: np.ndarray,
     tier_pair: str = "dram_nvmm",
+    mesh=None,
     **kw,
 ) -> tuple[TieredState, dict]:
     """:func:`run` + the per-VM time series the at-scale figures plot
-    (near blocks, per-window hit rate, modeled throughput)."""
+    (near blocks, per-window hit rate, modeled throughput). Passing a
+    ``mesh`` drives the windows through :func:`run_sharded` instead (the
+    at-scale figures shard their guest axis end-to-end this way)."""
     n_g = spec.n_guests
     traces = np.asarray(traces)
     if traces.ndim == 3 and traces.shape[1] == 0:
@@ -558,7 +682,10 @@ def run_series(
             hit_rate=np.zeros((0, n_g)),
             throughput=np.zeros((0, n_g)),
         )
-    state, out = run(spec, state, traces, collect=("hits", "near_blocks"), **kw)
+    driver = run if mesh is None else partial(run_sharded, mesh=mesh)
+    state, out = driver(
+        spec, state, traces, collect=("hits", "near_blocks"), **kw
+    )
     nh = out["near_hits"].astype(np.float64)
     fh = out["far_hits"].astype(np.float64)
     hit_rate, throughput = metrics.throughput_from_hits(nh, fh, tier_pair)

@@ -87,6 +87,43 @@ def _hotness_score(state: TieredState) -> jax.Array:
     )
 
 
+def select_batches_from_rows(
+    cfg: GpacConfig,
+    score: jax.Array,  # int32[n_logical] candidate score, -1 = not a candidate
+    pad_idx: jax.Array,  # int32[n_rows, max_logical] segment table rows, -1 padded
+    max_batches: int,
+) -> jax.Array:
+    """Row-wise batch selection over any slice of segment-table rows: one
+    ``top_k`` per row of the padded score matrix gathered from the global
+    ``score``. This is the shared core of :func:`select_batches_ragged`
+    (all guests at once) and the device-sharded engine (each device passes
+    only its own guests' rows). Returns ``int32[n_rows, max_batches,
+    hp_ratio]`` logical-id batches, -1 padded."""
+    mat = jnp.where(pad_idx >= 0, score[jnp.maximum(pad_idx, 0)], -1)
+    k = min(max_batches * cfg.hp_ratio, mat.shape[1])
+    vals, col = jax.lax.top_k(mat, k)  # row-wise, ties -> lowest column
+    ids = jnp.where(vals >= 0, jnp.take_along_axis(pad_idx, col, axis=1), -1)
+    pad = max_batches * cfg.hp_ratio - k
+    if pad:
+        ids = jnp.concatenate(
+            [ids, jnp.full((mat.shape[0], pad), -1, jnp.int32)], axis=1
+        )
+    return ids.reshape(mat.shape[0], max_batches, cfg.hp_ratio)
+
+
+def candidate_score(
+    cfg: GpacConfig,
+    state: TieredState,
+    hot: jax.Array,
+    cl_per_logical: jax.Array,
+) -> jax.Array:
+    """int32[n_logical] filter ranking: the hotness score where
+    :func:`candidate_mask` holds (per-guest CLs via ``cl_per_logical``),
+    -1 elsewhere."""
+    cand = candidate_mask(cfg, state, hot, cl_per_logical)
+    return jnp.where(cand, _hotness_score(state), -1)
+
+
 def select_batches_ragged(
     spec,  # repro.core.engine.EngineSpec
     state: TieredState,
@@ -108,19 +145,11 @@ def select_batches_ragged(
     column index preserves the global id order inside each segment.
     """
     cfg = spec.cfg
-    cand = candidate_mask(cfg, state, hot, jnp.asarray(spec.cl_per_logical()))
-    score = jnp.where(cand, _hotness_score(state), -1)
+    score = candidate_score(
+        cfg, state, hot, jnp.asarray(spec.cl_per_logical())
+    )
     pad_idx = jnp.asarray(spec.logical_pad_index())  # [n_guests, max_logical]
-    mat = jnp.where(pad_idx >= 0, score[jnp.maximum(pad_idx, 0)], -1)
-    k = min(max_batches * cfg.hp_ratio, mat.shape[1])
-    vals, col = jax.lax.top_k(mat, k)  # row-wise, ties -> lowest column
-    ids = jnp.where(vals >= 0, jnp.take_along_axis(pad_idx, col, axis=1), -1)
-    pad = max_batches * cfg.hp_ratio - k
-    if pad:
-        ids = jnp.concatenate(
-            [ids, jnp.full((spec.n_guests, pad), -1, jnp.int32)], axis=1
-        )
-    return ids.reshape(spec.n_guests, max_batches, cfg.hp_ratio)
+    return select_batches_from_rows(cfg, score, pad_idx, max_batches)
 
 
 def select_batches_per_guest(

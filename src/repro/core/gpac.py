@@ -63,9 +63,42 @@ def gpac_maintenance_ragged(
     reproduce N sequential :func:`gpac_maintenance` calls bit-for-bit -- with
     O(1) trace cost and ~n_guests x less classification/sort work."""
     cfg = spec.cfg
+    return gpac_maintenance_rows(
+        cfg,
+        state,
+        backend,
+        max_batches,
+        jnp.asarray(spec.cl_per_logical()),
+        jnp.asarray(spec.logical_pad_index()),
+        jnp.asarray(spec.hp_pad_index()),
+    )
+
+
+def gpac_maintenance_rows(
+    cfg: GpacConfig,
+    state: TieredState,
+    backend: str,
+    max_batches: int,
+    cl_per_logical: jax.Array,  # int32[n_logical]
+    pad_idx: jax.Array,  # int32[n_rows, max_logical] logical segment rows
+    hp_pad_idx: jax.Array,  # int32[n_rows, max_hp] GPA segment rows
+) -> TieredState:
+    """GPAC passes for an arbitrary slice of guest segment rows.
+
+    The hot-mask classification and candidate scoring are cheap elementwise
+    passes over the **whole** logical space (in the sharded engine every
+    device redoes them -- a deliberate trade: O(n_logical) elementwise work
+    vs. an extra collective); only their values inside the given rows are
+    ever *read*, and the expensive parts -- the row-wise top-k selection and
+    the round-major consolidation -- are confined to those rows. The
+    all-guests call (:func:`gpac_maintenance_ragged`) passes every row; the
+    device-sharded engine passes only the rows a device owns -- segments are
+    disjoint, so each device's pass *writes* disjoint state and the shard
+    merge is exact."""
     hot = telemetry.hot_mask(cfg, state, backend)
-    batches = pfilter.select_batches_ragged(spec, state, hot, max_batches)
-    return consolidator.consolidate_batches_ragged(spec, state, batches)
+    score = pfilter.candidate_score(cfg, state, hot, cl_per_logical)
+    batches = pfilter.select_batches_from_rows(cfg, score, pad_idx, max_batches)
+    return consolidator.consolidate_rounds(cfg, state, batches, hp_pad_idx)
 
 
 def gpac_maintenance_batched(
@@ -133,9 +166,18 @@ def run_windows(
     bit-for-bit equivalent to :func:`run_windows_reference` (the seed
     per-window loop).
     """
+    import warnings
+
     import numpy as np
 
     from repro.core import engine, metrics
+
+    warnings.warn(
+        "gpac.run_windows is deprecated; use repro.core.engine.run with"
+        " engine.spec_from_config(cfg) and the 'snapshot' collector",
+        DeprecationWarning,
+        stacklevel=2,
+    )
 
     trace = np.asarray(trace)
     n_w = trace.shape[0]

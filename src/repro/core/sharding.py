@@ -1,0 +1,351 @@
+"""Guest-axis device sharding for the unified engine driver (DESIGN.md §9).
+
+The batched engine's guest axis is embarrassingly parallel: the
+:class:`repro.core.engine.EngineSpec` segment-offset tables give every guest
+disjoint logical and GPA segments, so the padded per-guest matrices (access
+batches, ragged filter top-k rows, consolidation rounds, metric rows) shard
+cleanly over a 1-D ``"guest"`` mesh axis via ``shard_map``. The shared host
+state stays **replicated**; per-window phases alternate between sharded and
+replicated computation:
+
+1. **access phase** (sharded): each device translates and histograms its own
+   guests' accesses and applies the histogram *locally* (guest g's counts,
+   huge-page counts and touch epochs all live inside g's own segments).
+2. **GPAC phase** (sharded): each device runs the filter top-k and the
+   round-major Algorithm-1 consolidation only for its own guests' segment
+   rows (``gpac.gpac_maintenance_rows``) on its local state copy. Both
+   phases diverge *only inside that device's own segments*: hot masks,
+   candidate scores, region allocation and the data copy never read another
+   guest's telemetry or mappings.
+3. **merge** (one collective): the diverged arrays are recombined by
+   ownership: every logical page / GPA page / huge page / host slot is
+   owned by exactly one guest, hence written by exactly one device, so
+   ``psum(where(own, local, 0))`` reconstructs each array exactly (integer
+   sums with one non-zero contributor). Payload pools are combined in their
+   *bit patterns* (``bitcast``) so the merge is bit-exact for every dtype.
+   Per-guest hit vectors ride in the same psum -- cross-device sync points
+   dominate the sharded overhead on CPU meshes, so each window performs
+   exactly **one** collective.
+4. **host tick** (replicated): the merged state is identical on all devices,
+   so the shared near-tier arbitration (``tiering.tick``: global top-k over
+   block scores) runs replicated and deterministically -- the paper's single
+   host daemon, not N partitioned ones.
+
+Guest counts that do not divide the mesh are padded with empty segment rows
+(all ``-1``): padded rows translate nothing, select nothing, allocate
+nothing, and own nothing, so they are end-to-end no-ops.
+
+Everything degrades to a no-op without a mesh, as ``repro.models.dist.Dist``
+does: :func:`guest_mesh` returns ``None`` on a single-device host and
+``engine.run_sharded`` falls back to ``engine.run``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.core import address_space as asp
+from repro.core import gpac, telemetry, tiering
+from repro.core.types import GpacConfig, TieredState
+
+AXIS = "guest"
+
+
+# --------------------------------------------------------------------------
+# mesh + padding helpers
+# --------------------------------------------------------------------------
+def guest_mesh(n_devices: int | None = None):
+    """1-D mesh over ``n_devices`` local devices along the ``"guest"`` axis.
+
+    ``n_devices=None`` uses every local device and returns ``None`` when only
+    one is available (the no-mesh degradation: callers fall back to the
+    unsharded driver). Pass an explicit count to force a mesh -- including a
+    1-device mesh, which exercises the full shard_map path.
+    """
+    avail = jax.local_device_count()
+    if n_devices is None:
+        if avail == 1:
+            return None
+        n_devices = avail
+    if n_devices > avail:
+        raise ValueError(
+            f"guest_mesh: asked for {n_devices} devices, have {avail}"
+        )
+    return jax.make_mesh((n_devices,), (AXIS,))
+
+
+def mesh_size(mesh) -> int:
+    return mesh.shape[AXIS]
+
+
+def padded_guest_count(n_guests: int, n_shards: int) -> int:
+    """Smallest multiple of ``n_shards`` >= ``n_guests``."""
+    return -(-n_guests // n_shards) * n_shards
+
+
+def pad_guest_rows(rows: np.ndarray, n_shards: int, fill=-1) -> np.ndarray:
+    """Pad a per-guest matrix ``[n_guests, ...]`` with ``fill`` rows up to a
+    multiple of ``n_shards`` (empty segments: -1 everywhere is a no-op row
+    through the whole engine)."""
+    n_g = rows.shape[0]
+    g_pad = padded_guest_count(n_g, n_shards)
+    if g_pad == n_g:
+        return rows
+    pad = np.full((g_pad - n_g, *rows.shape[1:]), fill, rows.dtype)
+    return np.concatenate([rows, pad], axis=0)
+
+
+def guest_tables(spec, n_shards: int) -> dict[str, np.ndarray]:
+    """The spec's per-guest segment tables, padded to the mesh: trace-time
+    numpy constants that enter the shard-mapped driver as ``P("guest", ...)``
+    sharded arrays (each device sees only its own guests' rows)."""
+    return dict(
+        logical_lo=pad_guest_rows(
+            np.asarray(spec.logical_offsets[:-1], np.int32), n_shards, fill=0
+        ),
+        logical_pad=pad_guest_rows(spec.logical_pad_index(), n_shards),
+        hp_pad=pad_guest_rows(spec.hp_pad_index(), n_shards),
+    )
+
+
+# --------------------------------------------------------------------------
+# bit-exact ownership merge
+# --------------------------------------------------------------------------
+def _own_mask(idx_rows: jax.Array, n: int) -> jax.Array:
+    """bool[n]: ids covered by these (padded, -1 filled) segment-table rows."""
+    flat = idx_rows.reshape(-1)
+    safe = jnp.where(flat >= 0, flat, n)
+    return jnp.zeros((n + 1,), bool).at[safe].set(True, mode="drop")[:n]
+
+
+def _owned_bits(x: jax.Array, own: jax.Array) -> jax.Array:
+    """This device's contribution to the bit-exact combine: the owned
+    elements' *bit patterns*, 0 elsewhere. Summed across devices, every
+    element has exactly one non-zero contributor, so the (integer) psum *is*
+    that contributor's bit pattern -- no float rounding, -0.0 survives.
+    4-byte dtypes view as int32 directly; anything else goes through the
+    uint8 view (one trailing byte axis)."""
+    if jnp.issubdtype(x.dtype, jnp.integer) and x.dtype.itemsize <= 4:
+        return jnp.where(own, x, 0)
+    if x.dtype.itemsize == 4:
+        return jnp.where(own, jax.lax.bitcast_convert_type(x, jnp.int32), 0)
+    bits = jax.lax.bitcast_convert_type(x, jnp.uint8)  # [..., itemsize]
+    return jnp.where(own[..., None], bits, 0)
+
+
+def _from_bits(bits: jax.Array, like: jax.Array) -> jax.Array:
+    if bits.dtype == like.dtype:
+        return bits
+    return jax.lax.bitcast_convert_type(bits, like.dtype)
+
+
+def merge_window(
+    cfg: GpacConfig,
+    base: TieredState,  # replicated pre-window state
+    local: TieredState,  # after this device's local access + GPAC phases
+    logical_pad: jax.Array,  # int32[G_loc, max_logical] local segment rows
+    hp_pad: jax.Array,  # int32[G_loc, max_hp] local segment rows
+    extras: tuple[jax.Array, ...],  # per-guest vectors riding the collective
+    merged_gpac: bool,
+) -> tuple[TieredState, tuple[jax.Array, ...]]:
+    """Recombine per-device window phases into one replicated state with a
+    **single** psum.
+
+    The access phase writes ``guest_counts`` / ``host_counts`` /
+    ``last_touch_epoch``; the GPAC phase writes ``gpt`` / ``rmap`` /
+    ``region_epoch`` / the payload pools; both bump ``stats``. Each array is
+    recombined by static segment ownership (logical pages, GPA pages, huge
+    pages) or dynamic slot ownership (``slot_owner`` is unchanged during
+    both phases, so slot ``s`` belongs to the guest owning huge page
+    ``slot_owner[s]``). Stats are int32 counters: replicated base + psum of
+    per-device deltas is exact. ``merged_gpac=False`` (GPAC off) skips the
+    mapping/pool arrays entirely -- they equal ``base``.
+    """
+    own_logical = _own_mask(logical_pad, cfg.n_logical)
+    own_hp = _own_mask(hp_pad, cfg.n_gpa_hp)
+    contrib = dict(
+        guest_counts=_owned_bits(local.guest_counts, own_logical),
+        host_counts=_owned_bits(local.host_counts, own_hp),
+        last_touch_epoch=_owned_bits(local.last_touch_epoch, own_hp),
+        stats={k: local.stats[k] - base.stats[k] for k in base.stats},
+        extras=extras,
+    )
+    if merged_gpac:
+        own_gpa = jnp.repeat(own_hp, cfg.hp_ratio)
+        own_slot = own_hp[base.slot_owner]  # slot -> owning hp -> owned here?
+        contrib.update(
+            gpt=_owned_bits(local.gpt, own_logical),
+            rmap=_owned_bits(local.rmap, own_gpa),
+            region_epoch=_owned_bits(local.region_epoch, own_hp),
+            near_pool=_owned_bits(
+                local.near_pool, own_slot[: cfg.n_near][:, None, None]
+            ),
+            far_pool=_owned_bits(
+                local.far_pool, own_slot[cfg.n_near :][:, None, None]
+            ),
+        )
+    merged = jax.lax.psum(contrib, AXIS)
+    state = dataclasses.replace(
+        base,
+        guest_counts=merged["guest_counts"],
+        host_counts=merged["host_counts"],
+        last_touch_epoch=merged["last_touch_epoch"],
+        stats={k: base.stats[k] + merged["stats"][k] for k in base.stats},
+    )
+    if merged_gpac:
+        state = dataclasses.replace(
+            state,
+            gpt=merged["gpt"],
+            rmap=merged["rmap"],
+            region_epoch=merged["region_epoch"],
+            near_pool=_from_bits(merged["near_pool"], base.near_pool),
+            far_pool=_from_bits(merged["far_pool"], base.far_pool),
+        )
+    return state, merged["extras"]
+
+
+# --------------------------------------------------------------------------
+# the shard-mapped window body
+# --------------------------------------------------------------------------
+def _spread_rows(x_loc: jax.Array, n_shards: int) -> jax.Array:
+    """Place this device's per-local-guest row vector at its global guest
+    positions in a zero ``[G_pad]`` vector: rows are contiguous per device,
+    so summed across devices (inside an existing psum) this reconstructs the
+    full per-guest vector without a separate all-gather."""
+    g_loc = x_loc.shape[0]
+    pos = jax.lax.axis_index(AXIS) * g_loc + jnp.arange(g_loc)
+    return jnp.zeros((g_loc * n_shards,), x_loc.dtype).at[pos].set(x_loc)
+
+
+def _sharded_window(
+    spec,  # repro.core.engine.EngineSpec (static)
+    n_shards: int,
+    state: TieredState,  # replicated
+    accesses: jax.Array,  # int32[G_loc, k] guest-local ids of local guests
+    logical_lo: jax.Array,  # int32[G_loc]
+    logical_pad: jax.Array,  # int32[G_loc, max_logical]
+    hp_pad: jax.Array,  # int32[G_loc, max_hp]
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    """One engine window on one device: sharded access + GPAC phases around
+    the replicated host tick (see the module docstring for the phase plan).
+    Bit-for-bit equal to ``engine._window`` on the unpadded guests.
+
+    Collective budget: cross-device sync points dominate the sharded
+    overhead (every psum is a device rendezvous), so both sharded phases run
+    on the device's *local* state copy -- a guest's telemetry, hot mask,
+    candidate scores and consolidation regions all live inside its own
+    segments, so the local copy agrees with the would-be merged state
+    everywhere the GPAC phase reads it -- and a **single** psum per window
+    (:func:`merge_window`) recombines everything, per-guest hit vectors
+    included.
+    """
+    from repro.core.engine import run_collectors
+
+    cfg = spec.cfg
+    base = state
+    # ---- 1. access phase (sharded, applied locally) ----------------------
+    ids = jnp.where(accesses >= 0, accesses + logical_lo[:, None], -1)
+    slot, _, valid = asp.translate(cfg, state, ids)
+    near_loc = (valid & (slot < cfg.n_near)).sum(axis=1)
+    far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1)
+    local = asp.apply_access_histogram(
+        cfg, state, asp.access_histogram(cfg, ids, valid)
+    )
+    # ---- 2. GPAC phase (sharded: this device's segment rows only) --------
+    if use_gpac:
+        local = gpac.gpac_maintenance_rows(
+            cfg, local, backend, max_batches,
+            jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad,
+        )
+    # ---- 3. one-collective ownership merge -------------------------------
+    state, (near_all, far_all) = merge_window(
+        cfg, base, local, logical_pad, hp_pad,
+        (_spread_rows(near_loc, n_shards), _spread_rows(far_loc, n_shards)),
+        merged_gpac=use_gpac,
+    )
+    # ---- 4. host tick + window roll (replicated) ------------------------
+    state = tiering.tick(cfg, state, policy, budget=budget)
+    state = telemetry.end_window(cfg, state)
+    window = dict(
+        near_hits=near_all[: spec.n_guests],
+        far_hits=far_all[: spec.n_guests],
+    )
+    return state, run_collectors(spec, state, window, collect)
+
+
+@lru_cache(maxsize=64)
+def _chunk_fn(
+    spec,  # canonical EngineSpec
+    mesh,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+):
+    """Compiled sharded chunk driver for one (spec, mesh, knobs) key: a
+    ``shard_map`` over the scan of windows. State and series are replicated
+    out-specs; the traces and segment tables shard over the guest axis."""
+
+    n_shards = mesh_size(mesh)
+
+    def body(state, chunk, logical_lo, logical_pad, hp_pad):
+        def window(st, acc):
+            return _sharded_window(
+                spec, n_shards, st, acc, logical_lo, logical_pad, hp_pad,
+                policy, backend, use_gpac, max_batches, budget, collect,
+            )
+
+        return jax.lax.scan(window, state, chunk)
+
+    sharded = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(), P(None, AXIS, None), P(AXIS), P(AXIS, None), P(AXIS, None)),
+        out_specs=P(),
+        # psum results are replicated but 0.4.x rep-checking cannot always
+        # infer it; correctness is pinned by the equivalence tests
+        check_rep=False,
+    )
+    return jax.jit(sharded)
+
+
+def run_chunk_sharded(
+    spec,
+    mesh,
+    state: TieredState,
+    chunk: jax.Array,  # int32[n_windows, G_pad, k] (guest axis mesh-padded)
+    tables: dict,
+    *,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    """One scan-fused chunk of the sharded engine (``engine.run_sharded``'s
+    inner loop)."""
+    fn = _chunk_fn(
+        spec, mesh, policy, backend, use_gpac, max_batches, budget, collect
+    )
+    return fn(
+        state,
+        chunk,
+        jnp.asarray(tables["logical_lo"]),
+        jnp.asarray(tables["logical_pad"]),
+        jnp.asarray(tables["hp_pad"]),
+    )

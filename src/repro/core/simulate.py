@@ -17,6 +17,7 @@ benchmark uses. Everything here is either
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 
 import jax
@@ -76,6 +77,12 @@ def make_multi_guest(
     ``near_fraction``: near-tier capacity as a fraction of *total allocated*
     huge pages across guests (the paper's DRAM:NVMM ratio knob, Fig. 17).
     """
+    warnings.warn(
+        "simulate.make_multi_guest is deprecated; use repro.core.engine.build"
+        " (GuestSpec/HostSpec geometry, also covers ragged guests)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     host = engine.HostSpec(
         hp_ratio=hp_ratio,
         near_fraction=near_fraction,
@@ -116,6 +123,12 @@ def multi_guest_window(
     """One telemetry window for all guests + one host tier tick (deprecated
     shim over :func:`repro.core.engine.step`). Bit-for-bit equivalent to
     :func:`multi_guest_window_reference`."""
+    warnings.warn(
+        "simulate.multi_guest_window is deprecated; use"
+        " repro.core.engine.step",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return engine.step(
         mg.spec(cl), state, accesses,
         policy=policy, backend=backend, use_gpac=use_gpac,
@@ -141,6 +154,12 @@ def run_multi_guest(
     shim over :func:`repro.core.engine.run_series`); returns the per-guest
     time series the at-scale benchmarks plot. Bit-for-bit equivalent to
     :func:`run_multi_guest_reference`."""
+    warnings.warn(
+        "simulate.run_multi_guest is deprecated; use"
+        " repro.core.engine.run_series",
+        DeprecationWarning,
+        stacklevel=2,
+    )
     return engine.run_series(
         mg.spec(cl), state, traces, tier_pair=tier_pair,
         policy=policy, backend=backend, use_gpac=use_gpac,

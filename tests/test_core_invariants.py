@@ -1,4 +1,4 @@
-"""Invariant + property tests for the GPAC core (DESIGN.md §9).
+"""Invariant + property tests for the GPAC core (DESIGN.md §10).
 
 The invariants mirror what the paper's kernel code must maintain:
   * page tables stay bijective on allocated pages (gpt/rmap, block_table/slot_owner);

@@ -150,6 +150,112 @@ class TestRaggedEquivalence:
         assert vm["near_blocks"].shape == (0, spec.n_guests)
 
 
+class TestRunCollectArgs:
+    def test_empty_collect_still_advances_state(self):
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec, n_windows=3)
+        state, series = engine.run(spec, s0, traces, collect=())
+        assert series == {}
+        # collectors only observe; disabling them must not change the run
+        ref_state, _ = engine.run(spec, s0, traces)
+        assert_states_equal(state, ref_state)
+
+    def test_unknown_collector_fails_fast(self):
+        spec, s0 = ragged_engine()
+        traces = ragged_traces(spec, n_windows=2)
+        with pytest.raises(ValueError, match="unknown metric collector"):
+            engine.run(spec, s0, traces, collect=("hits", "nope"))
+        # fail-fast: the bad name must raise before any window runs, even
+        # when it follows valid collectors
+        with pytest.raises(ValueError, match="nope"):
+            engine.run(spec, s0, np.zeros((spec.n_guests, 0, 8), np.int32),
+                       collect=("nope",))
+
+
+class TestWindowsPerStepRounding:
+    def wps_engine(self, n_logical):
+        cfg = GpacConfig(n_logical=n_logical, hp_ratio=HP, base_elems=2, cl=6)
+        spec = engine.spec_from_config(cfg)
+        trace = tr.generate(
+            tr.TraceSpec("redis", n_logical, HP, 10, 64, seed=0))[None]
+        return spec, init_state(cfg), trace
+
+    def test_round_wps_picks_largest_divisor(self):
+        assert engine._round_wps(10, 4, strict=False) == 2
+        assert engine._round_wps(10, 5, strict=False) == 5
+        assert engine._round_wps(10, 0, strict=False) == 10
+        assert engine._round_wps(10, 100, strict=False) == 10
+        assert engine._round_wps(10, 4, strict=True) == 4
+
+    def test_round_wps_guards_against_chunk_blowup(self):
+        # coprime request: the only divisor is 1, which would mean one
+        # dispatch per window -- keep the requested size instead (the
+        # trailing chunk's one extra compile is the lesser cost)
+        assert engine._round_wps(7, 3, strict=False) == 3
+        assert engine._round_wps(23, 12, strict=False) == 12
+        # mild rounding (chunk count grows < 2x) still prefers one shape
+        assert engine._round_wps(24, 9, strict=False) == 8
+
+    def test_strict_wps_pays_extra_compile_rounding_does_not(self):
+        # a non-dividing wps leaves a shorter trailing chunk -> a second scan
+        # shape -> one extra trace/compile; the rounded default keeps one
+        spec_a, s_a, tr_a = self.wps_engine(192)
+        before = engine._run_chunk._cache_size()
+        engine.run(spec_a, s_a, tr_a, windows_per_step=4, strict_wps=True)
+        assert engine._run_chunk._cache_size() == before + 2  # chunks 4,4,2
+
+        spec_b, s_b, tr_b = self.wps_engine(208)  # fresh static key
+        before = engine._run_chunk._cache_size()
+        engine.run(spec_b, s_b, tr_b, windows_per_step=4)  # rounds to 2
+        assert engine._run_chunk._cache_size() == before + 1
+
+    def test_rounded_and_strict_chunking_agree_bitwise(self):
+        spec, s0, trace = self.wps_engine(176)
+        st_r, se_r = engine.run(spec, s0, trace, windows_per_step=4)
+        st_s, se_s = engine.run(spec, s0, trace, windows_per_step=4,
+                                strict_wps=True)
+        assert_states_equal(st_r, st_s)
+        for k in se_r:
+            np.testing.assert_array_equal(se_r[k], se_s[k], err_msg=k)
+
+
+class TestDeprecationShims:
+    """The pre-engine entry points must say they are shims."""
+
+    def small_mg(self):
+        from repro.core import simulate
+
+        with pytest.warns(DeprecationWarning, match="make_multi_guest"):
+            return simulate.make_multi_guest(
+                n_guests=2, logical_per_guest=64, hp_ratio=HP,
+                near_fraction=0.5, base_elems=2, cl=6)
+
+    def test_make_multi_guest_warns(self):
+        self.small_mg()
+
+    def test_multi_guest_window_warns(self):
+        from repro.core import simulate
+
+        mg, state = self.small_mg()
+        acc = np.zeros((2, 16), np.int32)
+        with pytest.warns(DeprecationWarning, match="multi_guest_window"):
+            simulate.multi_guest_window(mg, state, jnp.asarray(acc))
+
+    def test_run_multi_guest_warns(self):
+        from repro.core import simulate
+
+        mg, state = self.small_mg()
+        traces = np.zeros((2, 2, 16), np.int32)
+        with pytest.warns(DeprecationWarning, match="run_multi_guest"):
+            simulate.run_multi_guest(mg, state, traces)
+
+    def test_gpac_run_windows_warns(self):
+        cfg = GpacConfig(n_logical=64, hp_ratio=HP, base_elems=2, cl=6)
+        trace = np.zeros((2, 16), np.int32)
+        with pytest.warns(DeprecationWarning, match="run_windows"):
+            gpac.run_windows(cfg, init_state(cfg), trace)
+
+
 class TestRegistries:
     def test_unknown_policy_and_backend_list_registered(self):
         cfg = GpacConfig(n_logical=64, hp_ratio=16, base_elems=2, cl=4)

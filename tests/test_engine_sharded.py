@@ -1,0 +1,184 @@
+"""Guest-axis device sharding: ``engine.run_sharded`` vs ``engine.run``.
+
+The sharded driver must be bit-for-bit equal to the unsharded engine on any
+mesh size, for ragged guests, with GPAC on and off, including guest counts
+that do not divide the mesh (no-op padding rows). In-process tests exercise
+the full shard_map path on a 1-device mesh (the suite normally sees one CPU
+device); the multi-device matrix runs in one subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``, the same forced
+mesh CI uses.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, sharding
+
+
+def assert_states_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def ragged_engine():
+    guests = (
+        engine.GuestSpec(n_logical=96, cl=3, gpa_slack=0.5, workload="redis", seed=0),
+        engine.GuestSpec(n_logical=176, cl=8, gpa_slack=0.25, workload="masim", seed=1),
+        engine.GuestSpec(n_logical=64, cl=None, gpa_slack=1.0, workload="hash", seed=2),
+    )
+    host = engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=6)
+    return engine.build(guests, host)
+
+
+class TestMeshAndPadding:
+    def test_guest_mesh_degrades_without_devices(self):
+        # normally the suite sees one CPU device; skip rather than fail if
+        # the environment leaks XLA_FLAGS=--xla_force_host_platform_...
+        if jax.local_device_count() != 1:
+            pytest.skip("needs a single-device host to test degradation")
+        assert sharding.guest_mesh() is None
+        with pytest.raises(ValueError, match="devices"):
+            sharding.guest_mesh(jax.local_device_count() + 1)
+
+    def test_padded_guest_count(self):
+        assert sharding.padded_guest_count(8, 8) == 8
+        assert sharding.padded_guest_count(6, 8) == 8
+        assert sharding.padded_guest_count(9, 4) == 12
+        assert sharding.padded_guest_count(1, 1) == 1
+
+    def test_pad_guest_rows_appends_noop_rows(self):
+        rows = np.arange(6, dtype=np.int32).reshape(3, 2)
+        padded = sharding.pad_guest_rows(rows, 4)
+        assert padded.shape == (4, 2)
+        np.testing.assert_array_equal(padded[:3], rows)
+        assert (padded[3] == -1).all()
+        # already-dividing counts pass through untouched
+        assert sharding.pad_guest_rows(rows, 3) is rows
+
+    def test_guest_tables_cover_segments_and_pad(self):
+        spec, _ = ragged_engine()
+        tables = sharding.guest_tables(spec, 2)
+        assert tables["logical_pad"].shape[0] == 4
+        assert (tables["logical_pad"][3] == -1).all()
+        assert (tables["hp_pad"][3] == -1).all()
+        covered = tables["logical_pad"][tables["logical_pad"] >= 0]
+        np.testing.assert_array_equal(
+            np.sort(covered), np.arange(spec.cfg.n_logical))
+
+
+class TestShardedSingleDevice:
+    """The full shard_map path on a 1-device mesh (collectives are trivial
+    but every phase -- psum histogram, local GPAC, ownership merge,
+    replicated tick -- executes)."""
+
+    @pytest.mark.parametrize("use_gpac", [False, True])
+    def test_bitwise_equal_to_run(self, use_gpac):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=5, accesses_per_window=192)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(spec, s0, traces, use_gpac=use_gpac)
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, use_gpac=use_gpac)
+        assert_states_equal(ref_state, sh_state)
+        assert set(ref) == set(sh)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    def test_chunking_and_collectors_match(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=6, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(spec, s0, traces, collect=("snapshot",),
+                                    windows_per_step=3)
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, collect=("snapshot",),
+            windows_per_step=3)
+        assert_states_equal(ref_state, sh_state)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    def test_mesh_none_falls_back_to_run(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=3, accesses_per_window=128)
+        ref_state, ref = engine.run(spec, s0, traces)
+        fb_state, fb = engine.run_sharded(spec, s0, traces, mesh=None)
+        assert_states_equal(ref_state, fb_state)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], fb[k], err_msg=k)
+
+    def test_run_series_threads_the_mesh(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=4, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run_series(spec, s0, traces)
+        sh_state, sh = engine.run_series(spec, s0, traces, mesh=mesh)
+        assert_states_equal(ref_state, sh_state)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+
+MULTI_DEVICE_CHECK = """
+import numpy as np, jax
+from repro.core import engine, sharding
+
+assert jax.local_device_count() == 8, jax.local_device_count()
+
+def check(n_guests, mesh_n, use_gpac, policy):
+    guests = tuple(
+        engine.GuestSpec(
+            n_logical=64 + 16 * (g % 4),
+            cl=(None if g % 3 == 0 else 3 + g % 5),
+            gpa_slack=0.25 + 0.25 * (g % 3),
+            workload=["redis", "masim", "hash"][g % 3], seed=g)
+        for g in range(n_guests))
+    spec, state = engine.build(
+        guests,
+        engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=6))
+    traces = engine.guest_traces(spec, n_windows=4, accesses_per_window=192)
+    mesh = sharding.guest_mesh(mesh_n)
+    s_ref, a = engine.run(spec, state, traces, use_gpac=use_gpac, policy=policy)
+    s_sh, b = engine.run_sharded(
+        spec, state, traces, mesh=mesh, use_gpac=use_gpac, policy=policy)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for x, y in zip(jax.tree_util.tree_leaves(s_ref),
+                    jax.tree_util.tree_leaves(s_sh)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    print("OK", n_guests, mesh_n, use_gpac, policy, flush=True)
+
+check(8, 8, True, "memtierd")   # ragged guests, dividing count
+check(8, 8, False, "memtierd")  # gpac off: pure access + host tick
+check(6, 8, True, "memtierd")   # padding: 6 guests on 8 shards
+check(8, 4, True, "tpp")        # multi-guest-per-shard, second policy
+"""
+
+
+class TestShardedMultiDevice:
+    def test_forced_8_device_mesh_matches_run(self):
+        """The acceptance matrix: ragged guests x gpac on/off on a forced
+        8-device CPU mesh, plus a guest count that does not divide it. Runs
+        in a subprocess because device count is fixed at jax init."""
+        env = dict(
+            os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            JAX_PLATFORMS="cpu",
+            PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", MULTI_DEVICE_CHECK],
+            env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+            timeout=600,
+        )
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        assert proc.stdout.count("OK") == 4, proc.stdout
