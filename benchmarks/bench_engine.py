@@ -7,7 +7,10 @@ Times ``simulate.run_multi_guest`` (now a shim over the unified
 chunked host transfer) against ``simulate.run_multi_guest_reference``
 (unrolled per-guest ops, one host sync per window) across an
 (n_guests, n_logical, n_windows) grid, and -- when more than one device is
-visible -- ``engine.run_series(mesh=...)`` sharded over the guest axis.
+visible -- ``engine.run_series(mesh=...)`` sharded over the guest axis, on
+both host paths: replicated host state (``engine_sharded_s``) and the
+host-partitioned near tier (``host_sharded_s``, DESIGN.md §11, with the
+measured per-device host-state bytes).
 ``n_devices`` comes from ``jax.local_device_count()``; CI forces 8 simulated
 CPU devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Trace
 generation and jit compilation are excluded (one warmup run per path, then
@@ -79,11 +82,22 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
                 n_guests=n_guests, logical_per_guest=logical_per_guest,
                 hp_ratio=HP_RATIO, near_fraction=0.25, base_elems=2, cl=8)
 
+    # one spec for every engine runner and the host-state report: the
+    # geometry is static, so rebuilding pools/mappings per reader is waste
+    spec = make()[0].spec()
+
     def run_engine(mg, state, t):
-        return engine.run_series(mg.spec(), state, t)
+        return engine.run_series(spec, state, t)
 
     def run_sharded(mg, state, t):
-        return engine.run_series(mg.spec(), state, t, mesh=mesh)
+        # replicated host state on every device (DESIGN.md §9)
+        return engine.run_series(spec, state, t, mesh=mesh,
+                                 host_sharded=False)
+
+    def run_host_sharded(mg, state, t):
+        # host state partitioned by block ranges (DESIGN.md §11)
+        return engine.run_series(spec, state, t, mesh=mesh,
+                                 host_sharded=True)
 
     case = dict(
         n_guests=n_guests, logical_per_guest=logical_per_guest,
@@ -96,12 +110,18 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
     ]
     if mesh is not None:
         runners.append(("engine_sharded", run_sharded))
+        runners.append(("host_sharded", run_host_sharded))
     for name, runner in runners:
         _best_of(make, runner, traces, case, name)
     case["speedup"] = case["reference_s"] / case["engine_s"]
     if mesh is not None:
         # > 1 means the sharded driver beat the single-device engine
         case["sharded_speedup"] = case["engine_s"] / case["engine_sharded_s"]
+        case["host_sharded_speedup"] = case["engine_s"] / case["host_sharded_s"]
+        report = common.host_state_report(spec, mesh)
+        case["host_state_bytes_replicated"] = report["replicated_bytes_per_device"]
+        case["host_state_bytes_per_device"] = report["sharded_bytes_per_device"]
+        case["host_state_scaling"] = report["scaling"]
     return case
 
 
@@ -114,14 +134,20 @@ def run() -> dict:
         cases.append(case)
         sharded = (f" sharded[{n_devices}d] {case['engine_sharded_s']*1e3:8.1f} ms"
                    if "engine_sharded_s" in case else "")
+        host = (f" host_sharded {case['host_sharded_s']*1e3:8.1f} ms"
+                f" (state/dev {case['host_state_scaling']:.2f}x)"
+                if "host_sharded_s" in case else "")
         print(f"  n_guests={n_guests:3d} n_logical={case['n_logical']:6d} "
               f"windows={n_windows:3d}: reference {case['reference_s']*1e3:8.1f} ms"
               f" engine {case['engine_s']*1e3:8.1f} ms"
-              f" speedup {case['speedup']:5.2f}x{sharded}")
+              f" speedup {case['speedup']:5.2f}x{sharded}{host}")
     at_scale = [c["speedup"] for c in cases if c["n_guests"] >= 8]
     sharded_at_scale = [
         c["sharded_speedup"] for c in cases
         if c["n_guests"] >= 8 and "sharded_speedup" in c]
+    host_sharded_at_scale = [
+        c["host_sharded_speedup"] for c in cases
+        if c["n_guests"] >= 8 and "host_sharded_speedup" in c]
     payload = dict(
         suite=NAME,
         description=registry.describe(NAME),
@@ -139,6 +165,12 @@ def run() -> dict:
         # "devices"; allow 5%)
         payload["min_sharded_speedup_at_scale"] = min(sharded_at_scale)
         payload["sharded_no_slower_at_scale"] = min(sharded_at_scale) >= 0.95
+    if host_sharded_at_scale:
+        payload["min_host_sharded_speedup_at_scale"] = min(host_sharded_at_scale)
+        # the memory-scaling acceptance: per-device host-state bytes of the
+        # partitioned carry vs the replicated path (~1/n_devices)
+        payload["host_state_scaling"] = max(
+            c["host_state_scaling"] for c in cases if "host_state_scaling" in c)
     with open("BENCH_engine.json", "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return common.save(NAME, payload)
@@ -154,3 +186,8 @@ if __name__ == "__main__":
               f"{r['min_sharded_speedup_at_scale']:.2f}x on "
               f"{r['n_devices']} devices -> "
               f"{'OK' if r['sharded_no_slower_at_scale'] else 'MISS'}")
+    if "min_host_sharded_speedup_at_scale" in r:
+        print(f"host-sharded vs engine at n_guests>=8: "
+              f"{r['min_host_sharded_speedup_at_scale']:.2f}x; per-device "
+              f"host state {r['host_state_scaling']:.2f}x of replicated on "
+              f"{r['n_devices']} devices")

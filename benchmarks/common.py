@@ -129,6 +129,27 @@ def default_guest_mesh():
     return sharding.guest_mesh()
 
 
+def host_state_report(spec, mesh) -> dict:
+    """Per-device host-state bytes: the replicated path vs the
+    host-partitioned carry (DESIGN.md §11). ``scaling`` is the measured
+    per-device fraction -- ~1/n_devices for balanced guests."""
+    from repro.core import sharding
+
+    replicated = sharding.host_state_bytes(spec.cfg)
+    if mesh is None:
+        return dict(n_devices=1, replicated_bytes_per_device=replicated,
+                    sharded_bytes_per_device=replicated, scaling=1.0)
+    n_devices = mesh.shape["guest"]
+    part = sharding.host_partition(spec, n_devices)
+    per_dev = sharding.host_state_bytes_sharded(spec.cfg, part)
+    return dict(
+        n_devices=n_devices,
+        replicated_bytes_per_device=replicated,
+        sharded_bytes_per_device=per_dev,
+        scaling=per_dev / replicated,
+    )
+
+
 def steady(xs: list, tail: int = 6) -> float:
     return float(np.mean(xs[-tail:]))
 

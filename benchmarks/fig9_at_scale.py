@@ -62,6 +62,11 @@ def run(policies=("memtierd", "tpp", "autonuma"), mesh="auto"):
         out[policy] = res
     out["paper_target"] = dict(memtierd=0.13, tpp=0.11, autonuma=0.016)
     out["n_devices"] = 1 if mesh is None else mesh.shape["guest"]
+    # host-state footprint of this run: the sharded driver partitions the
+    # host near tier by block ranges (DESIGN.md §11), so per-device bytes
+    # scale ~1/n_devices -- the lever that takes this figure to hundreds of
+    # guests on a pod
+    out["host_state"] = common.host_state_report(spec, mesh)
     return common.save("fig9_at_scale", out)
 
 

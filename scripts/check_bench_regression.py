@@ -1,0 +1,50 @@
+#!/usr/bin/env python
+"""Bench regression gate: fail CI when the engine's at-scale speedup drops.
+
+Compares a freshly written BENCH_engine.json against the committed baseline
+(CI snapshots it with `git show HEAD:BENCH_engine.json` before the bench
+runs) and fails when the minimum engine-vs-seed speedup at n_guests >= 8
+falls below TOLERANCE x the baseline's. The 0.8x tolerance absorbs shared-CI
+wall-clock noise (the bench itself is best-of-N with `block_until_ready`
+timing, so dispatch-async credit is already excluded); a real regression in
+the scan-fused driver shows up as a >20% drop across every at-scale case.
+
+Usage: check_bench_regression.py <baseline.json> <fresh.json>
+"""
+import json
+import sys
+
+TOLERANCE = 0.8
+AT_SCALE_GUESTS = 8
+
+
+def min_at_scale_speedup(payload: dict) -> float:
+    cases = [c["speedup"] for c in payload["cases"]
+             if c["n_guests"] >= AT_SCALE_GUESTS]
+    if not cases:
+        raise SystemExit("no at-scale (n_guests >= 8) cases in payload")
+    return min(cases)
+
+
+def main(baseline_path: str, fresh_path: str) -> int:
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+    base = min_at_scale_speedup(baseline)
+    new = min_at_scale_speedup(fresh)
+    floor = TOLERANCE * base
+    print(f"engine-vs-seed speedup at n_guests >= {AT_SCALE_GUESTS}: "
+          f"baseline {base:.2f}x, fresh {new:.2f}x, "
+          f"floor {floor:.2f}x ({TOLERANCE}x baseline)")
+    if new < floor:
+        print(f"FAIL: at-scale speedup regressed below {TOLERANCE}x baseline")
+        return 1
+    print("OK: no at-scale speedup regression")
+    return 0
+
+
+if __name__ == "__main__":
+    if len(sys.argv) != 3:
+        raise SystemExit(__doc__)
+    sys.exit(main(sys.argv[1], sys.argv[2]))

@@ -140,6 +140,16 @@ def access_histogram(
     return jnp.zeros((cfg.n_logical + 1,), jnp.int32).at[flat].add(1)[: cfg.n_logical]
 
 
+def host_histogram(cfg: GpacConfig, gpt: jax.Array, h: jax.Array) -> jax.Array:
+    """int32[n_gpa_hp]: the huge-page access counts a per-logical-page
+    histogram ``h`` induces under the mapping ``gpt``. Shared by the
+    replicated :func:`apply_access_histogram` and the host-partitioned engine
+    (which gathers only its own block range from the result -- a device's
+    histogram is nonzero only inside its own guests' segments)."""
+    hp_of = gpt // cfg.hp_ratio
+    return jnp.zeros((cfg.n_gpa_hp,), jnp.int32).at[hp_of].add(h)
+
+
 def apply_access_histogram(
     cfg: GpacConfig, state: TieredState, h: jax.Array
 ) -> TieredState:
@@ -148,7 +158,7 @@ def apply_access_histogram(
     tiers) derives from ``h`` with per-logical-page work. All sums are exact
     int32, so the result is bit-identical to the per-access scatter path."""
     hp_of = state.gpt // cfg.hp_ratio
-    host_inc = jnp.zeros((cfg.n_gpa_hp,), jnp.int32).at[hp_of].add(h)
+    host_inc = host_histogram(cfg, state.gpt, h)
     touch = jnp.where(
         host_inc > 0,
         jnp.maximum(state.last_touch_epoch, state.epoch),

@@ -30,6 +30,49 @@ from repro.core.address_space import dataclasses_replace
 from repro.core.types import FREE, GpacConfig, TieredState
 
 
+def _mapping_and_stats(
+    cfg: GpacConfig,
+    gpt: jax.Array,
+    rmap: jax.Array,
+    stats: dict,
+    pages: jax.Array,
+    safe_pages: jax.Array,
+    old_gpa: jax.Array,
+    new_gpa: jax.Array,
+    do_move: jax.Array,
+    ok: jax.Array,
+    n_sel: jax.Array,
+):
+    """Algorithm-1 steps 3/5 + the stats counters, shared bit-for-bit by the
+    replicated (:func:`_apply_consolidation`) and host-partitioned
+    (:func:`_apply_consolidation_local`) data-copy paths -- one definition,
+    so the two paths cannot drift."""
+    gpt = gpt.at[jnp.where(do_move, pages, cfg.n_logical)].set(
+        new_gpa, mode="drop"
+    )
+    rmap = rmap.at[jnp.where(do_move, old_gpa, cfg.n_gpa)].set(FREE, mode="drop")
+    rmap = rmap.at[jnp.where(do_move, new_gpa, cfg.n_gpa)].set(
+        safe_pages, mode="drop"
+    )
+    moved_per_row = do_move.sum(axis=1)
+    moved = moved_per_row.sum()
+    stats = dict(stats)
+    stats["consolidated_pages"] = stats["consolidated_pages"] + moved.astype(jnp.int32)
+    stats["consolidation_calls"] = stats["consolidation_calls"] + (
+        n_sel > 0
+    ).sum().astype(jnp.int32)
+    stats["consolidation_enomem"] = stats["consolidation_enomem"] + (
+        (n_sel > 0) & ~ok
+    ).sum().astype(jnp.int32)
+    stats["copied_bytes"] = stats["copied_bytes"] + (
+        moved.astype(jnp.int32) * cfg.base_bytes
+    )
+    stats["tlb_shootdowns"] = stats["tlb_shootdowns"] + (
+        moved_per_row > 0
+    ).sum().astype(jnp.int32)
+    return gpt, rmap, stats
+
+
 def _apply_consolidation(
     cfg: GpacConfig,
     state: TieredState,
@@ -85,33 +128,13 @@ def _apply_consolidation(
     far_pool = state.far_pool.at[far_idx, dst_off].set(payload, mode="drop")
 
     # ---- 3/5. mapping updates (row-disjoint scatters) --------------------
-    gpt = state.gpt.at[jnp.where(do_move, pages, cfg.n_logical)].set(
-        new_gpa, mode="drop"
-    )
-    rmap = state.rmap.at[jnp.where(do_move, old_gpa, cfg.n_gpa)].set(FREE, mode="drop")
-    rmap = rmap.at[jnp.where(do_move, new_gpa, cfg.n_gpa)].set(
-        safe_pages, mode="drop"
-    )
     region_epoch = state.region_epoch.at[
         jnp.where(ok, region, cfg.n_gpa_hp)
     ].set(state.epoch, mode="drop")
-
-    moved_per_row = do_move.sum(axis=1)
-    moved = moved_per_row.sum()
-    stats = dict(state.stats)
-    stats["consolidated_pages"] = stats["consolidated_pages"] + moved.astype(jnp.int32)
-    stats["consolidation_calls"] = stats["consolidation_calls"] + (
-        n_sel > 0
-    ).sum().astype(jnp.int32)
-    stats["consolidation_enomem"] = stats["consolidation_enomem"] + (
-        (n_sel > 0) & ~ok
-    ).sum().astype(jnp.int32)
-    stats["copied_bytes"] = stats["copied_bytes"] + (
-        moved.astype(jnp.int32) * cfg.base_bytes
+    gpt, rmap, stats = _mapping_and_stats(
+        cfg, state.gpt, state.rmap, state.stats, pages, safe_pages, old_gpa,
+        new_gpa, do_move, ok, n_sel,
     )
-    stats["tlb_shootdowns"] = stats["tlb_shootdowns"] + (
-        moved_per_row > 0
-    ).sum().astype(jnp.int32)
     return dataclasses_replace(
         state,
         gpt=gpt,
@@ -161,12 +184,14 @@ def consolidate_batches(
 # multi-tenant batched rounds (one Algorithm-1 invocation per guest at once)
 # --------------------------------------------------------------------------
 def _alloc_regions_ragged(
-    cfg: GpacConfig, state: TieredState, hp_pad_idx: jax.Array
+    cfg: GpacConfig, rmap: jax.Array, hp_pad_idx: jax.Array
 ) -> jax.Array:
     """Per-guest fresh region: the first fully-free huge page of each guest's
     GPA segment, found through the padded segment table ``hp_pad_idx``
-    (``int32[n_guests, max_hp]``, -1 past each segment). -1 = -ENOMEM."""
-    free = (state.rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) == FREE).all(axis=1)
+    (``int32[n_guests, max_hp]``, -1 past each segment). -1 = -ENOMEM.
+    Takes the raw ``rmap`` so the host-partitioned engine (which carries no
+    full ``TieredState``) can share it."""
+    free = (rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) == FREE).all(axis=1)
     fp = (hp_pad_idx >= 0) & free[jnp.maximum(hp_pad_idx, 0)]
     first = jnp.argmax(fp, axis=1)
     region = jnp.take_along_axis(hp_pad_idx, first[:, None], axis=1)[:, 0]
@@ -193,7 +218,9 @@ def consolidate_pages_ragged(
         raise ValueError(
             f"pages must be int32[{spec.n_guests}, {cfg.hp_ratio}], got {pages.shape}"
         )
-    region = _alloc_regions_ragged(cfg, state, jnp.asarray(spec.hp_pad_index()))
+    region = _alloc_regions_ragged(
+        cfg, state.rmap, jnp.asarray(spec.hp_pad_index())
+    )
     return _apply_consolidation(cfg, state, pages, region)
 
 
@@ -211,7 +238,7 @@ def consolidate_rounds(
     device passes only its own guests' rows)."""
 
     def body(st, round_pages):
-        region = _alloc_regions_ragged(cfg, st, hp_pad_idx)
+        region = _alloc_regions_ragged(cfg, st.rmap, hp_pad_idx)
         return _apply_consolidation(cfg, st, round_pages.astype(jnp.int32), region), None
 
     state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
@@ -253,7 +280,7 @@ def consolidate_pages_multi(
 ) -> TieredState:
     """Deprecated symmetric wrapper: one round over N equal GPA segments."""
     hp_pad = _uniform_hp_pad(cfg, pages.shape[0], hp_per_guest)
-    region = _alloc_regions_ragged(cfg, state, hp_pad)
+    region = _alloc_regions_ragged(cfg, state.rmap, hp_pad)
     return _apply_consolidation(cfg, state, pages.astype(jnp.int32), region)
 
 
@@ -267,3 +294,87 @@ def consolidate_batches_multi(
     segments."""
     hp_pad = _uniform_hp_pad(cfg, batches.shape[0], hp_per_guest)
     return consolidate_rounds(cfg, state, batches, hp_pad)
+
+
+# --------------------------------------------------------------------------
+# host-partitioned rounds (DESIGN.md §11: hp-owned payload, no slot pools)
+# --------------------------------------------------------------------------
+def _apply_consolidation_local(
+    cfg: GpacConfig,
+    gpt: jax.Array,
+    rmap: jax.Array,
+    data: jax.Array,  # dtype[h_loc, hp_ratio, base_elems] hp-owned payload
+    re_loc: jax.Array,  # int32[h_loc] local region_epoch rows
+    epoch: jax.Array,
+    stats: dict,
+    pages: jax.Array,  # int32[n, hp_ratio] logical ids, -1 padded
+    region: jax.Array,  # int32[n] fresh region per row, -1 = -ENOMEM
+    hp_lo: jax.Array,  # first huge page of this device's block range
+):
+    """:func:`_apply_consolidation` on the host-partitioned layout.
+
+    The mapping updates are byte-identical; the data copy runs on the
+    device's hp-owned payload rows -- huge page ``h`` lives at
+    ``data[h - hp_lo]``, which equals the slot-indexed pool row
+    ``pools[block_table[h]]`` of the replicated state, so gathering source
+    pages by huge page and scattering into the fresh region's row is
+    bit-for-bit the replicated dual-pool copy. Sources and regions both sit
+    in the calling guest's own GPA segment, hence inside this device's range.
+    """
+    valid = (pages >= 0) & (pages < cfg.n_logical)
+    ok = region >= 0
+    n_sel = valid.sum(axis=1)
+
+    safe_pages = jnp.where(valid, pages, 0)
+    old_gpa = gpt[safe_pages]  # [n, hp_ratio]
+    off = jnp.arange(cfg.hp_ratio, dtype=jnp.int32)
+    new_gpa = region[:, None] * cfg.hp_ratio + off
+    do_move = valid & ok[:, None]
+
+    h_loc = data.shape[0]
+    src_row = jnp.clip(
+        jnp.where(do_move, old_gpa // cfg.hp_ratio - hp_lo, 0), 0, h_loc - 1
+    )
+    payload = data[src_row, old_gpa % cfg.hp_ratio]  # [n, hp_ratio, elems]
+    dst_row = jnp.where(do_move, region[:, None] - hp_lo, h_loc)
+    data = data.at[dst_row, jnp.broadcast_to(off, pages.shape)].set(
+        payload, mode="drop"
+    )
+    re_loc = re_loc.at[jnp.where(ok, region - hp_lo, h_loc)].set(
+        epoch, mode="drop"
+    )
+    gpt, rmap, stats = _mapping_and_stats(
+        cfg, gpt, rmap, stats, pages, safe_pages, old_gpa, new_gpa, do_move,
+        ok, n_sel,
+    )
+    return gpt, rmap, data, re_loc, stats
+
+
+def consolidate_rounds_local(
+    cfg: GpacConfig,
+    gpt: jax.Array,
+    rmap: jax.Array,
+    data: jax.Array,
+    re_loc: jax.Array,
+    epoch: jax.Array,
+    stats: dict,
+    batches: jax.Array,  # int32[n_rows, max_batches, hp_ratio]
+    hp_pad_idx: jax.Array,  # int32[n_rows, max_hp] this device's GPA rows
+    hp_lo: jax.Array,
+):
+    """:func:`consolidate_rounds` for the host-partitioned engine: round-major
+    Algorithm-1 invocations over this device's own guest rows, with the data
+    copy on the hp-owned payload (``data``) instead of the slot pools."""
+
+    def body(carry, round_pages):
+        gpt, rmap, data, re_loc, stats = carry
+        region = _alloc_regions_ragged(cfg, rmap, hp_pad_idx)
+        return _apply_consolidation_local(
+            cfg, gpt, rmap, data, re_loc, epoch, stats,
+            round_pages.astype(jnp.int32), region, hp_lo,
+        ), None
+
+    carry, _ = jax.lax.scan(
+        body, (gpt, rmap, data, re_loc, stats), jnp.swapaxes(batches, 0, 1)
+    )
+    return carry

@@ -602,12 +602,19 @@ def run(
     return _drive_chunks(chunk_fn, state, by_window, wps, collect)
 
 
+# collectors with a host-partitioned implementation (repro.core.sharding
+# computes them from the per-window candidate exchange without ever
+# materializing the replicated host state)
+HOST_SHARDED_COLLECTORS = ("hits", "near_blocks")
+
+
 def run_sharded(
     spec: EngineSpec,
     state: TieredState,
     traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
     *,
     mesh=None,
+    host_sharded: bool = True,
     policy: str = "memtierd",
     backend: str = "ipt",
     use_gpac: bool = True,
@@ -617,7 +624,7 @@ def run_sharded(
     strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
 ) -> tuple[TieredState, dict]:
-    """:func:`run`, device-sharded over the guest axis (DESIGN.md §9).
+    """:func:`run`, device-sharded over the guest axis (DESIGN.md §9, §11).
 
     ``mesh`` is a 1-D ``"guest"`` mesh (:func:`repro.core.sharding.
     guest_mesh`); ``None`` builds one over every local device and **falls
@@ -626,8 +633,20 @@ def run_sharded(
     mesh are padded with no-op segment rows. Results are bit-for-bit equal
     to :func:`run` on any mesh size: per-guest phases shard over disjoint
     segments, the access histograms and GPAC writes merge through exact
-    integer / bit-pattern collectives, and the shared host near-tier tick
-    runs replicated on the merged state (deterministic arbitration).
+    integer / bit-pattern collectives, and the host near-tier tick is
+    deterministic either way.
+
+    ``host_sharded=True`` (the default) additionally partitions the host
+    state itself by contiguous block ranges (DESIGN.md §11): each device
+    carries only its own range of the block table, host telemetry and
+    payload, scores promotion/demotion locally, and one arbitration
+    exchange per window resolves cross-partition contention bit-for-bit
+    against the replicated tick -- per-device host-state bytes scale
+    ~1/n_devices (``sharding.host_state_bytes_sharded``). It requires a
+    host-partitioned tick for ``policy`` (``tiering.sharded_ticks()``) and
+    host-sharded collectors (:data:`HOST_SHARDED_COLLECTORS`);
+    ``host_sharded=False`` keeps the replicated host state and supports any
+    registered policy/collector.
     """
     from repro.core import sharding
 
@@ -647,16 +666,38 @@ def run_sharded(
     if n_w == 0:
         return state, {}
     n_shards = sharding.mesh_size(mesh)
-    tables = sharding.guest_tables(spec, n_shards)
     padded = sharding.pad_guest_rows(traces, n_shards)  # [G_pad, n_w, k]
     by_window = np.ascontiguousarray(np.transpose(padded, (1, 0, 2)))
 
-    def chunk_fn(st, chunk):
-        return sharding.run_chunk_sharded(
-            spec, mesh, st, chunk, tables, policy=policy, backend=backend,
-            use_gpac=use_gpac, max_batches=max_batches, budget=budget,
-            collect=collect,
+    if host_sharded:
+        unsupported = tuple(
+            c for c in collect if c not in HOST_SHARDED_COLLECTORS
         )
+        if unsupported:
+            raise ValueError(
+                f"collectors {unsupported} have no host-sharded "
+                f"implementation (host-sharded collectors: "
+                f"{HOST_SHARDED_COLLECTORS}); pass host_sharded=False to "
+                f"run them on the replicated host state"
+            )
+        tiering.sharded_tick_fns(policy)  # fail fast on unsupported policies
+        _, tables = sharding.host_tables(spec, n_shards)
+
+        def chunk_fn(st, chunk):
+            return sharding.run_chunk_host_sharded(
+                spec, mesh, st, chunk, tables, policy=policy,
+                backend=backend, use_gpac=use_gpac, max_batches=max_batches,
+                budget=budget, collect=collect,
+            )
+    else:
+        tables = sharding.guest_tables(spec, n_shards)
+
+        def chunk_fn(st, chunk):
+            return sharding.run_chunk_sharded(
+                spec, mesh, st, chunk, tables, policy=policy,
+                backend=backend, use_gpac=use_gpac, max_batches=max_batches,
+                budget=budget, collect=collect,
+            )
 
     wps = _round_wps(n_w, windows_per_step, strict_wps)
     return _drive_chunks(chunk_fn, state, by_window, wps, collect)
@@ -673,16 +714,21 @@ def run_series(
     """:func:`run` + the per-VM time series the at-scale figures plot
     (near blocks, per-window hit rate, modeled throughput). Passing a
     ``mesh`` drives the windows through :func:`run_sharded` instead (the
-    at-scale figures shard their guest axis end-to-end this way)."""
+    at-scale figures shard their guest axis end-to-end this way;
+    ``host_sharded=`` threads through and is dropped on the no-mesh path)."""
     n_g = spec.n_guests
     traces = np.asarray(traces)
+    host_sharded = kw.pop("host_sharded", True)
     if traces.ndim == 3 and traces.shape[1] == 0:
         return state, dict(
             near_blocks=np.zeros((0, n_g), np.int64),
             hit_rate=np.zeros((0, n_g)),
             throughput=np.zeros((0, n_g)),
         )
-    driver = run if mesh is None else partial(run_sharded, mesh=mesh)
+    driver = (
+        run if mesh is None
+        else partial(run_sharded, mesh=mesh, host_sharded=host_sharded)
+    )
     state, out = driver(
         spec, state, traces, collect=("hits", "near_blocks"), **kw
     )

@@ -38,6 +38,15 @@ nothing, and own nothing, so they are end-to-end no-ops.
 Everything degrades to a no-op without a mesh, as ``repro.models.dist.Dist``
 does: :func:`guest_mesh` returns ``None`` on a single-device host and
 ``engine.run_sharded`` falls back to ``engine.run``.
+
+The second half of this module is the **host-partitioned near tier**
+(DESIGN.md §11, ``engine.run_sharded(host_sharded=True)``): instead of
+replicating the host state, each device carries only its own contiguous
+block range (:class:`HostPartition`) with the payload stored per huge page,
+scores promotion/demotion locally, and one arbitration exchange per window
+(``repro.core.tiering``'s sharded ticks) resolves cross-partition
+contention bit-for-bit against the replicated tick -- per-device host-state
+bytes scale ~1/n_devices.
 """
 from __future__ import annotations
 
@@ -52,7 +61,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import address_space as asp
 from repro.core import gpac, telemetry, tiering
-from repro.core.types import GpacConfig, TieredState
+from repro.core.types import FREE, GpacConfig, TieredState
 
 AXIS = "guest"
 
@@ -348,4 +357,489 @@ def run_chunk_sharded(
         jnp.asarray(tables["logical_lo"]),
         jnp.asarray(tables["logical_pad"]),
         jnp.asarray(tables["hp_pad"]),
+    )
+
+
+# ==========================================================================
+# host-partitioned near tier (DESIGN.md §11)
+#
+# The replicated-host path above still gives every device the full host
+# state (block_table, slot pools, host telemetry), so per-device memory does
+# not scale with the mesh. The host-partitioned path carries the host state
+# **partitioned by contiguous block ranges**: device d owns exactly the huge
+# pages of its own guests' GPA segments (guest blocks are contiguous and
+# guests are dealt to devices in contiguous blocks, so guest ownership and
+# range ownership coincide), holding only
+#
+#   * its local rows of block_table / host_counts / host_hist /
+#     last_touch_epoch / region_epoch, and
+#   * the **hp-owned payload** ``data[h - hp_lo]`` -- huge page h's bytes,
+#     which equal the replicated ``pools[block_table[h]]`` row. Data follows
+#     the huge page, so an arbitrated promotion/demotion only relabels slots
+#     (block_table writes); no payload crosses devices, and ``slot_owner``
+#     (the label inverse) is reconstructed once per chunk.
+#
+# Per window there is exactly ONE collective: per-partition tick candidate
+# sets (repro.core.tiering's sharded (prepare, apply) pairs), a few scalar
+# sums, and the per-guest collector rows share one psum. The full TieredState
+# is materialized only at chunk boundaries (slice on entry, ownership-psum on
+# exit), so per-device host-state bytes scale ~1/n_shards for the whole scan.
+# ==========================================================================
+# replicated host-state bytes per huge page: block_table + slot_owner +
+# host_counts + last_touch_epoch + region_epoch (int32) + host_hist (uint8)
+HOST_META_BYTES = 4 * 5 + 1
+# the partitioned carry drops slot_owner (reconstructed at chunk exit)
+LOCAL_META_BYTES = 4 * 4 + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class HostPartition:
+    """Contiguous per-device block ranges of the host near-tier state.
+
+    Device ``d`` owns huge pages ``[hp_lo[d], hp_hi[d])`` -- its own guests'
+    GPA segments. Ranges tile ``[0, n_gpa_hp)``; devices holding only
+    padding guests own an empty range. ``h_loc`` is the widest range (every
+    device's local arrays are padded to it with -1 rows)."""
+
+    hp_lo: tuple[int, ...]
+    hp_hi: tuple[int, ...]
+    h_loc: int
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.hp_lo)
+
+    def hp_ids(self) -> np.ndarray:
+        """int32[n_shards, h_loc]: global block ids per device, -1 padded."""
+        out = np.full((self.n_shards, self.h_loc), -1, np.int32)
+        for d, (lo, hi) in enumerate(zip(self.hp_lo, self.hp_hi)):
+            out[d, : hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        return out
+
+
+def host_partition(spec, n_shards: int) -> HostPartition:
+    """Partition the host block space by the device-contiguous guest blocks
+    of ``engine.run_sharded``'s guest dealing."""
+    g_loc = padded_guest_count(spec.n_guests, n_shards) // n_shards
+    lo, hi = [], []
+    for d in range(n_shards):
+        a = min(d * g_loc, spec.n_guests)
+        z = min((d + 1) * g_loc, spec.n_guests)
+        lo.append(spec.hp_offsets[a])
+        hi.append(spec.hp_offsets[z])
+    h_loc = max(1, max(h - l for l, h in zip(lo, hi)))
+    return HostPartition(tuple(lo), tuple(hi), h_loc)
+
+
+def host_state_bytes(cfg: GpacConfig) -> int:
+    """Bytes of host near-tier state each device holds on the replicated
+    path: block/slot tables, host telemetry, and both payload pools."""
+    payload = cfg.hp_ratio * cfg.base_elems * jnp.dtype(cfg.dtype).itemsize
+    return cfg.n_gpa_hp * (HOST_META_BYTES + payload)
+
+
+def host_state_bytes_sharded(cfg: GpacConfig, part: HostPartition) -> int:
+    """Bytes of the partitioned host-state carry per device (uniform: every
+    device pads its range to the widest one)."""
+    payload = cfg.hp_ratio * cfg.base_elems * jnp.dtype(cfg.dtype).itemsize
+    return part.h_loc * (LOCAL_META_BYTES + payload)
+
+
+def host_tables(spec, n_shards: int) -> tuple[HostPartition, dict]:
+    """Guest segment tables plus the host-partition tables the partitioned
+    chunk driver shards over the mesh."""
+    part = host_partition(spec, n_shards)
+    tables = guest_tables(spec, n_shards)
+    tables.update(
+        hp_ids=part.hp_ids(),
+        hp_lo=np.asarray(part.hp_lo, np.int32),
+        hp_hi=np.asarray(part.hp_hi, np.int32),
+    )
+    return part, tables
+
+
+def _slice_host_local(cfg: GpacConfig, state: TieredState, hp_ids: jax.Array) -> dict:
+    """Gather this device's host-state rows out of a replicated state.
+
+    Padded rows get inert sentinels (slot ``n_gpa_hp`` classifies as far and
+    scatters off every table). The payload row of huge page ``h`` is pulled
+    through its current slot -- ``data[row(h)] == pools[block_table[h]]`` is
+    the layout invariant the whole partitioned path maintains."""
+    v = hp_ids >= 0
+    t = jnp.maximum(hp_ids, 0)
+    bt = jnp.where(v, state.block_table[t], cfg.n_gpa_hp)
+    slot = jnp.where(v, bt, 0)
+    flat = slot[:, None] * cfg.hp_ratio + jnp.arange(cfg.hp_ratio)[None, :]
+    near_rows = state.near_pool.reshape(-1, cfg.base_elems)
+    far_rows = state.far_pool.reshape(-1, cfg.base_elems)
+    is_near = flat < cfg.n_near * cfg.hp_ratio
+    data = jnp.where(
+        is_near[..., None],
+        near_rows[jnp.where(is_near, flat, 0)],
+        far_rows[jnp.where(is_near, 0, flat - cfg.n_near * cfg.hp_ratio)],
+    )
+    return dict(
+        bt=bt,
+        hc=jnp.where(v, state.host_counts[t], 0),
+        hh=jnp.where(v, state.host_hist[t], 0).astype(jnp.uint8),
+        lt=jnp.where(v, state.last_touch_epoch[t], 0),
+        re=jnp.where(v, state.region_epoch[t], -1),
+        data=jnp.where(v[:, None, None], data, 0),
+    )
+
+
+def _spread_hp(x_loc: jax.Array, hp_ids: jax.Array, n: int, fill) -> jax.Array:
+    """Scatter local block rows into a full-shape view filled with ``fill``
+    elsewhere (only ever *read* at this device's own blocks)."""
+    safe = jnp.where(hp_ids >= 0, hp_ids, n)
+    return jnp.full((n + 1,), fill, x_loc.dtype).at[safe].set(x_loc)[:n]
+
+
+def _scatter_zero(x_loc: jax.Array, hp_ids: jax.Array, n: int) -> jax.Array:
+    """Local rows placed at their global positions in zeros: summed across
+    devices (ranges tile the space) this reconstructs the full array."""
+    safe = jnp.where(hp_ids >= 0, hp_ids, n)
+    return jnp.zeros((n + 1,), x_loc.dtype).at[safe].set(x_loc)[:n]
+
+
+def _bits(x: jax.Array) -> jax.Array:
+    """Bit-pattern view for exact integer collectives (see _owned_bits)."""
+    if jnp.issubdtype(x.dtype, jnp.integer) and x.dtype.itemsize <= 4:
+        return x
+    if x.dtype.itemsize == 4:
+        return jax.lax.bitcast_convert_type(x, jnp.int32)
+    return jax.lax.bitcast_convert_type(x, jnp.uint8)
+
+
+def _pool_contrib(cfg: GpacConfig, loc: dict, hp_ids: jax.Array, near: bool) -> jax.Array:
+    """This device's bit-pattern contribution to one slot pool: its hp-owned
+    payload rows scattered to their current slots. block_table is a
+    permutation, so across devices every pool row has exactly one
+    contributor and the psum is bit-exact."""
+    bits = _bits(loc["data"])
+    valid = hp_ids >= 0
+    slot = loc["bt"]
+    if near:
+        row = jnp.where(valid & (slot < cfg.n_near), slot, cfg.n_near)
+        n_rows = cfg.n_near
+    else:
+        row = jnp.where(valid & (slot >= cfg.n_near), slot - cfg.n_near, cfg.n_far)
+        n_rows = cfg.n_far
+    out = jnp.zeros((n_rows,) + bits.shape[1:], bits.dtype)
+    return out.at[row].set(bits, mode="drop")
+
+
+def _place_block(x: jax.Array, n_shards: int) -> jax.Array:
+    """This device's candidate block at its mesh position in zeros: the
+    shared psum concatenates all devices' nominations."""
+    return jnp.zeros((n_shards,) + x.shape, x.dtype).at[
+        jax.lax.axis_index(AXIS)
+    ].set(x)
+
+
+def _view_state(cfg, gpt, rmap, gc, ih, re_view, epoch, stats) -> TieredState:
+    """A TieredState view for the guest-side GPAC classifiers: real guest
+    arrays + the local region_epoch spread, placeholder host arrays (the
+    telemetry/filter path never reads block tables or pools)."""
+    z = jnp.zeros((1,), jnp.int32)
+    zp = jnp.zeros((1, 1, 1), cfg.dtype)
+    return TieredState(
+        gpt=gpt, rmap=rmap, block_table=z, slot_owner=z, near_pool=zp,
+        far_pool=zp, guest_counts=gc, ipt_hist=ih, host_counts=z,
+        host_hist=jnp.zeros((1,), jnp.uint8), last_touch_epoch=z,
+        region_epoch=re_view, epoch=epoch, stats=stats,
+    )
+
+
+def _near_blocks_local(cfg: GpacConfig, alloc: jax.Array, bt: jax.Array,
+                       hp_lo: jax.Array, hp_pad: jax.Array) -> jax.Array:
+    """Per own guest: allocated blocks currently in the near tier, counted
+    over this device's local block rows (pre-tick; the arbitrated swap
+    deltas correct it to post-tick replicatedly)."""
+    h_loc = bt.shape[0]
+    row = jnp.clip(jnp.where(hp_pad >= 0, hp_pad - hp_lo, 0), 0, h_loc - 1)
+    good = alloc & (bt < cfg.n_near)
+    seg = (hp_pad >= 0) & good[row]
+    return seg.sum(axis=1).astype(jnp.int32)
+
+
+def _near_blocks_delta(spec, swaps, g_pad: int) -> jax.Array:
+    """Replicated per-guest near-block delta of the arbitrated swap rounds
+    (promoted allocated blocks enter near, demoted ones leave)."""
+    hp_off = jnp.asarray(spec.hp_offsets, jnp.int32)
+    delta = jnp.zeros((g_pad,), jnp.int32)
+    for far, near, ok in swaps:
+        for cand, sign in ((far, 1), (near, -1)):
+            g = jnp.searchsorted(hp_off, cand["id"], side="right") - 1
+            w = jnp.where(ok & (cand["alloc"] > 0), sign, 0)
+            delta = delta.at[jnp.where(ok, g, g_pad)].add(w, mode="drop")
+    return delta
+
+
+def _host_sharded_window(
+    spec,
+    n_shards: int,
+    carry: dict,
+    accesses: jax.Array,  # int32[G_loc, k]
+    logical_lo: jax.Array,
+    logical_pad: jax.Array,
+    hp_pad: jax.Array,
+    hp_ids: jax.Array,
+    hp_lo: jax.Array,
+    hp_hi: jax.Array,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[dict, dict]:
+    """One engine window on the partitioned host state. Bit-for-bit equal to
+    ``engine._window`` on the unpadded guests; exactly one collective."""
+    from repro.core import consolidator
+    from repro.core import filter as pfilter
+
+    cfg = spec.cfg
+    gpt, rmap = carry["gpt"], carry["rmap"]
+    gc, ih = carry["guest_counts"], carry["ipt_hist"]
+    epoch, stats = carry["epoch"], dict(carry["stats"])
+    loc = dict(carry["loc"])
+
+    # ---- 1. access phase (local: own guests touch own blocks) -----------
+    ids = jnp.where(accesses >= 0, accesses + logical_lo[:, None], -1)
+    valid = (ids >= 0) & (ids < cfg.n_logical)
+    hp = gpt[jnp.where(valid, ids, 0)] // cfg.hp_ratio
+    bt_view = _spread_hp(loc["bt"], hp_ids, cfg.n_gpa_hp, jnp.int32(cfg.n_gpa_hp))
+    slot = bt_view[hp]
+    near_loc = (valid & (slot < cfg.n_near)).sum(axis=1).astype(jnp.int32)
+    far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1).astype(jnp.int32)
+    h = asp.access_histogram(cfg, ids, valid)
+    gc = gc + h
+    inc_full = asp.host_histogram(cfg, gpt, h)
+    inc_loc = jnp.where(hp_ids >= 0, inc_full[jnp.maximum(hp_ids, 0)], 0)
+    loc["hc"] = loc["hc"] + inc_loc
+    loc["lt"] = jnp.where(inc_loc > 0, jnp.maximum(loc["lt"], epoch), loc["lt"])
+    stats["near_hits"] = stats["near_hits"] + near_loc.sum()
+    stats["far_hits"] = stats["far_hits"] + far_loc.sum()
+
+    # ---- 2. GPAC phase (own segment rows, hp-owned payload) -------------
+    if use_gpac:
+        re_view = _spread_hp(loc["re"], hp_ids, cfg.n_gpa_hp, jnp.int32(-1))
+        view = _view_state(cfg, gpt, rmap, gc, ih, re_view, epoch, stats)
+        hot = telemetry.hot_mask(cfg, view, backend)
+        score = pfilter.candidate_score(
+            cfg, view, hot, jnp.asarray(spec.cl_per_logical())
+        )
+        batches = pfilter.select_batches_from_rows(
+            cfg, score, logical_pad, max_batches
+        )
+        gpt, rmap, loc["data"], loc["re"], stats = (
+            consolidator.consolidate_rounds_local(
+                cfg, gpt, rmap, loc["data"], loc["re"], epoch, stats,
+                batches, hp_pad, hp_lo,
+            )
+        )
+
+    # ---- 3. nominate + the window's single collective -------------------
+    alloc_full = (rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) != FREE).any(axis=1)
+    L = dict(
+        hp_ids=hp_ids, hp_lo=hp_lo, hp_hi=hp_hi, bt=loc["bt"], hc=loc["hc"],
+        hh=loc["hh"], lt=loc["lt"],
+        alloc=jnp.where(hp_ids >= 0, alloc_full[jnp.maximum(hp_ids, 0)], False),
+    )
+    prepare, apply = tiering.sharded_tick_fns(policy)
+    payload = prepare(cfg, L, budget)
+    exchange = dict(
+        cands=jax.tree_util.tree_map(
+            lambda x: _place_block(x, n_shards), payload["cands"]
+        ),
+        sums=payload["sums"],
+        near=_spread_rows(near_loc, n_shards),
+        far=_spread_rows(far_loc, n_shards),
+    )
+    if "near_blocks" in collect:
+        exchange["near_blocks"] = _spread_rows(
+            _near_blocks_local(cfg, L["alloc"], loc["bt"], hp_lo, hp_pad),
+            n_shards,
+        )
+    merged = jax.lax.psum(exchange, AXIS)
+
+    # ---- 4. arbitration: replicated decisions, local block-table writes -
+    loc["bt"], tick_stats, swaps = apply(
+        cfg, L, dict(cands=merged["cands"], sums=merged["sums"]), budget
+    )
+    on_d0 = jax.lax.axis_index(AXIS) == 0
+    for s in tick_stats:  # replicated deltas: count them on one device only
+        stats[s] = stats[s] + jnp.where(on_d0, tick_stats[s], 0)
+
+    # ---- 5. window roll (telemetry.end_window, split by residency) ------
+    ih = ((ih << 1) | (gc > 0).astype(jnp.uint8)).astype(jnp.uint8)
+    loc["hh"] = ((loc["hh"] << 1) | (loc["hc"] > 0).astype(jnp.uint8)).astype(jnp.uint8)
+    gc = jnp.zeros_like(gc)
+    loc["hc"] = jnp.zeros_like(loc["hc"])
+    epoch = epoch + 1
+
+    # ---- 6. collector outputs (host-sharded implementations) ------------
+    out = {}
+    for name in collect:
+        if name == "hits":
+            emitted = dict(
+                near_hits=merged["near"][: spec.n_guests],
+                far_hits=merged["far"][: spec.n_guests],
+            )
+        elif name == "near_blocks":
+            pre = merged["near_blocks"]
+            emitted = dict(
+                near_blocks=(pre + _near_blocks_delta(spec, swaps, pre.shape[0]))[
+                    : spec.n_guests
+                ]
+            )
+        else:  # pragma: no cover - engine.run_sharded validates upfront
+            raise ValueError(f"collector {name!r} has no host-sharded form")
+        clash = set(emitted) & set(out)
+        if clash:
+            raise ValueError(
+                f"collector {name!r} emits keys {sorted(clash)} already "
+                f"produced by an earlier collector in {collect}"
+            )
+        out.update(emitted)
+
+    new_carry = dict(
+        gpt=gpt, rmap=rmap, guest_counts=gc, ipt_hist=ih, epoch=epoch,
+        stats=stats, loc=loc,
+    )
+    return new_carry, out
+
+
+def _merge_host_final(
+    cfg: GpacConfig,
+    base: TieredState,
+    carry: dict,
+    logical_pad: jax.Array,
+    hp_pad: jax.Array,
+    hp_ids: jax.Array,
+) -> TieredState:
+    """Chunk-exit reconstruction of the replicated TieredState: one psum of
+    ownership-placed contributions (segment rows for guest arrays, block
+    ranges for host arrays, bit patterns for the pools), then ``slot_owner``
+    recomputed as the merged block table's inverse -- exactly the inverse
+    :func:`tiering.swap_blocks` maintains."""
+    loc = carry["loc"]
+    own_logical = _own_mask(logical_pad, cfg.n_logical)
+    own_gpa = jnp.repeat(_own_mask(hp_pad, cfg.n_gpa_hp), cfg.hp_ratio)
+    d0 = (jax.lax.axis_index(AXIS) == 0).astype(jnp.int32)
+    contrib = dict(
+        gpt=_owned_bits(carry["gpt"], own_logical),
+        rmap=_owned_bits(carry["rmap"], own_gpa),
+        guest_counts=_owned_bits(carry["guest_counts"], own_logical),
+        ipt_hist=_owned_bits(carry["ipt_hist"], own_logical),
+        bt=_scatter_zero(loc["bt"], hp_ids, cfg.n_gpa_hp),
+        hc=_scatter_zero(loc["hc"], hp_ids, cfg.n_gpa_hp),
+        hh=_scatter_zero(loc["hh"], hp_ids, cfg.n_gpa_hp),
+        lt=_scatter_zero(loc["lt"], hp_ids, cfg.n_gpa_hp),
+        re=_scatter_zero(loc["re"], hp_ids, cfg.n_gpa_hp),
+        near=_pool_contrib(cfg, loc, hp_ids, near=True),
+        far=_pool_contrib(cfg, loc, hp_ids, near=False),
+        stats={k: carry["stats"][k] - base.stats[k] for k in base.stats},
+        epoch=(carry["epoch"] - base.epoch) * d0,
+    )
+    m = jax.lax.psum(contrib, AXIS)
+    slot_owner = jnp.zeros((cfg.n_slots,), jnp.int32).at[m["bt"]].set(
+        jnp.arange(cfg.n_gpa_hp, dtype=jnp.int32)
+    )
+    return dataclasses.replace(
+        base,
+        gpt=m["gpt"],
+        rmap=m["rmap"],
+        guest_counts=m["guest_counts"],
+        ipt_hist=m["ipt_hist"],
+        block_table=m["bt"],
+        slot_owner=slot_owner,
+        host_counts=m["hc"],
+        host_hist=m["hh"],
+        last_touch_epoch=m["lt"],
+        region_epoch=m["re"],
+        near_pool=_from_bits(m["near"], base.near_pool),
+        far_pool=_from_bits(m["far"], base.far_pool),
+        stats={k: base.stats[k] + m["stats"][k] for k in base.stats},
+        epoch=base.epoch + m["epoch"],
+    )
+
+
+@lru_cache(maxsize=64)
+def _host_chunk_fn(
+    spec,  # canonical EngineSpec
+    mesh,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+):
+    """Compiled host-partitioned chunk driver: slice the replicated state
+    into per-device ranges, scan the windows on the partitioned carry, merge
+    back once at the chunk boundary."""
+    n_shards = mesh_size(mesh)
+    cfg = spec.cfg
+
+    def body(state, chunk, logical_lo, logical_pad, hp_pad, hp_ids, hp_lo, hp_hi):
+        hp_ids, hp_lo, hp_hi = hp_ids[0], hp_lo[0], hp_hi[0]
+        carry = dict(
+            gpt=state.gpt, rmap=state.rmap, guest_counts=state.guest_counts,
+            ipt_hist=state.ipt_hist, epoch=state.epoch, stats=state.stats,
+            loc=_slice_host_local(cfg, state, hp_ids),
+        )
+
+        def window(c, acc):
+            return _host_sharded_window(
+                spec, n_shards, c, acc, logical_lo, logical_pad, hp_pad,
+                hp_ids, hp_lo, hp_hi, policy, backend, use_gpac, max_batches,
+                budget, collect,
+            )
+
+        carry, ys = jax.lax.scan(window, carry, chunk)
+        return _merge_host_final(cfg, state, carry, logical_pad, hp_pad, hp_ids), ys
+
+    sharded = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(), P(None, AXIS, None), P(AXIS), P(AXIS, None), P(AXIS, None),
+            P(AXIS, None), P(AXIS), P(AXIS),
+        ),
+        out_specs=P(),
+        check_rep=False,
+    )
+    return jax.jit(sharded)
+
+
+def run_chunk_host_sharded(
+    spec,
+    mesh,
+    state: TieredState,
+    chunk: jax.Array,  # int32[n_windows, G_pad, k]
+    tables: dict,
+    *,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    """One scan-fused chunk of the host-partitioned engine
+    (``engine.run_sharded(host_sharded=True)``'s inner loop)."""
+    fn = _host_chunk_fn(
+        spec, mesh, policy, backend, use_gpac, max_batches, budget, collect
+    )
+    return fn(
+        state,
+        chunk,
+        jnp.asarray(tables["logical_lo"]),
+        jnp.asarray(tables["logical_pad"]),
+        jnp.asarray(tables["hp_pad"]),
+        jnp.asarray(tables["hp_ids"]),
+        jnp.asarray(tables["hp_lo"]),
+        jnp.asarray(tables["hp_hi"]),
     )

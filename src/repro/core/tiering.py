@@ -117,12 +117,19 @@ def swap_blocks(
     )
 
 
+def block_score_arrays(host_counts: jax.Array, host_hist: jax.Array) -> jax.Array:
+    """The host block score from its raw telemetry arrays (shared by the
+    replicated tick and the host-partitioned tick, which scores only a
+    device's local block range)."""
+    return (
+        host_counts.astype(jnp.int32) * 256
+        + _popcount_u8(host_hist).astype(jnp.int32)
+    )
+
+
 def _block_score(cfg: GpacConfig, state: TieredState) -> jax.Array:
     """Host's only view: current-window count + access-bit history."""
-    return (
-        state.host_counts.astype(jnp.int32) * 256
-        + _popcount_u8(state.host_hist).astype(jnp.int32)
-    )
+    return block_score_arrays(state.host_counts, state.host_hist)
 
 
 def _paired_ids(mask_a, score_a, mask_b, score_b, budget):
@@ -268,3 +275,345 @@ def tick(cfg: GpacConfig, state: TieredState, policy: str, **kw) -> TieredState:
             f"unknown tiering policy {policy!r} (have {policies()})"
         ) from None
     return fn(cfg, state, **kw)
+
+
+# ==========================================================================
+# host-partitioned tick (DESIGN.md §11)
+#
+# Each device holds one contiguous block range of the host state and runs the
+# promotion/demotion *scoring* only over it; one global arbitration round per
+# window -- a psum'd exchange of per-partition candidate sets plus a few
+# scalar sums -- resolves cross-partition near-memory contention bit-for-bit
+# against the replicated tick. A sharded tick is a (prepare, apply) pair:
+#
+#   prepare(cfg, L, budget) -> {"cands": {name: candidate dict}, "sums": {..}}
+#       runs pre-collective on the local block range, nominating per-side
+#       top-`budget` candidate sets (Nimble-style: placement decisions are
+#       local, reconciliation is a small global exchange).
+#   apply(cfg, L, merged, budget) -> (block_table', stats_delta, swaps)
+#       runs post-collective: arbitrates the merged candidate sets with the
+#       exact (score desc, block id asc) order `jax.lax.top_k` would give on
+#       the full array, then writes the winning swaps into this device's own
+#       block-table rows. `stats_delta` is replicated (the engine adds it on
+#       one device only); `swaps` is the arbitrated ((far, near, ok), ...)
+#       per-round tuple the collectors use to update per-guest block counts.
+#
+# `L` is the local-range context: {"hp_ids": int32[H] global block ids (-1
+# padded), "hp_lo"/"hp_hi": this device's contiguous range, "bt": local
+# block_table rows, "hc"/"hh"/"lt": local host telemetry, "alloc": bool[H]}.
+#
+# Bit-for-bit argument: the global top-k of any score contains at most k
+# entries from one partition, so per-partition top-k nominations cover it;
+# `rank_select` then reproduces top_k's tie order exactly because within a
+# partition top_k breaks ties by ascending local row == ascending block id,
+# and the pairwise rank uses (score desc, id asc) explicitly. Policies with
+# two rounds (memtierd, tpp) nominate round-2 candidates pessimistically
+# pre-swap; every block whose tier round 1 changed is itself an arbitrated
+# candidate, so round-2 masks are recomputed replicated via
+# `slots_after_swaps` -- still one collective per window.
+# ==========================================================================
+def _b(cfg: GpacConfig, budget: int) -> int:
+    """Effective per-side budget (matches ``_paired_ids``'s shape clamp)."""
+    return min(budget, cfg.n_gpa_hp)
+
+
+def _cand_kw(L: dict) -> dict:
+    return dict(
+        hp_ids=L["hp_ids"], slot=L["bt"],
+        alloc=L["alloc"].astype(jnp.int32), cnt=L["hc"].astype(jnp.int32),
+    )
+
+
+def nominate(
+    mask: jax.Array, val: jax.Array, b: int,
+    *, hp_ids: jax.Array, slot: jax.Array, alloc: jax.Array, cnt: jax.Array,
+) -> dict:
+    """Local top-``b`` candidate nomination over this device's block range.
+
+    Returns int32[b] fields: ``val`` (NEG past the valid tail), ``id``
+    (global block id, -1 padded), and the per-candidate metadata the
+    arbitration needs -- current ``slot``, ``alloc`` bit and raw ``cnt``
+    (host_counts). Local rows are in ascending-block-id order, so top_k's
+    tie-break by lowest row preserves the replicated tick's id order.
+    """
+    k = min(b, mask.shape[0])
+    v, i = jax.lax.top_k(jnp.where(mask & (hp_ids >= 0), val, NEG), k)
+    ok = v > NEG
+    out = dict(
+        val=v,
+        id=jnp.where(ok, hp_ids[i], -1),
+        slot=jnp.where(ok, slot[i], 0),
+        alloc=jnp.where(ok, alloc[i], 0),
+        cnt=jnp.where(ok, cnt[i], 0),
+    )
+    if k < b:
+        fill = dict(val=NEG, id=-1, slot=0, alloc=0, cnt=0)
+        out = {
+            f: jnp.concatenate(
+                [x, jnp.full((b - k,), fill[f], jnp.int32)]
+            ) for f, x in out.items()
+        }
+    return out
+
+
+def _flat_cands(c: dict) -> dict:
+    """Merged candidate blocks ``[n_shards, b]`` -> one flat candidate set."""
+    return {f: x.reshape(-1) for f, x in c.items()}
+
+
+def _concat_cands(a: dict, b: dict) -> dict:
+    return {f: jnp.concatenate([a[f], b[f]]) for f in a}
+
+
+def rank_select(c: dict, b: int) -> dict:
+    """Arbitrate a merged candidate set: the top-``b`` by (val desc, id asc).
+
+    Reproduces ``jax.lax.top_k`` over the full per-block array bit-for-bit
+    (top_k breaks ties by lowest index == lowest block id) provided the
+    candidate ids are unique and the set covers the global top-``b`` --
+    which per-partition top-``b`` nominations guarantee. Output slot ``j``
+    holds the rank-``j`` candidate; invalid tail is (NEG, -1, 0, 0, 0).
+    """
+    val, cid = c["val"], c["id"]
+    valid = (val > NEG) & (cid >= 0)
+    beats = valid[None, :] & (
+        (val[None, :] > val[:, None])
+        | ((val[None, :] == val[:, None]) & (cid[None, :] < cid[:, None]))
+    )
+    rank = beats.sum(axis=1)
+    pos = jnp.where(valid & (rank < b), rank, b)
+    fill = dict(val=NEG, id=-1, slot=0, alloc=0, cnt=0)
+    return {
+        f: jnp.full((b,), fill[f], jnp.int32).at[pos].set(x, mode="drop")
+        for f, x in c.items()
+    }
+
+
+def _pair_k(far: dict, near: dict) -> jax.Array:
+    return jnp.minimum((far["id"] >= 0).sum(), (near["id"] >= 0).sum())
+
+
+def swap_outcome(cfg: GpacConfig, far: dict, near: dict, k: jax.Array):
+    """Replicated outcome of one arbitrated swap round: which pairs commit
+    (same predicate as :func:`swap_blocks`) and the stats deltas."""
+    i = jnp.arange(far["id"].shape[0])
+    ok = (
+        (i < k)
+        & (far["id"] >= 0)
+        & (near["id"] >= 0)
+        & (far["slot"] >= cfg.n_near)
+        & (near["slot"] < cfg.n_near)
+    )
+    stats = dict(
+        promoted_blocks=(ok & (far["alloc"] > 0)).sum().astype(jnp.int32),
+        demoted_blocks=(ok & (near["alloc"] > 0)).sum().astype(jnp.int32),
+        tlb_shootdowns=(ok.sum() > 0).astype(jnp.int32),
+    )
+    return ok, stats
+
+
+def slots_after_swaps(
+    ids: jax.Array, slots: jax.Array, far: dict, near: dict, ok: jax.Array
+) -> jax.Array:
+    """Current slot of each candidate after a committed swap round (the
+    replicated slot ledger two-round policies consult for round 2)."""
+    fa = jnp.where(ok, far["id"], -2)
+    ne = jnp.where(ok, near["id"], -2)
+    mf = ids[:, None] == fa[None, :]
+    mn = ids[:, None] == ne[None, :]
+    out = jnp.where(mf.any(axis=1), (mf * near["slot"][None, :]).sum(axis=1), slots)
+    return jnp.where(mn.any(axis=1), (mn * far["slot"][None, :]).sum(axis=1), out)
+
+
+def apply_swaps_local(
+    bt: jax.Array, hp_lo: jax.Array, hp_hi: jax.Array,
+    far: dict, near: dict, ok: jax.Array,
+) -> jax.Array:
+    """Write an arbitrated swap round into this device's block-table rows.
+
+    Only the slot labels move -- in the hp-owned payload layout the data
+    already lives with its huge page, so cross-partition migration is free.
+    """
+    drop = bt.shape[0]
+
+    def upd(bt, ids, new_slot):
+        row = jnp.where(ok & (ids >= hp_lo) & (ids < hp_hi), ids - hp_lo, drop)
+        return bt.at[row].set(new_slot, mode="drop")
+
+    return upd(upd(bt, far["id"], near["slot"]), near["id"], far["slot"])
+
+
+# --------------------------------------------------------------------------
+# per-policy (prepare, apply) pairs
+# --------------------------------------------------------------------------
+def _memtierd_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
+    b = _b(cfg, budget)
+    kw = _cand_kw(L)
+    valid = L["hp_ids"] >= 0
+    score = block_score_arrays(L["hc"], L["hh"])
+    alloc, in_near = L["alloc"], L["bt"] < cfg.n_near
+    victim = jnp.where(alloc, score, NEG + 1)
+    zero = jnp.zeros_like(score)
+    return dict(cands=dict(
+        hot_far=nominate(valid & alloc & ~in_near & (score > 0), score, b, **kw),
+        victim=nominate(valid & in_near, -victim, b, **kw),
+        free_far=nominate(valid & ~alloc & ~in_near, zero, b, **kw),
+        # round 1 can demote up to b cold blocks out of the near tier, so
+        # nominate 2b to keep covering the post-swap global top-b
+        cold_near=nominate(valid & alloc & in_near & (score == 0), zero, 2 * b, **kw),
+    ), sums=dict())
+
+
+def _memtierd_apply(cfg: GpacConfig, L: dict, merged: dict, budget: int):
+    b = _b(cfg, budget)
+    C = {k: _flat_cands(v) for k, v in merged["cands"].items()}
+    # round 1: hottest far vs coldest near, only strictly-improving pairs
+    far = rank_select(C["hot_far"], b)
+    near = rank_select(C["victim"], b)
+    gain = jnp.where(
+        (far["id"] >= 0) & (near["id"] >= 0), far["val"] > -near["val"], False
+    )
+    k = jnp.minimum(_pair_k(far, near), gain.astype(jnp.int32).cumprod().sum())
+    ok1, d1 = swap_outcome(cfg, far, near, k)
+    bt = apply_swaps_local(L["bt"], L["hp_lo"], L["hp_hi"], far, near, ok1)
+
+    # round 2: proactive demotion of cold near blocks into free far blocks,
+    # masks recomputed on the post-round-1 placement via the slot ledger
+    def after(c):
+        return {**c, "slot": slots_after_swaps(c["id"], c["slot"], far, near, ok1)}
+
+    A2 = _concat_cands(after(C["free_far"]), after(near))
+    A2 = {**A2, "val": jnp.where(
+        (A2["id"] >= 0) & (A2["alloc"] == 0) & (A2["slot"] >= cfg.n_near), 0, NEG
+    )}
+    cn = after(C["cold_near"])
+    B2 = {**cn, "val": jnp.where(
+        (cn["id"] >= 0) & (cn["alloc"] > 0) & (cn["slot"] < cfg.n_near), 0, NEG
+    )}
+    far2 = rank_select(A2, b)
+    near2 = rank_select(B2, b)
+    ok2, d2 = swap_outcome(cfg, far2, near2, _pair_k(far2, near2))
+    bt = apply_swaps_local(bt, L["hp_lo"], L["hp_hi"], far2, near2, ok2)
+    return bt, {s: d1[s] + d2[s] for s in d1}, ((far, near, ok1), (far2, near2, ok2))
+
+
+def _autonuma_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
+    b = _b(cfg, budget)
+    kw = _cand_kw(L)
+    valid = L["hp_ids"] >= 0
+    alloc, in_near = L["alloc"], L["bt"] < cfg.n_near
+    cnt = L["hc"].astype(jnp.int32)
+    victim = jnp.where(alloc, L["lt"].astype(jnp.int32), NEG + 1)
+    return dict(cands=dict(
+        fault=nominate(valid & alloc & ~in_near & (cnt >= 2), cnt, b, **kw),
+        # nominate under the pressured superset mask (free-near victims sort
+        # first either way); `apply` re-filters once `pressured` is known
+        victim=nominate(valid & in_near, -victim, b, **kw),
+    ), sums=dict(near_used=(valid & alloc & in_near).sum()))
+
+
+def _autonuma_apply(
+    cfg: GpacConfig, L: dict, merged: dict, budget: int, pressure: float = 0.95
+):
+    b = _b(cfg, budget)
+    C = {k: _flat_cands(v) for k, v in merged["cands"].items()}
+    pressured = merged["sums"]["near_used"] >= jnp.int32(pressure * cfg.n_near)
+    far = rank_select(C["fault"], b)
+    vic = C["victim"]
+    vv = jnp.where(
+        (vic["id"] >= 0) & ((vic["alloc"] == 0) | pressured), vic["val"], NEG
+    )
+    near = rank_select({**vic, "val": vv}, b)
+    ok, d = swap_outcome(cfg, far, near, _pair_k(far, near))
+    bt = apply_swaps_local(L["bt"], L["hp_lo"], L["hp_hi"], far, near, ok)
+    return bt, d, ((far, near, ok),)
+
+
+def _tpp_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
+    b = _b(cfg, budget)
+    kw = _cand_kw(L)
+    valid = L["hp_ids"] >= 0
+    alloc, in_near = L["alloc"], L["bt"] < cfg.n_near
+    cnt = L["hc"].astype(jnp.int32)
+    lru = L["lt"].astype(jnp.int32)
+    zero = jnp.zeros_like(cnt)
+    return dict(cands=dict(
+        free_far=nominate(valid & ~in_near & ~alloc, zero, b, **kw),
+        near_lru=nominate(valid & in_near & alloc, -lru, b, **kw),
+        fault=nominate(valid & alloc & ~in_near & (cnt >= 2), cnt, b, **kw),
+        free_near=nominate(valid & in_near & ~alloc, zero, b, **kw),
+    ), sums=dict(
+        free_near=(valid & in_near & ~alloc).sum(),
+        demand=(valid & alloc & ~in_near & (cnt >= 2)).sum(),
+    ))
+
+
+def _tpp_apply(
+    cfg: GpacConfig, L: dict, merged: dict, budget: int, watermark: float = 0.1
+):
+    b = _b(cfg, budget)
+    C = {k: _flat_cands(v) for k, v in merged["cands"].items()}
+    want_free = jnp.int32(watermark * cfg.n_near)
+    demand = merged["sums"]["demand"]
+    need = jnp.maximum(jnp.minimum(want_free, demand),
+                       jnp.minimum(demand, budget))
+    n_demote = jnp.clip(need - merged["sums"]["free_near"], 0, budget)
+    # round 1: watermark demotion (coldest allocated near <-> free far)
+    farD = rank_select(C["free_far"], b)
+    nearD = rank_select(C["near_lru"], b)
+    ok1, d1 = swap_outcome(
+        cfg, farD, nearD, jnp.minimum(_pair_k(farD, nearD), n_demote)
+    )
+    bt = apply_swaps_local(L["bt"], L["hp_lo"], L["hp_hi"], farD, nearD, ok1)
+
+    # round 2: fault promotion into the freed space (post-swap masks)
+    def after(c):
+        return {**c, "slot": slots_after_swaps(c["id"], c["slot"], farD, nearD, ok1)}
+
+    A2 = _concat_cands(after(C["fault"]), after(nearD))
+    A2 = {**A2, "val": jnp.where(
+        (A2["id"] >= 0) & (A2["alloc"] > 0) & (A2["slot"] >= cfg.n_near)
+        & (A2["cnt"] >= 2), A2["cnt"], NEG
+    )}
+    B2 = _concat_cands(after(C["free_near"]), after(farD))
+    B2 = {**B2, "val": jnp.where(
+        (B2["id"] >= 0) & (B2["alloc"] == 0) & (B2["slot"] < cfg.n_near), 0, NEG
+    )}
+    far2 = rank_select(A2, b)
+    near2 = rank_select(B2, b)
+    ok2, d2 = swap_outcome(cfg, far2, near2, _pair_k(far2, near2))
+    bt = apply_swaps_local(bt, L["hp_lo"], L["hp_hi"], far2, near2, ok2)
+    return bt, {s: d1[s] + d2[s] for s in d1}, ((farD, nearD, ok1), (far2, near2, ok2))
+
+
+_SHARDED_TICKS: dict[str, tuple[Callable, Callable]] = {}
+
+
+def register_sharded_tick(name: str, prepare: Callable, apply: Callable):
+    """Register a host-partitioned (prepare, apply) tick for policy ``name``
+    (see the section comment above for the contract). Policies without one
+    still run everywhere except ``engine.run_sharded(host_sharded=True)``."""
+    if name in _SHARDED_TICKS:
+        raise ValueError(f"sharded tick for policy {name!r} already registered")
+    _SHARDED_TICKS[name] = (prepare, apply)
+
+
+def sharded_ticks() -> tuple[str, ...]:
+    """Names of policies with a host-partitioned tick."""
+    return tuple(_SHARDED_TICKS)
+
+
+def sharded_tick_fns(name: str) -> tuple[Callable, Callable]:
+    try:
+        return _SHARDED_TICKS[name]
+    except KeyError:
+        raise ValueError(
+            f"tiering policy {name!r} has no host-partitioned tick (have "
+            f"{sharded_ticks()}); register one with tiering."
+            f"register_sharded_tick or run with host_sharded=False"
+        ) from None
+
+
+register_sharded_tick("memtierd", _memtierd_prepare, _memtierd_apply)
+register_sharded_tick("autonuma", _autonuma_prepare, _autonuma_apply)
+register_sharded_tick("tpp", _tpp_prepare, _tpp_apply)

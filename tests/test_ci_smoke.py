@@ -1,0 +1,59 @@
+"""The CI smoke checks, de-inlined from .github/workflows/ci.yml.
+
+CI and `pytest -m smoke` invoke the SAME `scripts/ci_smoke_*.py` entry
+points, so the smoke code cannot drift from the library API: if a rename or
+signature change breaks the workflow's smoke steps, it breaks these tests
+first, locally.
+"""
+import importlib.util
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.smoke
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SCRIPTS = os.path.join(ROOT, "scripts")
+
+
+def load_script(name):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(SCRIPTS, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_ragged_smoke_runs_in_process():
+    assert load_script("ci_smoke_ragged").main() == 0
+
+
+def test_sharded_smoke_runs_on_forced_mesh():
+    """The 8-device smoke needs its own process: device count is fixed at
+    jax init, exactly like CI's smoke step sets XLA_FLAGS for it."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, "ci_smoke_sharded.py")],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "sharded engine smoke OK" in proc.stdout
+
+
+def test_sharded_smoke_refuses_wrong_device_count():
+    """Run in-process (single device): the script must fail loudly rather
+    than silently smoke-test a 1-device mesh."""
+    import jax
+
+    if jax.local_device_count() != 1:
+        pytest.skip("needs the suite's single-device environment")
+    with pytest.raises(AssertionError, match="device_count"):
+        load_script("ci_smoke_sharded").main()

@@ -91,6 +91,9 @@ class TestShardedSingleDevice:
             np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
 
     def test_chunking_and_collectors_match(self):
+        # the snapshot collector reads host-global state, so it only runs on
+        # the replicated-host path (host_sharded=False); the host-sharded
+        # default rejects it upfront (tests/test_host_sharding.py)
         spec, s0 = ragged_engine()
         traces = engine.guest_traces(spec, n_windows=6, accesses_per_window=128)
         mesh = sharding.guest_mesh(1)
@@ -98,7 +101,7 @@ class TestShardedSingleDevice:
                                     windows_per_step=3)
         sh_state, sh = engine.run_sharded(
             spec, s0, traces, mesh=mesh, collect=("snapshot",),
-            windows_per_step=3)
+            windows_per_step=3, host_sharded=False)
         assert_states_equal(ref_state, sh_state)
         for k in ref:
             np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
@@ -143,8 +146,11 @@ def check(n_guests, mesh_n, use_gpac, policy):
     traces = engine.guest_traces(spec, n_windows=4, accesses_per_window=192)
     mesh = sharding.guest_mesh(mesh_n)
     s_ref, a = engine.run(spec, state, traces, use_gpac=use_gpac, policy=policy)
+    # host_sharded=False: this matrix pins the replicated-host path; the
+    # host-partitioned default is pinned by tests/test_host_sharding.py
     s_sh, b = engine.run_sharded(
-        spec, state, traces, mesh=mesh, use_gpac=use_gpac, policy=policy)
+        spec, state, traces, mesh=mesh, use_gpac=use_gpac, policy=policy,
+        host_sharded=False)
     assert set(a) == set(b)
     for k in a:
         np.testing.assert_array_equal(a[k], b[k], err_msg=k)

@@ -1,0 +1,206 @@
+"""Host-partition edge cases: the arbitration round vs the replicated tick.
+
+``repro.core.tiering``'s host-partitioned ticks are pure (prepare, apply)
+pairs, so the whole multi-partition arbitration -- nominations, the psum'd
+candidate exchange, rank_select ordering, per-partition block-table writes --
+can be emulated on one device for ANY partition layout by stacking the
+per-partition payloads exactly like the mesh collective would. That pins the
+bit-for-bit contract against ``tiering.tick`` for the layouts a real mesh
+makes awkward to construct:
+
+* a near-tier size that no partition count divides,
+* partitions whose block range holds zero near blocks (or no blocks at all),
+* arbitration ties: equal scores in different partitions must resolve to the
+  lowest block id, exactly like ``jax.lax.top_k`` on the full score array.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tiering
+from repro.core.types import GpacConfig, allocated_hp_mask, init_state
+
+POLICIES = ("memtierd", "autonuma", "tpp")
+
+
+def make_cfg(n_gpa_hp=23, n_near=7):
+    # n_near=7: not divisible by 2, 3 or 4 partitions
+    return GpacConfig(
+        n_logical=n_gpa_hp * 4, hp_ratio=4, n_gpa_hp=n_gpa_hp,
+        n_near=n_near, base_elems=2, cl=3,
+    )
+
+
+def random_state(cfg, rng, scramble=True):
+    """A structurally valid state with randomized placement, allocation and
+    host telemetry (the only fields the tick reads)."""
+    state = init_state(cfg)
+    perm = rng.permutation(cfg.n_gpa_hp).astype(np.int32)
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(cfg.n_gpa_hp, dtype=np.int32)
+    rmap = np.asarray(state.rmap).copy()
+    # deallocate random huge pages wholesale + random single gpa pages
+    for hp in rng.choice(cfg.n_gpa_hp, size=cfg.n_gpa_hp // 3, replace=False):
+        rmap[hp * cfg.hp_ratio: (hp + 1) * cfg.hp_ratio] = -1
+    state = dataclasses.replace(
+        state,
+        block_table=jnp.asarray(perm if scramble else np.asarray(state.block_table)),
+        slot_owner=jnp.asarray(inv if scramble else np.asarray(state.slot_owner)),
+        rmap=jnp.asarray(rmap),
+        host_counts=jnp.asarray(
+            rng.integers(0, 5, cfg.n_gpa_hp).astype(np.int32)),
+        host_hist=jnp.asarray(
+            rng.integers(0, 256, cfg.n_gpa_hp).astype(np.uint8)),
+        last_touch_epoch=jnp.asarray(
+            rng.integers(0, 9, cfg.n_gpa_hp).astype(np.int32)),
+        epoch=jnp.int32(rng.integers(1, 10)),
+    )
+    return state
+
+
+def emulate_sharded_tick(cfg, state, policy, bounds, budget=8):
+    """Run the host-partitioned tick over an explicit partition layout,
+    emulating the mesh collective by stacking per-partition payloads.
+
+    Returns (block_table, stats_delta) of the partitioned run; asserts every
+    partition arbitrates to identical replicated decisions.
+    """
+    prepare, apply = tiering.sharded_tick_fns(policy)
+    h_loc = max(1, max(hi - lo for lo, hi in bounds))
+    alloc_full = np.asarray(allocated_hp_mask(cfg, state))
+
+    def local(x, fill, hp_ids):
+        x = np.asarray(x)
+        return jnp.asarray(
+            np.where(hp_ids >= 0, x[np.clip(hp_ids, 0, None)], fill).astype(x.dtype)
+        )
+
+    Ls, payloads = [], []
+    for lo, hi in bounds:
+        hp_ids = np.full(h_loc, -1, np.int32)
+        hp_ids[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        L = dict(
+            hp_ids=jnp.asarray(hp_ids),
+            hp_lo=jnp.int32(lo),
+            hp_hi=jnp.int32(hi),
+            bt=local(state.block_table, cfg.n_gpa_hp, hp_ids),
+            hc=local(state.host_counts, 0, hp_ids),
+            hh=local(state.host_hist, 0, hp_ids),
+            lt=local(state.last_touch_epoch, 0, hp_ids),
+            alloc=local(alloc_full, False, hp_ids),
+        )
+        Ls.append(L)
+        payloads.append(prepare(cfg, L, budget))
+
+    merged = dict(
+        cands=jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[p["cands"] for p in payloads]),
+        sums=jax.tree_util.tree_map(
+            lambda *xs: sum(xs), *[p["sums"] for p in payloads]),
+    )
+    bt_full = np.asarray(state.block_table).copy()
+    deltas = []
+    for L, (lo, hi) in zip(Ls, bounds):
+        bt_new, delta, _ = apply(cfg, L, merged, budget)
+        bt_full[lo:hi] = np.asarray(bt_new)[: hi - lo]
+        deltas.append({k: int(v) for k, v in delta.items()})
+    # the arbitration is replicated: every partition must agree on the stats
+    assert all(d == deltas[0] for d in deltas), deltas
+    return bt_full, deltas[0]
+
+
+def assert_matches_replicated(cfg, state, policy, bounds, budget=8):
+    ref = tiering.tick(cfg, state, policy, budget=budget)
+    bt, delta = emulate_sharded_tick(cfg, state, policy, bounds, budget)
+    np.testing.assert_array_equal(bt, np.asarray(ref.block_table),
+                                  err_msg=f"{policy} bounds={bounds}")
+    for k in delta:
+        assert delta[k] == int(ref.stats[k]) - int(state.stats[k]), (
+            policy, bounds, k)
+
+
+def even_bounds(n, parts):
+    cut = np.linspace(0, n, parts + 1).astype(int)
+    return list(zip(cut[:-1], cut[1:]))
+
+
+class TestArbitrationVsReplicatedTick:
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("parts", [1, 2, 3, 4])
+    def test_random_states_any_partition_count(self, policy, parts):
+        """n_near=7 is not divisible by any of these partition counts."""
+        cfg = make_cfg()
+        rng = np.random.default_rng(hash((policy, parts)) % 2**32)
+        for trial in range(4):
+            state = random_state(cfg, rng)
+            assert_matches_replicated(
+                cfg, state, policy, even_bounds(cfg.n_gpa_hp, parts))
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_partition_with_zero_near_blocks(self, policy):
+        """Identity placement: the second partition's range sits entirely in
+        the far tier, so it nominates no victims and only promotion sources."""
+        cfg = make_cfg()
+        rng = np.random.default_rng(7)
+        state = random_state(cfg, rng, scramble=False)
+        bounds = [(0, cfg.n_near), (cfg.n_near, cfg.n_gpa_hp)]
+        assert np.all(np.asarray(state.block_table)[cfg.n_near:] >= cfg.n_near)
+        assert_matches_replicated(cfg, state, policy, bounds)
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_empty_and_tiny_partitions(self, policy):
+        """Empty ranges (padding devices) and single-block ranges."""
+        cfg = make_cfg()
+        rng = np.random.default_rng(11)
+        state = random_state(cfg, rng)
+        bounds = [(0, 0), (0, 1), (1, cfg.n_gpa_hp), (cfg.n_gpa_hp, cfg.n_gpa_hp)]
+        assert_matches_replicated(cfg, state, policy, bounds)
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_budget_edges(self, policy):
+        cfg = make_cfg()
+        rng = np.random.default_rng(13)
+        state = random_state(cfg, rng)
+        for budget in (1, cfg.n_gpa_hp, cfg.n_gpa_hp + 50):
+            assert_matches_replicated(
+                cfg, state, policy, even_bounds(cfg.n_gpa_hp, 3), budget)
+
+
+class TestArbitrationTies:
+    def test_cross_partition_tie_resolves_to_lowest_block_id(self):
+        """Two far blocks in different partitions with identical scores
+        compete for one near slot: the winner is pinned to the lower block
+        id, bit-for-bit with the replicated top_k tie-break."""
+        cfg = make_cfg(n_gpa_hp=12, n_near=4)
+        state = init_state(cfg)  # identity: blocks 0-3 near, 4-11 far
+        counts = np.zeros(cfg.n_gpa_hp, np.int32)
+        counts[[5, 9]] = 3  # equal hot scores, partitions (4,8) and (8,12)
+        state = dataclasses.replace(
+            state, host_counts=jnp.asarray(counts))
+        bounds = [(0, 4), (4, 8), (8, 12)]
+        ref = tiering.tick(cfg, state, "memtierd", budget=1)
+        bt, _ = emulate_sharded_tick(cfg, state, "memtierd", bounds, budget=1)
+        np.testing.assert_array_equal(bt, np.asarray(ref.block_table))
+        # the deterministic winner: the lower id (5) was promoted into near
+        assert bt[5] < cfg.n_near
+        assert bt[9] >= cfg.n_near
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    def test_mass_tie_states(self, policy):
+        """Every block same score / same lru: selection order degenerates to
+        pure block-id order everywhere -- maximal tie pressure."""
+        cfg = make_cfg()
+        rng = np.random.default_rng(17)
+        for fill in (0, 3):
+            state = random_state(cfg, rng)
+            state = dataclasses.replace(
+                state,
+                host_counts=jnp.full((cfg.n_gpa_hp,), fill, jnp.int32),
+                host_hist=jnp.zeros((cfg.n_gpa_hp,), jnp.uint8),
+                last_touch_epoch=jnp.full((cfg.n_gpa_hp,), 2, jnp.int32),
+            )
+            assert_matches_replicated(
+                cfg, state, policy, even_bounds(cfg.n_gpa_hp, 3))

@@ -1,0 +1,241 @@
+"""Host-partitioned near tier: ``engine.run_sharded(host_sharded=True)``.
+
+The host-partitioned driver carries the host state (block table, telemetry,
+payload) partitioned by contiguous block ranges and resolves cross-partition
+near-memory contention through one arbitration exchange per window. It must
+be bit-for-bit equal to ``engine.run`` on any mesh, for every policy with a
+host-partitioned tick, with GPAC on and off -- and its per-device host-state
+bytes must scale ~1/n_devices vs the replicated path. The multi-device
+matrix runs in one subprocess with a forced 8-device CPU mesh (device count
+is fixed at jax init), the same mesh CI's sharded smoke uses.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine, sharding, tiering
+
+
+def assert_states_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def ragged_engine():
+    guests = (
+        engine.GuestSpec(n_logical=96, cl=3, gpa_slack=0.5, workload="redis", seed=0),
+        engine.GuestSpec(n_logical=176, cl=8, gpa_slack=0.25, workload="masim", seed=1),
+        engine.GuestSpec(n_logical=64, cl=None, gpa_slack=1.0, workload="hash", seed=2),
+    )
+    host = engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=6)
+    return engine.build(guests, host)
+
+
+class TestHostPartition:
+    def test_ranges_tile_the_block_space(self):
+        spec, _ = ragged_engine()
+        for n_shards in (1, 2, 3, 4):
+            part = sharding.host_partition(spec, n_shards)
+            assert part.n_shards == n_shards
+            assert part.hp_lo[0] == 0
+            assert part.hp_hi[-1] == spec.cfg.n_gpa_hp
+            for lo, hi, nxt in zip(part.hp_lo, part.hp_hi, part.hp_lo[1:]):
+                assert lo <= hi == nxt
+            ids = part.hp_ids()
+            covered = ids[ids >= 0]
+            np.testing.assert_array_equal(
+                np.sort(covered), np.arange(spec.cfg.n_gpa_hp))
+
+    def test_padding_devices_own_empty_ranges(self):
+        spec, _ = ragged_engine()  # 3 guests
+        part = sharding.host_partition(spec, 4)
+        assert part.hp_lo[3] == part.hp_hi[3] == spec.cfg.n_gpa_hp
+        assert (part.hp_ids()[3] == -1).all()
+
+    def test_guest_alignment(self):
+        """Each device's range is exactly its own guests' GPA segments."""
+        spec, _ = ragged_engine()
+        part = sharding.host_partition(spec, 3)
+        for d in range(3):
+            assert part.hp_lo[d] == spec.hp_offsets[d]
+            assert part.hp_hi[d] == spec.hp_offsets[d + 1]
+
+    def test_host_state_bytes_scale_inverse_with_devices(self):
+        """The measured per-device host-state bytes of the partitioned carry
+        are ~1/n_devices of the replicated path (exact up to range padding,
+        which balanced guests keep small)."""
+        spec, _ = engine.build(
+            tuple(engine.GuestSpec(n_logical=128) for _ in range(8)),
+            engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=8),
+        )
+        repl = sharding.host_state_bytes(spec.cfg)
+        for n_shards in (2, 4, 8):
+            per_dev = sharding.host_state_bytes_sharded(
+                spec.cfg, sharding.host_partition(spec, n_shards))
+            ratio = per_dev / repl
+            assert ratio < 1.25 / n_shards, (n_shards, ratio)
+
+    def test_sliced_local_state_matches_accounting(self):
+        """The bytes the carry actually holds (concrete sliced arrays) match
+        the host_state_bytes_sharded accounting."""
+        import jax.numpy as jnp
+
+        spec, state = ragged_engine()
+        part = sharding.host_partition(spec, 2)
+        hp_ids = jnp.asarray(part.hp_ids()[0])
+        loc = sharding._slice_host_local(spec.cfg, state, hp_ids)
+        measured = sum(np.asarray(v).nbytes for v in loc.values())
+        assert measured == sharding.host_state_bytes_sharded(spec.cfg, part)
+
+
+class TestHostShardedSingleDevice:
+    """Full shard_map path on a 1-device mesh: the partitioned carry, the
+    nomination/arbitration machinery and the chunk-boundary merge all
+    execute (collectives are trivial)."""
+
+    @pytest.mark.parametrize("policy", ["memtierd", "autonuma", "tpp"])
+    @pytest.mark.parametrize("use_gpac", [False, True])
+    def test_bitwise_equal_to_run(self, policy, use_gpac):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=5, accesses_per_window=192)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(
+            spec, s0, traces, use_gpac=use_gpac, policy=policy)
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, use_gpac=use_gpac, policy=policy,
+            host_sharded=True)
+        assert_states_equal(ref_state, sh_state)
+        assert set(ref) == set(sh)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    @pytest.mark.parametrize("backend", ["pebs", "damon"])
+    def test_other_telemetry_backends(self, backend):
+        """The GPAC phase runs on a view state (guest arrays + local
+        region_epoch): the sampled/region classifiers must stay bit-for-bit
+        (pebs keys its RNG off the replicated epoch)."""
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=3, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(spec, s0, traces, backend=backend)
+        sh_state, sh = engine.run_sharded(spec, s0, traces, mesh=mesh,
+                                          backend=backend)
+        assert_states_equal(ref_state, sh_state)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    def test_chunking_invariance(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=6, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(spec, s0, traces)
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, windows_per_step=3)
+        assert_states_equal(ref_state, sh_state)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    def test_unsupported_collector_raises(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=2, accesses_per_window=64)
+        mesh = sharding.guest_mesh(1)
+        with pytest.raises(ValueError, match="host-sharded"):
+            engine.run_sharded(
+                spec, s0, traces, mesh=mesh, collect=("snapshot",))
+
+    def test_policy_without_sharded_tick_raises(self):
+        name = "_test_only_replicated_policy"
+        tiering.register_policy(name, tiering.memtierd_tick)
+        try:
+            spec, s0 = ragged_engine()
+            traces = engine.guest_traces(spec, n_windows=2, accesses_per_window=64)
+            mesh = sharding.guest_mesh(1)
+            with pytest.raises(ValueError, match="host-partitioned tick"):
+                engine.run_sharded(spec, s0, traces, mesh=mesh, policy=name)
+            # the replicated-host path still runs it
+            engine.run_sharded(
+                spec, s0, traces, mesh=mesh, policy=name, host_sharded=False)
+        finally:
+            tiering._POLICIES.pop(name, None)
+
+    def test_builtin_policies_have_sharded_ticks(self):
+        assert set(tiering.POLICIES) <= set(tiering.sharded_ticks())
+
+
+MULTI_DEVICE_CHECK = """
+import numpy as np, jax
+from repro.core import engine, sharding
+
+assert jax.local_device_count() == 8, jax.local_device_count()
+
+def check(n_guests, mesh_n, use_gpac, policy, wps=0):
+    guests = tuple(
+        engine.GuestSpec(
+            n_logical=64 + 16 * (g % 4),
+            cl=(None if g % 3 == 0 else 3 + g % 5),
+            gpa_slack=0.25 + 0.25 * (g % 3),
+            workload=["redis", "masim", "hash"][g % 3], seed=g)
+        for g in range(n_guests))
+    spec, state = engine.build(
+        guests,
+        engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=6))
+    traces = engine.guest_traces(spec, n_windows=4, accesses_per_window=192)
+    mesh = sharding.guest_mesh(mesh_n)
+    s_ref, a = engine.run(spec, state, traces, use_gpac=use_gpac, policy=policy)
+    s_sh, b = engine.run_sharded(
+        spec, state, traces, mesh=mesh, use_gpac=use_gpac, policy=policy,
+        host_sharded=True, windows_per_step=wps)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for x, y in zip(jax.tree_util.tree_leaves(s_ref),
+                    jax.tree_util.tree_leaves(s_sh)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # measured host-state scaling: per-device carry ~ 1/n_devices (every
+    # device pads to the widest block range, so the exact claim holds for
+    # balanced layouts; padded/ragged ones scale with the widest partition)
+    part = sharding.host_partition(spec, mesh_n)
+    ratio = (sharding.host_state_bytes_sharded(spec.cfg, part)
+             / sharding.host_state_bytes(spec.cfg))
+    if n_guests % mesh_n == 0:
+        assert ratio < 1.5 / mesh_n, (mesh_n, ratio)
+    assert ratio <= 1.1 * part.h_loc / spec.cfg.n_gpa_hp, (mesh_n, ratio)
+    print("OK", n_guests, mesh_n, use_gpac, policy, flush=True)
+
+check(8, 8, True, "memtierd")    # one guest per device, full arbitration
+check(8, 8, False, "memtierd")   # gpac off: access phase + partitioned tick
+check(6, 8, True, "memtierd")    # padding: two devices own empty ranges
+check(8, 4, True, "tpp")         # two guests (and block ranges) per device
+check(8, 8, True, "autonuma")    # pressure scalar rides the exchange
+check(8, 4, True, "memtierd", 2) # chunked: two merges through the carry
+"""
+
+
+class TestHostShardedMultiDevice:
+    def test_forced_8_device_mesh_matches_run(self):
+        """The acceptance matrix: every host-partitioned policy x gpac
+        on/off x padding x chunking on a forced 8-device CPU mesh, plus the
+        measured per-device host-state scaling."""
+        env = dict(
+            os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            JAX_PLATFORMS="cpu",
+            PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", MULTI_DEVICE_CHECK],
+            env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+            timeout=600,
+        )
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        assert proc.stdout.count("OK") == 6, proc.stdout
