@@ -16,6 +16,12 @@ CPU devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``. Trace
 generation and jit compilation are excluded (one warmup run per path, then
 best-of-``REPEATS`` wall clock).
 
+Every grid row also times the on-device ``SynthTrace`` source (``synth_s``:
+the same guest identities generated inside the scan, DESIGN.md §12), and a
+pod-size row (``POD``, n_guests >= 128) runs the synth path alone -- the
+array path is skipped with a logged reason, since its host trace would be
+O(n_guests * n_windows * k).
+
 Writes ``BENCH_engine.json`` at the repo root (the perf-trajectory artifact
 CI archives) and ``experiments/benchmarks/<NAME>.json`` (``NAME`` comes from
 the shared suite registry, ``benchmarks.registry``).
@@ -48,6 +54,11 @@ GRID = (
     (8, 1024, 12),
     (12, 512, 12),
 )
+
+# pod-size configuration (ISSUE 5): only the on-device SynthTrace path runs
+# here -- the array path would need a host [n_guests, n_windows, k] trace
+# and is skipped with a logged reason
+POD = (128, 256, 8)  # (n_guests, logical_per_guest, n_windows)
 
 
 def _best_of(make, runner, traces, case, key) -> None:
@@ -99,6 +110,16 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
         return engine.run_series(spec, state, t, mesh=mesh,
                                  host_sharded=True)
 
+    # on-device synthesis (DESIGN.md §12): no [n_guests, n_windows, k]
+    # array anywhere. Same redis workload at the same shapes as the array
+    # rows (symmetric_spec guests all carry seed=0; decorrelation comes
+    # from the global-gid key fold), timed on the SAME single-device driver
+    # as engine_s so synth_vs_engine isolates the trace-source cost
+    synth = engine.SynthTrace(n_windows=n_windows, accesses_per_window=ACCESSES)
+
+    def run_synth(mg, state, t):
+        return engine.run_series(spec, state, synth)
+
     case = dict(
         n_guests=n_guests, logical_per_guest=logical_per_guest,
         n_logical=n_guests * logical_per_guest, n_windows=n_windows,
@@ -107,6 +128,7 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
     runners = [
         ("reference", simulate.run_multi_guest_reference),
         ("engine", run_engine),
+        ("synth", run_synth),
     ]
     if mesh is not None:
         runners.append(("engine_sharded", run_sharded))
@@ -114,6 +136,7 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
     for name, runner in runners:
         _best_of(make, runner, traces, case, name)
     case["speedup"] = case["reference_s"] / case["engine_s"]
+    case["synth_vs_engine"] = case["engine_s"] / case["synth_s"]
     if mesh is not None:
         # > 1 means the sharded driver beat the single-device engine
         case["sharded_speedup"] = case["engine_s"] / case["engine_sharded_s"]
@@ -122,6 +145,49 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
         case["host_state_bytes_replicated"] = report["replicated_bytes_per_device"]
         case["host_state_bytes_per_device"] = report["sharded_bytes_per_device"]
         case["host_state_scaling"] = report["scaling"]
+    return case
+
+
+def _pod_case(mesh) -> dict:
+    """The >= 128-guest configuration only the SynthTrace path can run:
+    each window's accesses are generated inside the scan (per-device
+    residency O(n_local_guests * accesses_per_window)), while the array
+    path would have to host-materialize the full trace first."""
+    n_guests, logical_per_guest, n_windows = POD
+    guests = tuple(
+        engine.GuestSpec(n_logical=logical_per_guest, cl=8, gpa_slack=1.0,
+                         workload="redis", seed=g)
+        for g in range(n_guests))
+    host = engine.HostSpec(hp_ratio=HP_RATIO, near_fraction=0.25,
+                           base_elems=2, cl=8, ipt_min_hits=1)
+    spec, _ = engine.build(guests, host)
+    synth = engine.SynthTrace(n_windows=n_windows,
+                              accesses_per_window=ACCESSES)
+    array_mb = n_guests * n_windows * ACCESSES * 4 / 2**20
+    skip_reason = (
+        f"array path skipped: host-materializing int32[{n_guests}, "
+        f"{n_windows}, {ACCESSES}] would allocate {array_mb:.0f} MB and "
+        f"ship it through pad_guest_rows every sharded run")
+    print(f"  pod row ({n_guests} guests): {skip_reason}")
+
+    def make():
+        return None, engine.init_engine_state(spec)
+
+    def run_synth(_, state, t):
+        return engine.run_series(spec, state, synth, mesh=mesh)
+
+    case = dict(
+        n_guests=n_guests, logical_per_guest=logical_per_guest,
+        n_logical=n_guests * logical_per_guest, n_windows=n_windows,
+        hp_ratio=HP_RATIO, accesses_per_window=ACCESSES,
+        n_devices=1 if mesh is None else mesh.shape["guest"],
+        pod=True, array_path=skip_reason,
+        # the residency the synth path actually carries per window, vs the
+        # host array the array path would need
+        trace_bytes_per_window=n_guests * ACCESSES * 4,
+        array_trace_bytes=n_guests * n_windows * ACCESSES * 4,
+    )
+    _best_of(make, run_synth, None, case, "synth")
     return case
 
 
@@ -140,8 +206,15 @@ def run() -> dict:
         print(f"  n_guests={n_guests:3d} n_logical={case['n_logical']:6d} "
               f"windows={n_windows:3d}: reference {case['reference_s']*1e3:8.1f} ms"
               f" engine {case['engine_s']*1e3:8.1f} ms"
+              f" synth {case['synth_s']*1e3:8.1f} ms"
               f" speedup {case['speedup']:5.2f}x{sharded}{host}")
-    at_scale = [c["speedup"] for c in cases if c["n_guests"] >= 8]
+    pod = _pod_case(mesh)
+    cases.append(pod)
+    print(f"  n_guests={pod['n_guests']:3d} n_logical={pod['n_logical']:6d} "
+          f"windows={pod['n_windows']:3d}: synth {pod['synth_s']*1e3:8.1f} ms "
+          f"(pod row; array path skipped)")
+    at_scale = [
+        c["speedup"] for c in cases if c["n_guests"] >= 8 and "speedup" in c]
     sharded_at_scale = [
         c["sharded_speedup"] for c in cases
         if c["n_guests"] >= 8 and "sharded_speedup" in c]
@@ -158,6 +231,8 @@ def run() -> dict:
         min_speedup_at_scale=min(at_scale),
         target_speedup_at_scale=3.0,
         meets_target=min(at_scale) >= 3.0,
+        pod_guests=pod["n_guests"],
+        pod_synth_s=pod["synth_s"],
     )
     if sharded_at_scale:
         # acceptance: the sharded path is no slower than the single-device

@@ -21,6 +21,8 @@ SUITES: dict[str, str] = {
     "fig13_tier_pairs": "GPAC across DRAM/CXL and HBM/DRAM pairs (Figs. 13-14)",
     "fig15_cl_sensitivity": "Consolidation-Limit sweep (Fig. 15)",
     "fig16_scatter_hist": "hot-subpage histograms (Fig. 16)",
+    "fig16_mixed_tenants": "per-guest skew histograms, mixed ragged tenants "
+                           "on one host (Fig. 16 at scale, SynthTrace)",
     "fig17_pressure": "benefit vs near:far capacity ratio (Fig. 17)",
     "bench_engine": "engine vs seed-reference wall-clock (BENCH_engine.json)",
 }

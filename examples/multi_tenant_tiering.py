@@ -6,6 +6,13 @@ mixed-tenant evaluation implies) share one host. With GPAC in every guest the
 shared near tier stops being hogged by skewed huge pages and every VM's
 modeled throughput improves.
 
+Traces come from a ``SynthTrace`` source: each window's accesses are
+generated on device inside the engine's scan from the guests'
+(workload, seed) identities -- no packed trace array is ever built, which is
+what lets the same code run at pod-size guest counts (DESIGN.md §12; use
+``engine.ArrayTrace(engine.guest_traces(spec, ...))`` to replay a
+host-materialized trace instead).
+
     PYTHONPATH=src python examples/multi_tenant_tiering.py
 """
 from repro.core import engine
@@ -26,8 +33,8 @@ def make_engine():
 
 def run(use_gpac):
     spec, state = make_engine()
-    traces = engine.guest_traces(spec, n_windows=20, accesses_per_window=8192)
-    _, series = engine.run_series(spec, state, traces, policy="memtierd",
+    synth = engine.SynthTrace(n_windows=20, accesses_per_window=8192)
+    _, series = engine.run_series(spec, state, synth, policy="memtierd",
                                   use_gpac=use_gpac)
     return series
 

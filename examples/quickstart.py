@@ -5,12 +5,13 @@ One guest runs a Redis-shaped workload over a tiered address space. The host
 drags skewed hot huge pages into near memory; with GPAC the guest consolidates
 scattered hot base pages first, so near memory holds dense-hot blocks only.
 
+The workload is a ``SynthTrace``: the engine generates each window's
+accesses on device, inside its scan -- no trace array is materialized
+(DESIGN.md §12).
+
     PYTHONPATH=src python examples/quickstart.py
 """
-import jax.numpy as jnp
-
-from repro.core import GpacConfig, gpac, init_state, metrics, start_all_far
-from repro.data import traces
+from repro.core import GpacConfig, engine, init_state, metrics, start_all_far
 
 CFG = GpacConfig(n_logical=16384, hp_ratio=64, n_gpa_hp=384, n_near=128,
                  base_elems=2, cl=8, ipt_min_hits=1)
@@ -18,12 +19,11 @@ CFG = GpacConfig(n_logical=16384, hp_ratio=64, n_gpa_hp=384, n_near=128,
 
 def run(use_gpac: bool):
     state = start_all_far(CFG, init_state(CFG))
-    trace = traces.generate(traces.TraceSpec(
-        "redis", n_logical=CFG.n_logical, hp_ratio=CFG.hp_ratio,
-        n_windows=16, accesses_per_window=8192))
-    for w in range(trace.shape[0]):
-        state = gpac.window_step(CFG, state, jnp.asarray(trace[w]),
-                                 policy="memtierd", use_gpac=use_gpac)
+    spec = engine.spec_from_config(CFG, workload="redis")
+    state, _ = engine.run(
+        spec, state, engine.SynthTrace(n_windows=16, accesses_per_window=8192),
+        policy="memtierd", use_gpac=use_gpac, max_batches=16, budget=256,
+        collect=())
     return state
 
 

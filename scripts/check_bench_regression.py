@@ -19,8 +19,11 @@ AT_SCALE_GUESTS = 8
 
 
 def min_at_scale_speedup(payload: dict) -> float:
+    # pod-size rows run only the SynthTrace path (the seed reference would
+    # need a host-materialized trace) and carry no "speedup"; the gate
+    # compares the cases that time both paths
     cases = [c["speedup"] for c in payload["cases"]
-             if c["n_guests"] >= AT_SCALE_GUESTS]
+             if c["n_guests"] >= AT_SCALE_GUESTS and "speedup" in c]
     if not cases:
         raise SystemExit("no at-scale (n_guests >= 8) cases in payload")
     return min(cases)

@@ -6,7 +6,10 @@ is fixed at jax init). Exercises a non-dividing guest count (padding path)
 through BOTH sharded drivers -- the replicated-host path
 (`host_sharded=False`) and the host-partitioned near tier
 (`host_sharded=True`, DESIGN.md §11) -- each pinned bit-for-bit against
-`engine.run`, and reports the measured per-device host-state scaling.
+`engine.run` on BOTH trace sources: the packed-array path and on-device
+`SynthTrace` synthesis (DESIGN.md §12, where each device generates only its
+local guests' accesses inside the scan). Also reports the measured
+per-device host-state scaling.
 
 Shared entry point for CI (`python scripts/ci_smoke_sharded.py`) and the
 test suite (`pytest -m smoke`, tests/test_ci_smoke.py) so the smoke code
@@ -35,26 +38,32 @@ def main() -> int:
     spec, state = engine.build(
         guests, engine.HostSpec(hp_ratio=16, near_fraction=0.4,
                                 base_elems=2, cl=6))
-    traces = engine.guest_traces(spec, n_windows=4, accesses_per_window=192)
-    s_ref, a = engine.run(spec, state, traces)
     mesh = sharding.guest_mesh(N_DEVICES)
-    for host_sharded in (False, True):
-        s_sh, b = engine.run_sharded(spec, state, traces, mesh=mesh,
-                                     host_sharded=host_sharded)
-        for k in a:
-            np.testing.assert_array_equal(
-                a[k], b[k], err_msg=f"host_sharded={host_sharded}: {k}")
-        for x, y in zip(jax.tree_util.tree_leaves(s_ref),
-                        jax.tree_util.tree_leaves(s_sh)):
-            np.testing.assert_array_equal(
-                np.asarray(x), np.asarray(y),
-                err_msg=f"host_sharded={host_sharded}")
+    sources = dict(
+        array=engine.ArrayTrace(
+            engine.guest_traces(spec, n_windows=4, accesses_per_window=192)),
+        synth=engine.SynthTrace(n_windows=4, accesses_per_window=192),
+    )
+    for src_name, source in sources.items():
+        s_ref, a = engine.run(spec, state, source)
+        for host_sharded in (False, True):
+            s_sh, b = engine.run_sharded(spec, state, source, mesh=mesh,
+                                         host_sharded=host_sharded)
+            for k in a:
+                np.testing.assert_array_equal(
+                    a[k], b[k],
+                    err_msg=f"{src_name}, host_sharded={host_sharded}: {k}")
+            for x, y in zip(jax.tree_util.tree_leaves(s_ref),
+                            jax.tree_util.tree_leaves(s_sh)):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"{src_name}, host_sharded={host_sharded}")
     part = sharding.host_partition(spec, N_DEVICES)
     scaling = (sharding.host_state_bytes_sharded(spec.cfg, part)
                / sharding.host_state_bytes(spec.cfg))
     print(f"sharded engine smoke OK ({N_DEVICES}-device mesh, bit-for-bit, "
-          f"replicated + host-partitioned; per-device host state "
-          f"{scaling:.2f}x of replicated)")
+          f"replicated + host-partitioned, array + on-device synth traces; "
+          f"per-device host state {scaling:.2f}x of replicated)")
     return 0
 
 

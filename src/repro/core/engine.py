@@ -273,6 +273,150 @@ def symmetric_spec(
 
 
 # --------------------------------------------------------------------------
+# trace sources (the engine's input API, DESIGN.md §12)
+# --------------------------------------------------------------------------
+class TraceSource:
+    """What drives the engine's windows. Two implementations:
+
+    * :class:`ArrayTrace` -- a host-materialized packed trace
+      ``int32[n_guests, n_windows, k]`` (the original input form; raw
+      ndarrays passed to the drivers are wrapped in one automatically).
+    * :class:`SynthTrace` -- on-device workload synthesis: each window's
+      accesses are generated *inside* the scan body from the guests'
+      (workload, seed) identities via ``repro.data.traces``' JAX window
+      functions, so no ``[n_guests, n_windows, k]`` array ever exists --
+      host or device. Per-device residency on a mesh is
+      O(n_local_guests * accesses_per_window) plus the per-guest scatter
+      tables, which is what lets pod-size guest counts run at all.
+
+    Every source exposes ``n_windows`` (attribute or property).
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayTrace(TraceSource):
+    """A packed per-guest trace array (``pack_traces`` / ``guest_traces``
+    output): ``int32[n_guests, n_windows, k]`` guest-local ids, -1 padded."""
+
+    traces: np.ndarray
+
+    def __post_init__(self):
+        object.__setattr__(self, "traces", np.asarray(self.traces))
+
+    @property
+    def n_windows(self) -> int:
+        return self.traces.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthTrace(TraceSource):
+    """On-device workload synthesis for ``n_windows`` windows of
+    ``accesses_per_window`` accesses each.
+
+    ``workloads`` / ``seeds`` default to the guests' own
+    :class:`GuestSpec` identities at bind time; pass explicit tuples (one
+    entry per guest) to override without rebuilding the spec. The distinct
+    workload *set* is a static compile key (it selects the generator code);
+    seeds and the per-guest workload assignment are traced, so sweeping
+    them never recompiles.
+    """
+
+    n_windows: int
+    accesses_per_window: int
+    workloads: tuple[str, ...] | None = None
+    seeds: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if self.n_windows < 0:
+            raise ValueError(f"n_windows must be >= 0, got {self.n_windows}")
+        if self.accesses_per_window < 1:
+            raise ValueError(
+                f"accesses_per_window must be >= 1, got "
+                f"{self.accesses_per_window}"
+            )
+        if self.workloads is not None:
+            object.__setattr__(self, "workloads", tuple(self.workloads))
+        if self.seeds is not None:
+            object.__setattr__(self, "seeds", tuple(self.seeds))
+
+
+def as_trace_source(x) -> TraceSource:
+    """Coerce a driver input to a :class:`TraceSource` (arrays/lists wrap as
+    :class:`ArrayTrace`)."""
+    if isinstance(x, TraceSource):
+        return x
+    if isinstance(x, (np.ndarray, list, tuple)) or hasattr(x, "__array__"):
+        return ArrayTrace(np.asarray(x))
+    raise TypeError(
+        f"expected a TraceSource or a packed trace array, got {type(x).__name__}"
+    )
+
+
+def _coerce_source(source, traces) -> TraceSource:
+    """Resolve the driver input: the ``source`` positional (TraceSource or
+    raw array) or the deprecated ``traces=`` keyword (warns and wraps)."""
+    if traces is not None:
+        if source is not None:
+            raise TypeError("pass either a source or traces=, not both")
+        import warnings
+
+        warnings.warn(
+            "the traces= keyword is deprecated; pass the trace source "
+            "positionally (ArrayTrace(traces) or a SynthTrace)",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        return ArrayTrace(np.asarray(traces))
+    if source is None:
+        raise TypeError("run() needs a trace source (ArrayTrace / SynthTrace)")
+    return as_trace_source(source)
+
+
+def _bind_synth(spec: EngineSpec, synth: SynthTrace, n_shards: int = 1):
+    """Bind a :class:`SynthTrace` to a spec's guests: the static
+    :class:`repro.data.traces.SynthPlan` (distinct workload set + shapes)
+    and the traced per-guest tables (seed, global guest id, workload index,
+    size), padded to the mesh with no-op rows (``gid=-1`` emits -1
+    accesses). Must run on the *pre-canonical* spec -- ``canonical()``
+    blanks the workload/seed identities this reads."""
+    from repro.data import traces as tr
+
+    n_g = spec.n_guests
+    workloads = synth.workloads or tuple(g.workload for g in spec.guests)
+    seeds = synth.seeds if synth.seeds is not None else tuple(
+        g.seed for g in spec.guests)
+    if len(workloads) != n_g or len(seeds) != n_g:
+        raise ValueError(
+            f"SynthTrace workloads/seeds must have one entry per guest "
+            f"(n_guests={n_g}), got {len(workloads)}/{len(seeds)}"
+        )
+    for name in workloads:
+        tr.get_workload(name)  # fail fast, listing the live set
+    wset = tuple(sorted(set(workloads)))
+    plan = tr.SynthPlan(
+        workload_set=wset,
+        accesses_per_window=synth.accesses_per_window,
+        hp_ratio=spec.cfg.hp_ratio,
+        max_logical=spec.max_logical,
+    )
+    tables = dict(
+        seeds=np.asarray(seeds, np.int32),
+        gids=np.arange(n_g, dtype=np.int32),
+        wid=np.asarray([wset.index(w) for w in workloads], np.int32),
+        n_logical=np.asarray([g.n_logical for g in spec.guests], np.int32),
+    )
+    if n_shards > 1:
+        from repro.core import sharding
+
+        fills = dict(seeds=0, gids=-1, wid=-1, n_logical=1)
+        tables = {
+            k: sharding.pad_guest_rows(v, n_shards, fill=fills[k])
+            for k, v in tables.items()
+        }
+    return plan, tables
+
+
+# --------------------------------------------------------------------------
 # trace helpers
 # --------------------------------------------------------------------------
 def pack_traces(per_guest: list[np.ndarray]) -> np.ndarray:
@@ -295,16 +439,28 @@ def guest_traces(
     accesses_per_window: int,
 ) -> np.ndarray:
     """Synthesize each guest's trace from its :class:`GuestSpec`
-    workload/seed and pack them (``repro.data.traces`` generators)."""
+    workload/seed and pack them (``repro.data.traces`` numpy generators).
+
+    Memoized over identical ``(workload, seed, n_logical)`` guests within
+    the call: a symmetric fleet of N clones generates its trace once, not N
+    times (the generators are deterministic per :class:`TraceSpec`, so
+    sharing the array is exact). For pod-size fleets prefer
+    :class:`SynthTrace` -- this host array is O(n_guests * n_windows * k).
+    """
     from repro.data import traces as tr
 
-    return pack_traces([
-        tr.generate(tr.TraceSpec(
+    cache: dict[tr.TraceSpec, np.ndarray] = {}
+
+    def one(g: GuestSpec) -> np.ndarray:
+        ts = tr.TraceSpec(
             g.workload, n_logical=g.n_logical, hp_ratio=spec.cfg.hp_ratio,
             n_windows=n_windows, accesses_per_window=accesses_per_window,
-            seed=g.seed))
-        for g in spec.guests
-    ])
+            seed=g.seed)
+        if ts not in cache:
+            cache[ts] = tr.generate(ts)
+        return cache[ts]
+
+    return pack_traces([one(g) for g in spec.guests])
 
 
 # --------------------------------------------------------------------------
@@ -497,6 +653,45 @@ def _run_chunk(
     return jax.lax.scan(body, state, chunk)
 
 
+@partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "plan", "policy", "backend", "use_gpac", "max_batches",
+        "budget", "collect",
+    ),
+)
+def _run_chunk_synth(
+    spec: EngineSpec,
+    plan,  # repro.data.traces.SynthPlan (static)
+    state: TieredState,
+    widx: jax.Array,  # int32[n_windows] absolute window indices
+    tables: dict,  # traced per-guest rows (seeds/gids/wid/n_logical)
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    collect: tuple[str, ...],
+) -> tuple[TieredState, dict]:
+    """Scan-fused chunk with on-device synthesis: the scan carries window
+    *indices*, and each window's accesses are generated inside the body
+    (counter-based RNG keyed on the absolute index, so any chunking yields
+    identical streams). No trace array exists at any scope wider than one
+    window."""
+    from repro.data import traces as tr
+
+    setup = tr.synth_setup(plan, tables)
+
+    def body(st, w):
+        acc = tr.synth_accesses(plan, setup, w)
+        return _window(
+            spec, st, acc, policy, backend, use_gpac, max_batches, budget,
+            collect,
+        )
+
+    return jax.lax.scan(body, state, widx)
+
+
 def _round_wps(n_windows: int, windows_per_step: int, strict: bool) -> int:
     """Effective chunk size: ``windows_per_step`` rounded *down* to the
     nearest divisor of ``n_windows`` (0 or oversized = the whole run). A
@@ -520,12 +715,14 @@ def _round_wps(n_windows: int, windows_per_step: int, strict: bool) -> int:
     return div
 
 
-def _validate_run_args(spec: EngineSpec, traces: np.ndarray, collect) -> tuple:
-    if traces.ndim != 3 or traces.shape[0] != spec.n_guests:
-        raise ValueError(
-            f"traces must be [n_guests={spec.n_guests}, n_windows, k], "
-            f"got {traces.shape}"
-        )
+def _validate_run_args(spec: EngineSpec, source: TraceSource, collect) -> tuple:
+    if isinstance(source, ArrayTrace):
+        traces = source.traces
+        if traces.ndim != 3 or traces.shape[0] != spec.n_guests:
+            raise ValueError(
+                f"traces must be [n_guests={spec.n_guests}, n_windows, k], "
+                f"got {traces.shape}"
+            )
     collect = tuple(collect)
     for name in collect:
         get_collector(name)  # fail fast on unknown collectors
@@ -556,8 +753,9 @@ def _drive_chunks(
 def run(
     spec: EngineSpec,
     state: TieredState,
-    traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
+    source: TraceSource | np.ndarray | None = None,
     *,
+    traces: np.ndarray | None = None,  # deprecated keyword (warns and wraps)
     policy: str = "memtierd",
     backend: str = "ipt",
     use_gpac: bool = True,
@@ -568,6 +766,12 @@ def run(
     collect: tuple[str, ...] = ("hits", "near_blocks"),
 ) -> tuple[TieredState, dict]:
     """Drive every window through the scan-fused engine.
+
+    ``source`` is a :class:`TraceSource`: an :class:`ArrayTrace` (raw packed
+    arrays are wrapped automatically) replays a host-materialized trace; a
+    :class:`SynthTrace` generates each window's accesses on device inside
+    the scan, so nothing of shape ``[n_guests, n_windows, k]`` ever exists.
+    The deprecated ``traces=`` keyword still works (warns and wraps).
 
     The window loop is a device-side ``lax.scan``; ``windows_per_step``
     bounds how many windows each jitted step fuses (0 = the whole run in one
@@ -582,21 +786,34 @@ def run(
 
     Returns ``(state, series)`` where ``series[k]`` is a host numpy array of
     shape ``[n_windows, ...]`` per collector output; empty dict when the
-    trace has no windows or ``collect`` is empty.
+    source has no windows or ``collect`` is empty.
     """
-    traces = np.asarray(traces)
-    collect = _validate_run_args(spec, traces, collect)
-    spec = spec.canonical()  # don't recompile across seed/workload sweeps
-    n_w = traces.shape[1]
+    source = _coerce_source(source, traces)
+    collect = _validate_run_args(spec, source, collect)
+    n_w = source.n_windows
     if n_w == 0:
         return state, {}
-    by_window = np.ascontiguousarray(np.transpose(traces, (1, 0, 2)))
+    if isinstance(source, SynthTrace):
+        plan, tables = _bind_synth(spec, source)  # pre-canonical: reads ids
+        spec = spec.canonical()
+        jt = {k: jnp.asarray(v) for k, v in tables.items()}
+        by_window = np.arange(n_w, dtype=np.int32)
 
-    def chunk_fn(st, chunk):
-        return _run_chunk(
-            spec, st, chunk, policy, backend, use_gpac, max_batches, budget,
-            collect,
-        )
+        def chunk_fn(st, widx):
+            return _run_chunk_synth(
+                spec, plan, st, widx, jt, policy, backend, use_gpac,
+                max_batches, budget, collect,
+            )
+    else:
+        spec = spec.canonical()  # don't recompile across seed/workload sweeps
+        by_window = np.ascontiguousarray(
+            np.transpose(source.traces, (1, 0, 2)))
+
+        def chunk_fn(st, chunk):
+            return _run_chunk(
+                spec, st, chunk, policy, backend, use_gpac, max_batches,
+                budget, collect,
+            )
 
     wps = _round_wps(n_w, windows_per_step, strict_wps)
     return _drive_chunks(chunk_fn, state, by_window, wps, collect)
@@ -605,14 +822,15 @@ def run(
 # collectors with a host-partitioned implementation (repro.core.sharding
 # computes them from the per-window candidate exchange without ever
 # materializing the replicated host state)
-HOST_SHARDED_COLLECTORS = ("hits", "near_blocks")
+HOST_SHARDED_COLLECTORS = ("hits", "near_blocks", "snapshot")
 
 
 def run_sharded(
     spec: EngineSpec,
     state: TieredState,
-    traces: np.ndarray,  # int32[n_guests, n_windows, k] guest-local ids
+    source: TraceSource | np.ndarray | None = None,
     *,
+    traces: np.ndarray | None = None,  # deprecated keyword (warns and wraps)
     mesh=None,
     host_sharded: bool = True,
     policy: str = "memtierd",
@@ -647,27 +865,38 @@ def run_sharded(
     host-sharded collectors (:data:`HOST_SHARDED_COLLECTORS`);
     ``host_sharded=False`` keeps the replicated host state and supports any
     registered policy/collector.
+
+    Accepts any :class:`TraceSource`. A :class:`SynthTrace` synthesizes each
+    device's *local* guests' accesses on that device (keys fold in the
+    global guest id, so the streams are bit-identical to the single-device
+    driver and mesh-padding rows emit -1 no-ops); an :class:`ArrayTrace` is
+    padded and sharded over the guest axis as before.
     """
     from repro.core import sharding
 
+    source = _coerce_source(source, traces)
     if mesh is None:
         mesh = sharding.guest_mesh()
     if mesh is None:
         return run(
-            spec, state, traces, policy=policy, backend=backend,
+            spec, state, source, policy=policy, backend=backend,
             use_gpac=use_gpac, max_batches=max_batches, budget=budget,
             windows_per_step=windows_per_step, strict_wps=strict_wps,
             collect=collect,
         )
-    traces = np.asarray(traces)
-    collect = _validate_run_args(spec, traces, collect)
-    spec = spec.canonical()
-    n_w = traces.shape[1]
+    collect = _validate_run_args(spec, source, collect)
+    n_w = source.n_windows
     if n_w == 0:
         return state, {}
     n_shards = sharding.mesh_size(mesh)
-    padded = sharding.pad_guest_rows(traces, n_shards)  # [G_pad, n_w, k]
-    by_window = np.ascontiguousarray(np.transpose(padded, (1, 0, 2)))
+    if isinstance(source, SynthTrace):
+        plan, synth_tables = _bind_synth(spec, source, n_shards)
+        by_window = np.arange(n_w, dtype=np.int32)
+    else:
+        plan, synth_tables = None, None
+        padded = sharding.pad_guest_rows(source.traces, n_shards)
+        by_window = np.ascontiguousarray(np.transpose(padded, (1, 0, 2)))
+    spec = spec.canonical()
 
     if host_sharded:
         unsupported = tuple(
@@ -687,7 +916,8 @@ def run_sharded(
             return sharding.run_chunk_host_sharded(
                 spec, mesh, st, chunk, tables, policy=policy,
                 backend=backend, use_gpac=use_gpac, max_batches=max_batches,
-                budget=budget, collect=collect,
+                budget=budget, collect=collect, plan=plan,
+                synth_tables=synth_tables,
             )
     else:
         tables = sharding.guest_tables(spec, n_shards)
@@ -696,7 +926,8 @@ def run_sharded(
             return sharding.run_chunk_sharded(
                 spec, mesh, st, chunk, tables, policy=policy,
                 backend=backend, use_gpac=use_gpac, max_batches=max_batches,
-                budget=budget, collect=collect,
+                budget=budget, collect=collect, plan=plan,
+                synth_tables=synth_tables,
             )
 
     wps = _round_wps(n_w, windows_per_step, strict_wps)
@@ -706,20 +937,26 @@ def run_sharded(
 def run_series(
     spec: EngineSpec,
     state: TieredState,
-    traces: np.ndarray,
+    source: TraceSource | np.ndarray | None = None,
     tier_pair: str = "dram_nvmm",
     mesh=None,
+    *,
+    traces: np.ndarray | None = None,  # deprecated keyword (warns and wraps)
     **kw,
 ) -> tuple[TieredState, dict]:
     """:func:`run` + the per-VM time series the at-scale figures plot
-    (near blocks, per-window hit rate, modeled throughput). Passing a
-    ``mesh`` drives the windows through :func:`run_sharded` instead (the
-    at-scale figures shard their guest axis end-to-end this way;
-    ``host_sharded=`` threads through and is dropped on the no-mesh path)."""
+    (near blocks, per-window hit rate, modeled throughput). Accepts any
+    :class:`TraceSource` (raw packed arrays wrap as :class:`ArrayTrace`;
+    the deprecated ``traces=`` keyword warns and wraps, as in :func:`run`).
+    Passing a ``mesh`` drives the windows through :func:`run_sharded`
+    instead (the at-scale figures shard their guest axis end-to-end this
+    way; ``host_sharded=`` threads through and is dropped on the no-mesh
+    path)."""
     n_g = spec.n_guests
-    traces = np.asarray(traces)
+    source = _coerce_source(source, traces)
+    _validate_run_args(spec, source, ())  # shape errors before n_windows
     host_sharded = kw.pop("host_sharded", True)
-    if traces.ndim == 3 and traces.shape[1] == 0:
+    if source.n_windows == 0:
         return state, dict(
             near_blocks=np.zeros((0, n_g), np.int64),
             hit_rate=np.zeros((0, n_g)),
@@ -730,7 +967,7 @@ def run_series(
         else partial(run_sharded, mesh=mesh, host_sharded=host_sharded)
     )
     state, out = driver(
-        spec, state, traces, collect=("hits", "near_blocks"), **kw
+        spec, state, source, collect=("hits", "near_blocks"), **kw
     )
     nh = out["near_hits"].astype(np.float64)
     fh = out["far_hits"].astype(np.float64)

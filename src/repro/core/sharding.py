@@ -294,6 +294,15 @@ def _sharded_window(
     return state, run_collectors(spec, state, window, collect)
 
 
+# per-guest synthesis-table keys, in the order the chunk drivers append
+# them as trailing (guest-sharded) arguments
+_SYNTH_KEYS = ("seeds", "gids", "wid", "n_logical")
+
+
+def _synth_args(synth_tables: dict) -> tuple:
+    return tuple(jnp.asarray(synth_tables[k]) for k in _SYNTH_KEYS)
+
+
 @lru_cache(maxsize=64)
 def _chunk_fn(
     spec,  # canonical EngineSpec
@@ -304,26 +313,61 @@ def _chunk_fn(
     max_batches: int,
     budget: int,
     collect: tuple[str, ...],
+    plan=None,  # repro.data.traces.SynthPlan for on-device synthesis
 ):
     """Compiled sharded chunk driver for one (spec, mesh, knobs) key: a
     ``shard_map`` over the scan of windows. State and series are replicated
-    out-specs; the traces and segment tables shard over the guest axis."""
+    out-specs; the traces and segment tables shard over the guest axis.
 
+    With a ``plan`` the scan carries absolute window *indices* (replicated)
+    instead of trace slices, and each device synthesizes only its own
+    guests' accesses inside the window body from its sharded table rows --
+    per-device trace residency is O(local guests x accesses_per_window).
+    Per-guest RNG keys fold in the *global* guest id, so the generated
+    streams are bit-identical to the unsharded driver's.
+    """
     n_shards = mesh_size(mesh)
 
-    def body(state, chunk, logical_lo, logical_pad, hp_pad):
-        def window(st, acc):
-            return _sharded_window(
-                spec, n_shards, st, acc, logical_lo, logical_pad, hp_pad,
-                policy, backend, use_gpac, max_batches, budget, collect,
-            )
+    def window_body(st, acc, logical_lo, logical_pad, hp_pad):
+        return _sharded_window(
+            spec, n_shards, st, acc, logical_lo, logical_pad, hp_pad,
+            policy, backend, use_gpac, max_batches, budget, collect,
+        )
 
-        return jax.lax.scan(window, state, chunk)
+    if plan is None:
+
+        def body(state, chunk, logical_lo, logical_pad, hp_pad):
+            def window(st, acc):
+                return window_body(st, acc, logical_lo, logical_pad, hp_pad)
+
+            return jax.lax.scan(window, state, chunk)
+
+        in_specs = (
+            P(), P(None, AXIS, None), P(AXIS), P(AXIS, None), P(AXIS, None),
+        )
+    else:
+        from repro.data import traces as tr
+
+        def body(state, widx, logical_lo, logical_pad, hp_pad,
+                 seeds, gids, wid, n_logical):
+            setup = tr.synth_setup(plan, dict(
+                seeds=seeds, gids=gids, wid=wid, n_logical=n_logical))
+
+            def window(st, w):
+                acc = tr.synth_accesses(plan, setup, w)
+                return window_body(st, acc, logical_lo, logical_pad, hp_pad)
+
+            return jax.lax.scan(window, state, widx)
+
+        in_specs = (
+            P(), P(None), P(AXIS), P(AXIS, None), P(AXIS, None),
+            P(AXIS), P(AXIS), P(AXIS), P(AXIS),
+        )
 
     sharded = shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(), P(None, AXIS, None), P(AXIS), P(AXIS, None), P(AXIS, None)),
+        in_specs=in_specs,
         out_specs=P(),
         # psum results are replicated but 0.4.x rep-checking cannot always
         # infer it; correctness is pinned by the equivalence tests
@@ -336,8 +380,8 @@ def run_chunk_sharded(
     spec,
     mesh,
     state: TieredState,
-    chunk: jax.Array,  # int32[n_windows, G_pad, k] (guest axis mesh-padded)
-    tables: dict,
+    chunk: jax.Array,  # int32[n_windows, G_pad, k], or int32[n_windows]
+    tables: dict,      # window indices when plan is given
     *,
     policy: str,
     backend: str,
@@ -345,19 +389,25 @@ def run_chunk_sharded(
     max_batches: int,
     budget: int,
     collect: tuple[str, ...],
+    plan=None,
+    synth_tables: dict | None = None,
 ) -> tuple[TieredState, dict]:
     """One scan-fused chunk of the sharded engine (``engine.run_sharded``'s
     inner loop)."""
     fn = _chunk_fn(
-        spec, mesh, policy, backend, use_gpac, max_batches, budget, collect
+        spec, mesh, policy, backend, use_gpac, max_batches, budget, collect,
+        plan,
     )
-    return fn(
+    args = (
         state,
         chunk,
         jnp.asarray(tables["logical_lo"]),
         jnp.asarray(tables["logical_pad"]),
         jnp.asarray(tables["hp_pad"]),
     )
+    if plan is not None:
+        args += _synth_args(synth_tables)
+    return fn(*args)
 
 
 # ==========================================================================
@@ -576,6 +626,17 @@ def _near_blocks_delta(spec, swaps, g_pad: int) -> jax.Array:
     return delta
 
 
+def _near_scalar_delta(swaps) -> jax.Array:
+    """Replicated host-wide delta of allocated near blocks from the
+    arbitrated swaps (the scalar form of :func:`_near_blocks_delta`, for the
+    host-sharded ``snapshot`` collector)."""
+    d = jnp.int32(0)
+    for far, near, ok in swaps:
+        d = d + jnp.where(ok & (far["alloc"] > 0), 1, 0).sum()
+        d = d - jnp.where(ok & (near["alloc"] > 0), 1, 0).sum()
+    return d
+
+
 def _host_sharded_window(
     spec,
     n_shards: int,
@@ -604,6 +665,10 @@ def _host_sharded_window(
     gc, ih = carry["guest_counts"], carry["ipt_hist"]
     epoch, stats = carry["epoch"], dict(carry["stats"])
     loc = dict(carry["loc"])
+    # replicated cumulative stats for the snapshot collector: per-device
+    # deltas ride the arbitration psum, replicated tick deltas add directly
+    gstats = dict(carry["gstats"]) if "gstats" in carry else None
+    stats0 = dict(stats)
 
     # ---- 1. access phase (local: own guests touch own blocks) -----------
     ids = jnp.where(accesses >= 0, accesses + logical_lo[:, None], -1)
@@ -662,6 +727,15 @@ def _host_sharded_window(
             _near_blocks_local(cfg, L["alloc"], loc["bt"], hp_lo, hp_pad),
             n_shards,
         )
+    if gstats is not None:
+        # snapshot scalars ride the same collective: this device's window
+        # stat deltas so far (access + GPAC phases; the tick's are
+        # replicated and added after arbitration) and its local allocated /
+        # allocated-near block counts (pre-tick; the arbitrated swaps
+        # correct near counts replicatedly)
+        exchange["stat_delta"] = {k: stats[k] - stats0[k] for k in stats}
+        exchange["alloc_near"] = (L["alloc"] & (loc["bt"] < cfg.n_near)).sum()
+        exchange["alloc_tot"] = L["alloc"].sum()
     merged = jax.lax.psum(exchange, AXIS)
 
     # ---- 4. arbitration: replicated decisions, local block-table writes -
@@ -671,6 +745,11 @@ def _host_sharded_window(
     on_d0 = jax.lax.axis_index(AXIS) == 0
     for s in tick_stats:  # replicated deltas: count them on one device only
         stats[s] = stats[s] + jnp.where(on_d0, tick_stats[s], 0)
+    if gstats is not None:
+        gstats = {
+            k: gstats[k] + merged["stat_delta"][k] + tick_stats.get(k, 0)
+            for k in gstats
+        }
 
     # ---- 5. window roll (telemetry.end_window, split by residency) ------
     ih = ((ih << 1) | (gc > 0).astype(jnp.uint8)).astype(jnp.uint8)
@@ -694,6 +773,19 @@ def _host_sharded_window(
                     : spec.n_guests
                 ]
             )
+        elif name == "snapshot":
+            # metrics.device_snapshot reconstructed from the exchange: same
+            # int sums -> bit-identical float divisions
+            alloc_near = merged["alloc_near"] + _near_scalar_delta(swaps)
+            rss = jnp.maximum(merged["alloc_tot"], 1)
+            emitted = dict(
+                epoch=epoch,
+                near_usage=alloc_near / rss,
+                near_capacity_used=alloc_near / cfg.n_near,
+                hit_rate=gstats["near_hits"] / jnp.maximum(
+                    gstats["near_hits"] + gstats["far_hits"], 1),
+                **gstats,
+            )
         else:  # pragma: no cover - engine.run_sharded validates upfront
             raise ValueError(f"collector {name!r} has no host-sharded form")
         clash = set(emitted) & set(out)
@@ -708,6 +800,8 @@ def _host_sharded_window(
         gpt=gpt, rmap=rmap, guest_counts=gc, ipt_hist=ih, epoch=epoch,
         stats=stats, loc=loc,
     )
+    if gstats is not None:
+        new_carry["gstats"] = gstats
     return new_carry, out
 
 
@@ -776,38 +870,82 @@ def _host_chunk_fn(
     max_batches: int,
     budget: int,
     collect: tuple[str, ...],
+    plan=None,  # repro.data.traces.SynthPlan for on-device synthesis
 ):
     """Compiled host-partitioned chunk driver: slice the replicated state
     into per-device ranges, scan the windows on the partitioned carry, merge
-    back once at the chunk boundary."""
+    back once at the chunk boundary. With a ``plan``, each device
+    synthesizes its local guests' accesses inside the window (same
+    gid-folded key discipline as :func:`_chunk_fn`)."""
     n_shards = mesh_size(mesh)
     cfg = spec.cfg
 
-    def body(state, chunk, logical_lo, logical_pad, hp_pad, hp_ids, hp_lo, hp_hi):
-        hp_ids, hp_lo, hp_hi = hp_ids[0], hp_lo[0], hp_hi[0]
+    def scan_chunk(state, xs, window, hp_ids):
         carry = dict(
             gpt=state.gpt, rmap=state.rmap, guest_counts=state.guest_counts,
             ipt_hist=state.ipt_hist, epoch=state.epoch, stats=state.stats,
             loc=_slice_host_local(cfg, state, hp_ids),
         )
+        if "snapshot" in collect:
+            carry["gstats"] = dict(state.stats)
+        return jax.lax.scan(window, carry, xs)
 
-        def window(c, acc):
-            return _host_sharded_window(
-                spec, n_shards, c, acc, logical_lo, logical_pad, hp_pad,
-                hp_ids, hp_lo, hp_hi, policy, backend, use_gpac, max_batches,
-                budget, collect,
+    if plan is None:
+
+        def body(state, chunk, logical_lo, logical_pad, hp_pad,
+                 hp_ids, hp_lo, hp_hi):
+            hp_ids, hp_lo, hp_hi = hp_ids[0], hp_lo[0], hp_hi[0]
+
+            def window(c, acc):
+                return _host_sharded_window(
+                    spec, n_shards, c, acc, logical_lo, logical_pad, hp_pad,
+                    hp_ids, hp_lo, hp_hi, policy, backend, use_gpac,
+                    max_batches, budget, collect,
+                )
+
+            carry, ys = scan_chunk(state, chunk, window, hp_ids)
+            return (
+                _merge_host_final(cfg, state, carry, logical_pad, hp_pad, hp_ids),
+                ys,
             )
 
-        carry, ys = jax.lax.scan(window, carry, chunk)
-        return _merge_host_final(cfg, state, carry, logical_pad, hp_pad, hp_ids), ys
+        in_specs = (
+            P(), P(None, AXIS, None), P(AXIS), P(AXIS, None), P(AXIS, None),
+            P(AXIS, None), P(AXIS), P(AXIS),
+        )
+    else:
+        from repro.data import traces as tr
+
+        def body(state, widx, logical_lo, logical_pad, hp_pad,
+                 hp_ids, hp_lo, hp_hi, seeds, gids, wid, n_logical):
+            hp_ids, hp_lo, hp_hi = hp_ids[0], hp_lo[0], hp_hi[0]
+            setup = tr.synth_setup(plan, dict(
+                seeds=seeds, gids=gids, wid=wid, n_logical=n_logical))
+
+            def window(c, w):
+                acc = tr.synth_accesses(plan, setup, w)
+                return _host_sharded_window(
+                    spec, n_shards, c, acc, logical_lo, logical_pad, hp_pad,
+                    hp_ids, hp_lo, hp_hi, policy, backend, use_gpac,
+                    max_batches, budget, collect,
+                )
+
+            carry, ys = scan_chunk(state, widx, window, hp_ids)
+            return (
+                _merge_host_final(cfg, state, carry, logical_pad, hp_pad, hp_ids),
+                ys,
+            )
+
+        in_specs = (
+            P(), P(None), P(AXIS), P(AXIS, None), P(AXIS, None),
+            P(AXIS, None), P(AXIS), P(AXIS),
+            P(AXIS), P(AXIS), P(AXIS), P(AXIS),
+        )
 
     sharded = shard_map(
         body,
         mesh=mesh,
-        in_specs=(
-            P(), P(None, AXIS, None), P(AXIS), P(AXIS, None), P(AXIS, None),
-            P(AXIS, None), P(AXIS), P(AXIS),
-        ),
+        in_specs=in_specs,
         out_specs=P(),
         check_rep=False,
     )
@@ -818,8 +956,8 @@ def run_chunk_host_sharded(
     spec,
     mesh,
     state: TieredState,
-    chunk: jax.Array,  # int32[n_windows, G_pad, k]
-    tables: dict,
+    chunk: jax.Array,  # int32[n_windows, G_pad, k], or int32[n_windows]
+    tables: dict,      # window indices when plan is given
     *,
     policy: str,
     backend: str,
@@ -827,13 +965,16 @@ def run_chunk_host_sharded(
     max_batches: int,
     budget: int,
     collect: tuple[str, ...],
+    plan=None,
+    synth_tables: dict | None = None,
 ) -> tuple[TieredState, dict]:
     """One scan-fused chunk of the host-partitioned engine
     (``engine.run_sharded(host_sharded=True)``'s inner loop)."""
     fn = _host_chunk_fn(
-        spec, mesh, policy, backend, use_gpac, max_batches, budget, collect
+        spec, mesh, policy, backend, use_gpac, max_batches, budget, collect,
+        plan,
     )
-    return fn(
+    args = (
         state,
         chunk,
         jnp.asarray(tables["logical_lo"]),
@@ -843,3 +984,6 @@ def run_chunk_host_sharded(
         jnp.asarray(tables["hp_lo"]),
         jnp.asarray(tables["hp_hi"]),
     )
+    if plan is not None:
+        args += _synth_args(synth_tables)
+    return fn(*args)

@@ -19,14 +19,37 @@ characterization of that workload:
   * ``liblinear`` -- fully dense streaming (no skew; GPAC should be a no-op).
   * generic ``zipf`` / ``gauss`` / ``uniform`` parametric generators.
 
-The generators are deterministic (numpy Generator seeded per call) and
-host-side: traces are inputs to the jitted simulator, not traced computation.
+Every workload exists in two forms, tied together by the
+:func:`register_workload` registry (the trace-side sibling of the PR-2
+policy/telemetry/collector registries):
+
+* a **numpy generator** ``fn(TraceSpec, rng) -> int32[n_windows, k]`` --
+  deterministic (numpy Generator seeded per call), host-side, the
+  *reference* distribution; and
+* a **pure-JAX window function** ``fn(WindowCtx) -> int32[k]`` that
+  synthesizes ONE window's accesses *on device*, inside the engine's scan
+  (``engine.SynthTrace``). JAX windows use counter-based RNG only
+  (``jax.random.fold_in`` of a per-guest key with the absolute window
+  index), so they are chunking-invariant and bit-identical whether a guest
+  is synthesized on one device or on its own shard of a mesh. They match
+  the numpy reference *distributionally* (same skew structure per Fig.
+  2/16), not bit-for-bit -- the numpy path stays the oracle.
+
+RNG-key discipline (DESIGN.md §12): a guest's base key is
+``fold_in(PRNGKey(seed), gid)`` with the *global* guest id, then stream 0
+(folded again with the window index) drives per-window sampling and stream 1
+derives the fixed scatter permutation -- nothing depends on device count,
+local row position, or chunk boundaries.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
 
 import numpy as np
+
+import jax
+import jax.numpy as jnp
 
 WORKLOADS = ("masim", "redis", "memcached", "hash", "ocean_ncp", "liblinear")
 
@@ -164,25 +187,318 @@ def gauss(spec: TraceSpec, rng: np.random.Generator, rel_sigma: float = 0.05):
     return _popularity_trace(spec, rng, sampler, hot_fraction=1.0)
 
 
-_GENERATORS = dict(
-    masim=masim,
-    redis=redis,
-    memcached=memcached,
-    hash=hash_workload,
-    ocean_ncp=ocean_ncp,
-    liblinear=liblinear,
-    zipf=zipf,
-    uniform=uniform,
-    gauss=gauss,
-)
+# --------------------------------------------------------------------------
+# workload registry (numpy reference + on-device JAX window function)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One registered workload: the host-side numpy reference generator and
+    (optionally) its on-device JAX window function.
+
+    ``needs_scatter``: the window function reads ``WindowCtx.scatter`` (the
+    fixed per-guest hot-set permutation); synthesis setup only builds the
+    scatter tables when some bound workload asks for them.
+    """
+
+    name: str
+    numpy_fn: Callable
+    window_fn: Callable | None = None
+    needs_scatter: bool = False
+
+
+_WORKLOADS: dict[str, Workload] = {}
+
+
+def register_workload(
+    name: str,
+    numpy_fn: Callable,
+    window_fn: Callable | None = None,
+    needs_scatter: bool = False,
+) -> Workload:
+    """Register a workload's numpy reference generator and (optionally) its
+    pure-JAX window function (see the module docstring for both contracts).
+    Mirrors the policy/telemetry/collector registries: duplicates raise,
+    unknown names raise listing the live set."""
+    if name in _WORKLOADS:
+        raise ValueError(f"workload {name!r} already registered")
+    wl = Workload(name, numpy_fn, window_fn, needs_scatter)
+    _WORKLOADS[name] = wl
+    return wl
+
+
+def get_workload(name: str) -> Workload:
+    try:
+        return _WORKLOADS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown workload {name!r} (have {workloads()})"
+        ) from None
+
+
+def workloads() -> tuple[str, ...]:
+    return tuple(_WORKLOADS)
 
 
 def generate(spec: TraceSpec, **kw) -> np.ndarray:
-    """int32[n_windows, accesses_per_window] logical page ids."""
-    gen = _GENERATORS.get(spec.workload)
-    if gen is None:
-        raise ValueError(f"unknown workload {spec.workload!r} (have {sorted(_GENERATORS)})")
-    return gen(spec, np.random.default_rng(spec.seed), **kw)
+    """int32[n_windows, accesses_per_window] logical page ids (numpy
+    reference path)."""
+    return get_workload(spec.workload).numpy_fn(
+        spec, np.random.default_rng(spec.seed), **kw
+    )
+
+
+# --------------------------------------------------------------------------
+# on-device synthesis (pure-JAX window functions, engine.SynthTrace)
+# --------------------------------------------------------------------------
+# Key streams off a guest's base key (see the module docstring): stream 0 is
+# folded again with the absolute window index for per-window draws; stream 1
+# seeds the guest's fixed scatter permutation.
+_WINDOW_STREAM = 0
+_SCATTER_STREAM = 1
+
+
+@dataclasses.dataclass
+class WindowCtx:
+    """Inputs of one JAX window function (all per ONE guest).
+
+    ``key`` is already folded with the absolute window index; ``n_logical``
+    is a *traced* int32 scalar (guests of different sizes share one compiled
+    window body via vmap); ``scatter`` is the guest's fixed scatter table --
+    a uniform permutation of ``[0, n_logical)``, so a prefix
+    ``scatter[:n_hot]`` is ``n_hot`` *distinct pages spread uniformly over
+    the whole logical space* (the numpy ``_perm(n_logical)[:n_hot]`` hot-set
+    scatter), NOT a permutation of ``[0, n_hot)`` -- or ``None`` when no
+    bound workload needs it. ``k`` / ``hp_ratio`` are static.
+    """
+
+    key: "jax.Array"
+    w: "jax.Array"
+    n_logical: "jax.Array"
+    scatter: "jax.Array | None"
+    k: int
+    hp_ratio: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SynthPlan:
+    """Static (hashable) half of a bound on-device synthesis: the distinct
+    workload set picks the compiled window bodies; everything per-guest
+    (seed, global id, workload index, size) rides in traced tables so
+    seed/workload-assignment sweeps never recompile. Deliberately excludes
+    ``n_windows`` (that lives on ``engine.SynthTrace``): no window body
+    reads it, and keeping it out of the jit key lets trace-length sweeps
+    reuse compiled chunks of the same shape."""
+
+    workload_set: tuple[str, ...]
+    accesses_per_window: int
+    hp_ratio: int
+    max_logical: int
+
+    def __post_init__(self):
+        for name in self.workload_set:
+            if get_workload(name).window_fn is None:
+                raise ValueError(
+                    f"workload {name!r} has no on-device window function; "
+                    f"generate it host-side (engine.ArrayTrace) instead"
+                )
+
+
+def guest_base_key(seed: "jax.Array", gid: "jax.Array") -> "jax.Array":
+    """The per-guest base key: global guest id folded into the seed key, so
+    sharded synthesis (each device holding only its own guests' rows) is
+    bit-identical to single-device synthesis."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), jnp.maximum(gid, 0))
+
+
+def guest_scatter(key: "jax.Array", n_logical: "jax.Array", max_logical: int):
+    """int32[max_logical]: a uniform permutation of ``[0, n_logical)`` in the
+    first ``n_logical`` entries (static-shape trick: permute the padded range
+    and stably compact the in-range values to the front -- a subsequence of a
+    uniform permutation restricted to ``< n`` is a uniform permutation of
+    ``[0, n)``)."""
+    p = jax.random.permutation(key, max_logical)
+    order = jnp.argsort(p >= n_logical, stable=True)
+    return p[order].astype(jnp.int32)
+
+
+def _j_popularity(ctx: WindowCtx, sample, hot_fraction: float, drift: float = 0.0):
+    """JAX port of :func:`_popularity_trace`'s window body: sample keys from
+    the popularity distribution, optionally drift the center, scatter onto
+    the guest's fixed hot-set permutation."""
+    n_hot = jnp.maximum(1, (ctx.n_logical * hot_fraction).astype(jnp.int32))
+    keys = sample(ctx, n_hot)
+    if drift:
+        keys = keys + (ctx.w.astype(jnp.float32) * drift
+                       * n_hot.astype(jnp.float32)).astype(keys.dtype)
+    idx = jnp.clip(keys % n_hot, 0, n_hot - 1)
+    return ctx.scatter[idx].astype(jnp.int32)
+
+
+def masim_window(ctx: WindowCtx):
+    n_hp = jnp.maximum(1, ctx.n_logical // ctx.hp_ratio)
+    idx = (jnp.arange(ctx.k, dtype=jnp.int32) + ctx.w) % n_hp
+    return ((idx * ctx.hp_ratio) % jnp.maximum(ctx.n_logical, 1)).astype(jnp.int32)
+
+
+def redis_window(ctx: WindowCtx):
+    def sample(c, n_hot):
+        sigma = n_hot.astype(jnp.float32) / 3.0
+        return jnp.abs(jax.random.normal(c.key, (c.k,)) * sigma).astype(jnp.int32)
+
+    return _j_popularity(ctx, sample, hot_fraction=0.08, drift=0.005)
+
+
+def memcached_window(ctx: WindowCtx):
+    def sample(c, n_hot):
+        sigma = n_hot.astype(jnp.float32) / 2.5
+        return jnp.abs(jax.random.normal(c.key, (c.k,)) * sigma).astype(jnp.int32)
+
+    return _j_popularity(ctx, sample, hot_fraction=0.15)
+
+
+def hash_window(ctx: WindowCtx):
+    def sample(c, n_hot):
+        return jax.random.randint(c.key, (c.k,), 0, n_hot)
+
+    return _j_popularity(ctx, sample, hot_fraction=0.30)
+
+
+def _stride_positions(k: int, n: "jax.Array") -> "jax.Array":
+    """int32[k]: ``floor(i * n / k)`` for ``i in [0, k)`` without the int32
+    overflow of the direct product (x64 is disabled, so there is no int64 to
+    widen into): ``i*n//k == i*(n//k) + i*(n%k)//k``, and both partial
+    products stay under 2**31 for any ``n < 2**31`` as long as ``k**2`` does
+    (k <= 46340; the engine's accesses_per_window is far below that)."""
+    i = jnp.arange(k, dtype=jnp.int32)
+    return i * (n // k) + (i * (n % k)) // k
+
+
+def ocean_ncp_window(ctx: WindowCtx):
+    span = jnp.maximum(1, (ctx.n_logical * 0.6).astype(jnp.int32))
+    start = jax.random.randint(
+        ctx.key, (), 0, jnp.maximum(1, ctx.n_logical - span))
+    idx = _stride_positions(ctx.k, span // 2) * 2
+    return jnp.clip((start // 2) * 2 + idx, 0, ctx.n_logical - 1).astype(jnp.int32)
+
+
+def liblinear_window(ctx: WindowCtx):
+    idx = _stride_positions(ctx.k, ctx.n_logical)
+    return jnp.clip(idx, 0, ctx.n_logical - 1).astype(jnp.int32)
+
+
+def zipf_window(ctx: WindowCtx, a: float = 1.2):
+    def sample(c, n_hot):
+        u = jax.random.uniform(c.key, (c.k,), minval=1e-7, maxval=1.0)
+        # inverse-power transform: P(X = x) ~ x^-a asymptotically (the
+        # numpy reference uses rejection sampling; equivalence is
+        # distributional). Clip in float before the int cast -- the tail
+        # of u**(-1/(a-1)) overflows int32.
+        x = jnp.clip(u ** (-1.0 / (a - 1.0)), 1.0, 2.0**30)
+        return x.astype(jnp.int32) - 1
+
+    return _j_popularity(ctx, sample, hot_fraction=1.0)
+
+
+def uniform_window(ctx: WindowCtx):
+    def sample(c, n_hot):
+        return jax.random.randint(c.key, (c.k,), 0, jnp.maximum(c.n_logical, 1))
+
+    return _j_popularity(ctx, sample, hot_fraction=1.0)
+
+
+def gauss_window(ctx: WindowCtx, rel_sigma: float = 0.05):
+    def sample(c, n_hot):
+        sigma = c.n_logical.astype(jnp.float32) * rel_sigma
+        return jnp.abs(jax.random.normal(c.key, (c.k,)) * sigma).astype(jnp.int32)
+
+    return _j_popularity(ctx, sample, hot_fraction=1.0)
+
+
+def synth_setup(plan: SynthPlan, tables: dict) -> dict:
+    """Per-chunk device-side setup of a bound synthesis: per-guest window
+    stream keys and (when some workload needs one) the fixed scatter
+    permutations. ``tables`` holds the traced per-guest rows (``seeds``,
+    ``gids``, ``wid``, ``n_logical``) -- on a mesh each device passes only
+    its local rows, and every derived value depends only on (seed, global
+    gid), never on row position or device count. Deterministic, so chunks
+    recompute it identically."""
+    base = jax.vmap(guest_base_key)(tables["seeds"], tables["gids"])
+    win_base = jax.vmap(lambda b: jax.random.fold_in(b, _WINDOW_STREAM))(base)
+    scatter = None
+    if any(get_workload(n).needs_scatter for n in plan.workload_set):
+        sc_keys = jax.vmap(lambda b: jax.random.fold_in(b, _SCATTER_STREAM))(base)
+        scatter = jax.vmap(guest_scatter, in_axes=(0, 0, None))(
+            sc_keys, tables["n_logical"], plan.max_logical)
+    return dict(
+        win_base=win_base, scatter=scatter, wid=tables["wid"],
+        gids=tables["gids"], n_logical=tables["n_logical"],
+    )
+
+
+def synth_accesses(plan: SynthPlan, setup: dict, w: "jax.Array"):
+    """int32[n_rows, k] guest-local accesses of window ``w``, generated on
+    device. SPMD-safe mixed tenancy: every workload in the (static) bound
+    set runs for every row and a traced per-row workload-id table selects --
+    cost scales with the number of *distinct* workloads, not guests. Rows
+    with ``gid < 0`` (mesh padding) emit all ``-1`` no-ops."""
+    n_rows = setup["win_base"].shape[0]
+    out = jnp.full((n_rows, plan.accesses_per_window), -1, jnp.int32)
+    for j, name in enumerate(plan.workload_set):
+        fn = get_workload(name).window_fn
+
+        def row(key, nl, sc, fn=fn):
+            ctx = WindowCtx(
+                key=jax.random.fold_in(key, w), w=w, n_logical=nl,
+                scatter=sc, k=plan.accesses_per_window,
+                hp_ratio=plan.hp_ratio,
+            )
+            return fn(ctx)
+
+        if setup["scatter"] is None:
+            rows = jax.vmap(lambda key, nl: row(key, nl, None))(
+                setup["win_base"], setup["n_logical"])
+        else:
+            rows = jax.vmap(row)(
+                setup["win_base"], setup["n_logical"], setup["scatter"])
+        out = jnp.where(setup["wid"][:, None] == j, rows, out)
+    return jnp.where(setup["gids"][:, None] >= 0, out, -1)
+
+
+def synth_generate(spec: TraceSpec, gid: int = 0) -> np.ndarray:
+    """Materialize the JAX generator's full trace ``int32[n_windows, k]`` on
+    host -- the testing/calibration entry point for distributional
+    comparison against :func:`generate` (the engine never materializes this;
+    ``engine.SynthTrace`` generates each window inside the scan)."""
+    plan = SynthPlan(
+        workload_set=(spec.workload,),
+        accesses_per_window=spec.accesses_per_window,
+        hp_ratio=spec.hp_ratio,
+        max_logical=spec.n_logical,
+    )
+    tables = dict(
+        seeds=jnp.asarray([spec.seed], jnp.int32),
+        gids=jnp.asarray([gid], jnp.int32),
+        wid=jnp.asarray([0], jnp.int32),
+        n_logical=jnp.asarray([spec.n_logical], jnp.int32),
+    )
+    setup = synth_setup(plan, tables)
+    rows = [
+        np.asarray(synth_accesses(plan, setup, jnp.int32(w))[0])
+        for w in range(spec.n_windows)
+    ]
+    return np.stack(rows) if rows else np.zeros(
+        (0, spec.accesses_per_window), np.int32)
+
+
+register_workload("masim", masim, masim_window)
+register_workload("redis", redis, redis_window, needs_scatter=True)
+register_workload("memcached", memcached, memcached_window, needs_scatter=True)
+register_workload("hash", hash_workload, hash_window, needs_scatter=True)
+register_workload("ocean_ncp", ocean_ncp, ocean_ncp_window)
+register_workload("liblinear", liblinear, liblinear_window)
+register_workload("zipf", zipf, zipf_window, needs_scatter=True)
+register_workload("uniform", uniform, uniform_window, needs_scatter=True)
+register_workload("gauss", gauss, gauss_window, needs_scatter=True)
 
 
 # Paper Table 2 guest RSS (GB) and Table 3 CL per workload -- used by the

@@ -142,12 +142,20 @@ class TestHostShardedSingleDevice:
             np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
 
     def test_unsupported_collector_raises(self):
-        spec, s0 = ragged_engine()
-        traces = engine.guest_traces(spec, n_windows=2, accesses_per_window=64)
-        mesh = sharding.guest_mesh(1)
-        with pytest.raises(ValueError, match="host-sharded"):
-            engine.run_sharded(
-                spec, s0, traces, mesh=mesh, collect=("snapshot",))
+        """Custom collectors (which read the replicated host state) still
+        fail fast under host_sharded=True; the snapshot collector gained a
+        host-sharded form (PR 5) and is covered by TestHostShardedSnapshot."""
+        name = "_test_only_replicated_collector"
+        engine.register_collector(name, lambda spec, state, window: dict(x=state.epoch))
+        try:
+            spec, s0 = ragged_engine()
+            traces = engine.guest_traces(spec, n_windows=2, accesses_per_window=64)
+            mesh = sharding.guest_mesh(1)
+            with pytest.raises(ValueError, match="host-sharded"):
+                engine.run_sharded(
+                    spec, s0, traces, mesh=mesh, collect=(name,))
+        finally:
+            engine._COLLECTORS.pop(name, None)
 
     def test_policy_without_sharded_tick_raises(self):
         name = "_test_only_replicated_policy"
@@ -166,6 +174,51 @@ class TestHostShardedSingleDevice:
 
     def test_builtin_policies_have_sharded_ticks(self):
         assert set(tiering.POLICIES) <= set(tiering.sharded_ticks())
+
+
+class TestHostShardedSnapshot:
+    """The snapshot collector's host-partitioned form: host-wide scalars
+    reconstructed from the arbitration psum (per-device stat deltas +
+    allocated/near counts + replicated tick deltas) must equal the
+    replicated collector bit-for-bit -- same int sums, same float
+    divisions."""
+
+    @pytest.mark.parametrize("use_gpac", [False, True])
+    def test_matches_replicated_collector(self, use_gpac):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=5, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(
+            spec, s0, traces, use_gpac=use_gpac, collect=("snapshot",))
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, use_gpac=use_gpac,
+            host_sharded=True, collect=("snapshot",))
+        assert_states_equal(ref_state, sh_state)
+        assert set(ref) == set(sh)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    def test_composes_with_near_blocks_and_chunking(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=6, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(
+            spec, s0, traces, collect=("snapshot", "near_blocks"))
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, host_sharded=True,
+            collect=("snapshot", "near_blocks"), windows_per_step=3)
+        assert_states_equal(ref_state, sh_state)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    def test_hits_snapshot_key_clash_still_raises(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=2, accesses_per_window=64)
+        mesh = sharding.guest_mesh(1)
+        with pytest.raises(ValueError, match="near_hits"):
+            engine.run_sharded(
+                spec, s0, traces, mesh=mesh, host_sharded=True,
+                collect=("hits", "snapshot"))
 
 
 MULTI_DEVICE_CHECK = """
@@ -208,12 +261,42 @@ def check(n_guests, mesh_n, use_gpac, policy, wps=0):
     assert ratio <= 1.1 * part.h_loc / spec.cfg.n_gpa_hp, (mesh_n, ratio)
     print("OK", n_guests, mesh_n, use_gpac, policy, flush=True)
 
+def check_synth(n_guests, mesh_n, host_sharded, collect, wps=0):
+    guests = tuple(
+        engine.GuestSpec(
+            n_logical=64 + 16 * (g % 4),
+            cl=(None if g % 3 == 0 else 3 + g % 5),
+            gpa_slack=0.25 + 0.25 * (g % 3),
+            workload=["redis", "masim", "hash"][g % 3], seed=g)
+        for g in range(n_guests))
+    spec, state = engine.build(
+        guests,
+        engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=6))
+    synth = engine.SynthTrace(n_windows=4, accesses_per_window=192)
+    mesh = sharding.guest_mesh(mesh_n)
+    s_ref, a = engine.run(spec, state, synth, collect=collect)
+    s_sh, b = engine.run_sharded(
+        spec, state, synth, mesh=mesh, host_sharded=host_sharded,
+        collect=collect, windows_per_step=wps)
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+    for x, y in zip(jax.tree_util.tree_leaves(s_ref),
+                    jax.tree_util.tree_leaves(s_sh)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    print("OK", n_guests, mesh_n, host_sharded, collect, flush=True)
+
 check(8, 8, True, "memtierd")    # one guest per device, full arbitration
 check(8, 8, False, "memtierd")   # gpac off: access phase + partitioned tick
 check(6, 8, True, "memtierd")    # padding: two devices own empty ranges
 check(8, 4, True, "tpp")         # two guests (and block ranges) per device
 check(8, 8, True, "autonuma")    # pressure scalar rides the exchange
 check(8, 4, True, "memtierd", 2) # chunked: two merges through the carry
+# on-device synthesis: padding devices synthesize -1 no-ops; chunked synth
+# re-derives the same counter-based streams; snapshot rides the exchange
+check_synth(6, 8, True, ("hits", "near_blocks"), 2)
+check_synth(8, 4, False, ("hits", "near_blocks"))
+check_synth(8, 8, True, ("snapshot",))
 """
 
 
@@ -238,4 +321,4 @@ class TestHostShardedMultiDevice:
         )
         assert proc.returncode == 0, (
             f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
-        assert proc.stdout.count("OK") == 6, proc.stdout
+        assert proc.stdout.count("OK") == 9, proc.stdout
