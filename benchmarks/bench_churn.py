@@ -1,0 +1,151 @@
+"""Steady-state churn headline figure (ISSUE 6).
+
+A Poisson arrival/departure fleet over mixed SynthTrace workloads --
+including the phase-shifting drift variants (``redis_drift`` /
+``hash_drift``), whose hot sets rotate wholesale and stress the pressure
+controller's coldest-first demotion -- runs through ``engine.run_churn``
+with a fixed, replayable fault schedule: guest crashes and restarts from
+``faults.poisson_churn``, a mid-run near-capacity shrink, a grow-back, and
+a telemetry-dropout window. The figure tracks, per window:
+
+* fleet occupancy (active lanes) and near-tier usage vs the effective cap,
+* the pressure controller's backoff signal (consecutive breach windows),
+* the fleet-aggregate near-hit rate (the paper's headline metric, now under
+  churn instead of steady tenancy).
+
+The run is asserted, not just measured: INV-CRASH-RECLAIM-COMPLETE on the
+final carry (no allocated huge page in a departed guest's segment), the
+pressure controller never overcommitting the physical near tier, and the
+no-fault control run staying bit-identical to ``engine.run``
+(INV-CHURN-NOOP-EXACT). When more than one device is visible the same
+faulted run also executes on the guest-sharded mesh and is checked
+bit-identical to the unsharded stepper.
+
+Writes ``experiments/benchmarks/bench_churn.json``.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common, registry
+from repro.core import engine, faults
+from repro.core.types import allocated_hp_mask
+
+NAME = "bench_churn"
+assert NAME in registry.SUITES, "suite must be registered in benchmarks.registry"
+
+N_GUESTS = 24
+LOGICAL_PER_GUEST = 512
+N_WINDOWS = 20
+ACCESSES = 2048
+HP_RATIO = 32
+WORKLOADS = ("redis_drift", "hash_drift", "redis", "masim", "hash", "memcached")
+
+
+def _fleet():
+    guests = tuple(
+        engine.GuestSpec(n_logical=LOGICAL_PER_GUEST, cl=8, gpa_slack=1.0,
+                         workload=WORKLOADS[g % len(WORKLOADS)], seed=g)
+        for g in range(N_GUESTS))
+    host = engine.HostSpec(hp_ratio=HP_RATIO, near_fraction=0.25,
+                           base_elems=2, cl=8, ipt_min_hits=1)
+    return engine.build(guests, host)
+
+
+def _schedule(spec) -> faults.FaultSchedule:
+    n_near = spec.cfg.n_near
+    return (faults.poisson_churn(N_GUESTS, N_WINDOWS, arrival_rate=0.8,
+                                 departure_rate=0.06, seed=0)
+            .shrink(N_WINDOWS // 3, max(1, int(n_near * 0.7)))
+            .shrink(2 * N_WINDOWS // 3, n_near)
+            .dropout(N_WINDOWS // 2))
+
+
+def _reclaim_complete(spec, cs) -> bool:
+    _, hp_owner, _, _ = faults.segment_tables(spec.canonical())
+    owner = np.asarray(hp_owner)
+    active = np.asarray(cs.active)
+    alloc = np.asarray(allocated_hp_mask(spec.cfg, cs.state))
+    orphans = alloc & (owner >= 0) & ~active[np.clip(owner, 0, None)]
+    return not bool(orphans.any())
+
+
+def run() -> dict:
+    spec, s0 = _fleet()
+    synth = engine.SynthTrace(n_windows=N_WINDOWS,
+                              accesses_per_window=ACCESSES)
+    sched = _schedule(spec)
+
+    # the headline faulted run
+    with common.Timer() as t:
+        cs, se = engine.run_churn(spec, engine.init_churn(spec), synth,
+                                  faults=sched)
+        jax.block_until_ready(cs.state.block_table)
+    near = np.asarray(se["near_hits"]).sum(axis=1)
+    far = np.asarray(se["far_hits"]).sum(axis=1)
+    hit_rate = near / np.maximum(near + far, 1)
+    usage = np.asarray(se["near_blocks"]).sum(axis=1)
+    occupancy = np.asarray(se["active"]).sum(axis=1)
+    reclaim = _reclaim_complete(spec, cs)
+    overcommit = bool((usage > spec.cfg.n_near).any())
+
+    # the no-fault control run must stay bit-identical to engine.run
+    ref_state, _ = engine.run(spec, s0, synth)
+    ctrl, _ = engine.run_churn(spec, engine.init_churn(spec), synth)
+    noop_exact = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(ref_state),
+                        jax.tree_util.tree_leaves(ctrl.state)))
+
+    mesh = common.default_guest_mesh()
+    sharded_exact = None
+    if mesh is not None:
+        sh, sh_se = engine.run_churn(spec, engine.init_churn(spec), synth,
+                                     faults=sched, mesh=mesh)
+        sharded_exact = all(
+            np.array_equal(np.asarray(a), np.asarray(b))
+            for a, b in zip(jax.tree_util.tree_leaves(cs),
+                            jax.tree_util.tree_leaves(sh))
+        ) and all(np.array_equal(se[k], sh_se[k]) for k in se)
+
+    payload = dict(
+        suite=NAME,
+        description=registry.describe(NAME),
+        backend=jax.default_backend(),
+        n_guests=N_GUESTS,
+        logical_per_guest=LOGICAL_PER_GUEST,
+        n_windows=N_WINDOWS,
+        accesses_per_window=ACCESSES,
+        hp_ratio=HP_RATIO,
+        workloads=list(WORKLOADS),
+        n_fault_events=sched.n_events,
+        n_near=int(spec.cfg.n_near),
+        wall_s=t.ms / 1e3,
+        occupancy=occupancy.tolist(),
+        near_usage=usage.tolist(),
+        near_cap=np.asarray(se["near_cap"]).tolist(),
+        pressure=np.asarray(se["pressure"]).tolist(),
+        hit_rate=hit_rate.tolist(),
+        mean_hit_rate=float(hit_rate.mean()),
+        reclaim_complete=reclaim,
+        never_overcommits=not overcommit,
+        noop_exact=noop_exact,
+        sharded_exact=sharded_exact,
+    )
+    ok = reclaim and not overcommit and noop_exact and sharded_exact in (None, True)
+    print(f"  {N_GUESTS} guests x {N_WINDOWS} windows, "
+          f"{sched.n_events} fault events: mean occupancy "
+          f"{occupancy.mean():.1f}, mean hit rate {hit_rate.mean():.2f}, "
+          f"peak pressure {max(payload['pressure'])}, "
+          f"reclaim {'OK' if reclaim else 'INCOMPLETE'}, "
+          f"noop {'exact' if noop_exact else 'DIVERGED'}"
+          + ("" if sharded_exact is None else
+             f", sharded {'exact' if sharded_exact else 'DIVERGED'}"))
+    if not ok:
+        raise SystemExit("bench_churn invariant violation (see payload)")
+    return common.save(NAME, payload)
+
+
+if __name__ == "__main__":
+    run()

@@ -22,6 +22,21 @@ pod-size row (``POD``, n_guests >= 128) runs the synth path alone -- the
 array path is skipped with a logged reason, since its host trace would be
 O(n_guests * n_windows * k).
 
+Every timed (case, runner) pair runs in a FRESH SUBPROCESS (``--worker``
+mode): on a small shared-CPU container the in-process sequence let earlier
+runners pollute later ones (allocator state, XLA autotuning, thermal
+throttle), which made the ``sharded_no_slower_at_scale`` ratio flap. A
+worker times exactly one runner and prints its JSON on stdout; the parent
+merges and computes the ratios. Set ``BENCH_ENGINE_IN_PROCESS=1`` to fall
+back to in-process timing (debugging, or environments where spawning is
+expensive).
+
+A steady-state churn case (ISSUE 6) times ``engine.run_churn`` under a
+Poisson arrival/departure fault schedule over mixed drift workloads against
+the plain driver on the same fleet (``churn_s`` / ``churn_vs_engine``), and
+asserts INV-CRASH-RECLAIM-COMPLETE on the final state
+(``reclaim_complete``).
+
 Writes ``BENCH_engine.json`` at the repo root (the perf-trajectory artifact
 CI archives) and ``experiments/benchmarks/<NAME>.json`` (``NAME`` comes from
 the shared suite registry, ``benchmarks.registry``).
@@ -29,6 +44,9 @@ the shared suite registry, ``benchmarks.registry``).
 from __future__ import annotations
 
 import json
+import os
+import subprocess
+import sys
 import time
 import warnings
 
@@ -36,7 +54,8 @@ import jax
 import numpy as np
 
 from benchmarks import common, registry
-from repro.core import engine, simulate
+from repro.core import engine, faults, simulate
+from repro.core.types import allocated_hp_mask
 from repro.data import traces as tr
 
 NAME = "bench_engine"
@@ -60,6 +79,10 @@ GRID = (
 # and is skipped with a logged reason
 POD = (128, 256, 8)  # (n_guests, logical_per_guest, n_windows)
 
+# steady-state churn fleet (ISSUE 6): Poisson arrival/departure over mixed
+# drift workloads with a capacity shrink and a telemetry dropout
+CHURN = (8, 512, 12)  # (n_guests, logical_per_guest, n_windows)
+
 
 def _best_of(make, runner, traces, case, key) -> None:
     # block on the returned *state*, not just the host series: the drivers
@@ -79,7 +102,7 @@ def _best_of(make, runner, traces, case, key) -> None:
 
 
 def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
-                mesh) -> dict:
+                mesh, only: str | None = None) -> dict:
     traces = np.stack([
         tr.generate(tr.TraceSpec(
             "redis", n_logical=logical_per_guest, hp_ratio=HP_RATIO,
@@ -125,6 +148,11 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
         n_logical=n_guests * logical_per_guest, n_windows=n_windows,
         hp_ratio=HP_RATIO, accesses_per_window=ACCESSES,
         n_devices=1 if mesh is None else mesh.shape["guest"])
+    if mesh is not None:
+        report = common.host_state_report(spec, mesh)
+        case["host_state_bytes_replicated"] = report["replicated_bytes_per_device"]
+        case["host_state_bytes_per_device"] = report["sharded_bytes_per_device"]
+        case["host_state_scaling"] = report["scaling"]
     runners = [
         ("reference", simulate.run_multi_guest_reference),
         ("engine", run_engine),
@@ -133,19 +161,26 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
     if mesh is not None:
         runners.append(("engine_sharded", run_sharded))
         runners.append(("host_sharded", run_host_sharded))
+    if only is not None:
+        runners = [(n, r) for n, r in runners if n == only]
+        if not runners:
+            raise ValueError(f"unknown runner {only!r}")
     for name, runner in runners:
         _best_of(make, runner, traces, case, name)
+    if only is None:
+        _finalize_case(case)
+    return case
+
+
+def _finalize_case(case: dict) -> None:
+    """The cross-runner ratios, computed once every timing key is present
+    (in one process, or merged from the per-runner worker subprocesses)."""
     case["speedup"] = case["reference_s"] / case["engine_s"]
     case["synth_vs_engine"] = case["engine_s"] / case["synth_s"]
-    if mesh is not None:
+    if "engine_sharded_s" in case:
         # > 1 means the sharded driver beat the single-device engine
         case["sharded_speedup"] = case["engine_s"] / case["engine_sharded_s"]
         case["host_sharded_speedup"] = case["engine_s"] / case["host_sharded_s"]
-        report = common.host_state_report(spec, mesh)
-        case["host_state_bytes_replicated"] = report["replicated_bytes_per_device"]
-        case["host_state_bytes_per_device"] = report["sharded_bytes_per_device"]
-        case["host_state_scaling"] = report["scaling"]
-    return case
 
 
 def _pod_case(mesh) -> dict:
@@ -191,12 +226,117 @@ def _pod_case(mesh) -> dict:
     return case
 
 
+def _churn_case() -> dict:
+    """The steady-state churn benchmark (ISSUE 6): a Poisson
+    arrival/departure fleet over mixed drift workloads, with a mid-run
+    capacity shrink and a telemetry dropout, timed against the plain scan
+    driver on the same fleet and trace source. ``churn_vs_engine`` isolates
+    the fault machinery's overhead; ``reclaim_complete`` asserts
+    INV-CRASH-RECLAIM-COMPLETE (no allocated huge page left in a departed
+    guest's segment) on the final carry."""
+    n_guests, logical_per_guest, n_windows = CHURN
+    workloads = ("redis_drift", "hash_drift", "redis", "masim")
+    guests = tuple(
+        engine.GuestSpec(n_logical=logical_per_guest, cl=8, gpa_slack=1.0,
+                         workload=workloads[g % len(workloads)], seed=g)
+        for g in range(n_guests))
+    host = engine.HostSpec(hp_ratio=HP_RATIO, near_fraction=0.25,
+                           base_elems=2, cl=8, ipt_min_hits=1)
+    spec, _ = engine.build(guests, host)
+    synth = engine.SynthTrace(n_windows=n_windows,
+                              accesses_per_window=ACCESSES)
+    sched = (faults.poisson_churn(n_guests, n_windows, arrival_rate=0.5,
+                                  departure_rate=0.08, seed=0)
+             .shrink(n_windows // 2, max(1, int(spec.cfg.n_near * 0.75)))
+             .dropout(n_windows // 3))
+    case = dict(
+        n_guests=n_guests, logical_per_guest=logical_per_guest,
+        n_logical=n_guests * logical_per_guest, n_windows=n_windows,
+        hp_ratio=HP_RATIO, accesses_per_window=ACCESSES, n_devices=1,
+        churn=True, workloads=list(workloads), n_fault_events=sched.n_events)
+
+    def make_plain():
+        return None, engine.init_engine_state(spec)
+
+    def run_plain(_, state, t):
+        return engine.run(spec, state, synth)
+
+    def make_churn():
+        return None, engine.init_churn(spec)
+
+    def run_churned(_, cs, t):
+        return engine.run_churn(spec, cs, synth, faults=sched)
+
+    _best_of(make_plain, run_plain, None, case, "engine")
+    _best_of(make_churn, run_churned, None, case, "churn")
+    case["churn_vs_engine"] = case["engine_s"] / case["churn_s"]
+    # INV-CRASH-RECLAIM-COMPLETE on the final carry of an untimed run
+    cs, _ = engine.run_churn(spec, engine.init_churn(spec), synth,
+                             faults=sched)
+    _, hp_owner, _, _ = faults.segment_tables(spec.canonical())
+    owner = np.asarray(hp_owner)
+    active = np.asarray(cs.active)
+    alloc = np.asarray(allocated_hp_mask(spec.cfg, cs.state))
+    orphans = alloc & (owner >= 0) & ~active[np.clip(owner, 0, None)]
+    case["reclaim_complete"] = not bool(orphans.any())
+    return case
+
+
+# --------------------------------------------------------------------------
+# per-runner worker subprocesses
+# --------------------------------------------------------------------------
+_WORKER_TAG = "BENCH_WORKER_RESULT "
+
+
+def _worker_main(req: dict) -> dict:
+    mesh = common.default_guest_mesh()
+    if req["kind"] == "grid":
+        n_guests, logical_per_guest, n_windows = GRID[req["index"]]
+        return _bench_case(n_guests, logical_per_guest, n_windows, mesh,
+                           only=req["runner"])
+    if req["kind"] == "pod":
+        return _pod_case(mesh)
+    if req["kind"] == "churn":
+        return _churn_case()
+    raise ValueError(f"unknown worker request {req!r}")
+
+
+def _run_worker(req: dict) -> dict:
+    """Time one (case, runner) pair in a fresh subprocess so runners cannot
+    pollute each other's wall clock. ``BENCH_ENGINE_IN_PROCESS=1`` falls
+    back to in-process timing."""
+    if os.environ.get("BENCH_ENGINE_IN_PROCESS"):
+        return _worker_main(req)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_engine", "--worker",
+         json.dumps(req)],
+        capture_output=True, text=True, env=env, timeout=1800)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"bench worker {req} failed:\nstdout:\n{proc.stdout}\n"
+            f"stderr:\n{proc.stderr}")
+    for line in reversed(proc.stdout.splitlines()):
+        if line.startswith(_WORKER_TAG):
+            return json.loads(line[len(_WORKER_TAG):])
+    raise RuntimeError(
+        f"bench worker {req} printed no result:\nstdout:\n{proc.stdout}\n"
+        f"stderr:\n{proc.stderr}")
+
+
 def run() -> dict:
     mesh = common.default_guest_mesh()
     n_devices = 1 if mesh is None else mesh.shape["guest"]
+    runner_names = ["reference", "engine", "synth"]
+    if mesh is not None:
+        runner_names += ["engine_sharded", "host_sharded"]
     cases = []
-    for n_guests, logical_per_guest, n_windows in GRID:
-        case = _bench_case(n_guests, logical_per_guest, n_windows, mesh)
+    for i, (n_guests, logical_per_guest, n_windows) in enumerate(GRID):
+        case: dict = {}
+        for runner in runner_names:
+            case.update(_run_worker(dict(kind="grid", index=i, runner=runner)))
+        _finalize_case(case)
         cases.append(case)
         sharded = (f" sharded[{n_devices}d] {case['engine_sharded_s']*1e3:8.1f} ms"
                    if "engine_sharded_s" in case else "")
@@ -208,11 +348,19 @@ def run() -> dict:
               f" engine {case['engine_s']*1e3:8.1f} ms"
               f" synth {case['synth_s']*1e3:8.1f} ms"
               f" speedup {case['speedup']:5.2f}x{sharded}{host}")
-    pod = _pod_case(mesh)
+    pod = _run_worker(dict(kind="pod"))
     cases.append(pod)
     print(f"  n_guests={pod['n_guests']:3d} n_logical={pod['n_logical']:6d} "
           f"windows={pod['n_windows']:3d}: synth {pod['synth_s']*1e3:8.1f} ms "
           f"(pod row; array path skipped)")
+    churn = _run_worker(dict(kind="churn"))
+    cases.append(churn)
+    print(f"  churn fleet {churn['n_guests']:3d} guests x "
+          f"{churn['n_windows']} windows ({churn['n_fault_events']} fault "
+          f"events): engine {churn['engine_s']*1e3:8.1f} ms churn "
+          f"{churn['churn_s']*1e3:8.1f} ms ratio "
+          f"{churn['churn_vs_engine']:.2f} reclaim "
+          f"{'OK' if churn['reclaim_complete'] else 'INCOMPLETE'}")
     at_scale = [
         c["speedup"] for c in cases if c["n_guests"] >= 8 and "speedup" in c]
     sharded_at_scale = [
@@ -233,6 +381,8 @@ def run() -> dict:
         meets_target=min(at_scale) >= 3.0,
         pod_guests=pod["n_guests"],
         pod_synth_s=pod["synth_s"],
+        churn_vs_engine=churn["churn_vs_engine"],
+        reclaim_complete=churn["reclaim_complete"],
     )
     if sharded_at_scale:
         # acceptance: the sharded path is no slower than the single-device
@@ -252,6 +402,10 @@ def run() -> dict:
 
 
 if __name__ == "__main__":
+    if len(sys.argv) >= 2 and sys.argv[1] == "--worker":
+        result = _worker_main(json.loads(sys.argv[2]))
+        print(_WORKER_TAG + json.dumps(result, default=float), flush=True)
+        sys.exit(0)
     r = run()
     print(f"min speedup at n_guests>=8: {r['min_speedup_at_scale']:.2f}x "
           f"(target >= {r['target_speedup_at_scale']}x) "
@@ -266,3 +420,5 @@ if __name__ == "__main__":
               f"{r['min_host_sharded_speedup_at_scale']:.2f}x; per-device "
               f"host state {r['host_state_scaling']:.2f}x of replicated on "
               f"{r['n_devices']} devices")
+    print(f"churn vs engine: {r['churn_vs_engine']:.2f}x; crash reclaim "
+          f"{'complete' if r['reclaim_complete'] else 'INCOMPLETE'}")

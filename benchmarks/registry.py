@@ -25,6 +25,8 @@ SUITES: dict[str, str] = {
                            "on one host (Fig. 16 at scale, SynthTrace)",
     "fig17_pressure": "benefit vs near:far capacity ratio (Fig. 17)",
     "bench_engine": "engine vs seed-reference wall-clock (BENCH_engine.json)",
+    "bench_churn": "steady-state churn: Poisson guest arrival/departure with "
+                   "faults and pressure-aware degradation (ISSUE 6 headline)",
 }
 
 

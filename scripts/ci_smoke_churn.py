@@ -1,0 +1,105 @@
+#!/usr/bin/env python
+"""Churn + fault-injection CI smoke (ISSUE 6).
+
+A small mixed fleet runs the steady-state stepper under a fixed fault
+schedule -- guest crashes, a restart, a near-capacity shrink with grow-back,
+and a telemetry-dropout window -- and the run is checked for the two §13
+invariants:
+
+* INV-CHURN-NOOP-EXACT: the no-fault control run is bit-identical to
+  ``engine.run`` (final state and every collector series), and the faulted
+  run is bit-identical across ``windows_per_step`` chunkings.
+* INV-CRASH-RECLAIM-COMPLETE: every crashed guest's near blocks are
+  reclaimed within the crash window, its rmap segment is FREE, no allocated
+  huge page is left in an inactive guest's segment, and the pressure
+  controller never overcommits the physical near tier.
+
+Shared entry point for CI (`python scripts/ci_smoke_churn.py`) and the test
+suite (`pytest -m smoke`, tests/test_ci_smoke.py) so the smoke code cannot
+drift from the library API. Single-device: the multi-device churn matrix
+rides tests/test_churn.py's forced-8-device subprocess.
+"""
+import sys
+
+
+def main() -> int:
+    import jax
+    import numpy as np
+
+    from repro.core import engine, faults
+    from repro.core.types import FREE, allocated_hp_mask
+
+    guests = tuple(
+        engine.GuestSpec(n_logical=64 + 16 * (g % 3),
+                         cl=(None if g % 3 == 0 else 3 + g),
+                         workload=["redis", "redis_drift", "hash_drift"][g % 3],
+                         seed=g)
+        for g in range(4))
+    spec, s0 = engine.build(
+        guests, engine.HostSpec(hp_ratio=16, near_fraction=0.4,
+                                base_elems=2, cl=6))
+    n_windows = 8
+    synth = engine.SynthTrace(n_windows=n_windows, accesses_per_window=192)
+    sched = (faults.FaultSchedule(spec.n_guests)
+             .crash(1, 0).restart(4, 0).crash(3, 2)
+             .shrink(2, max(1, spec.cfg.n_near - 2))
+             .shrink(6, spec.cfg.n_near)
+             .dropout(5))
+
+    # INV-CHURN-NOOP-EXACT: no-fault control vs engine.run
+    ref_state, ref = engine.run(spec, s0, synth)
+    ctrl, ctrl_se = engine.run_churn(spec, engine.init_churn(spec), synth)
+    for a, b in zip(jax.tree_util.tree_leaves(ref_state),
+                    jax.tree_util.tree_leaves(ctrl.state)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg="no-fault churn diverged")
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], ctrl_se[k], err_msg=k)
+
+    # the faulted run, bit-identical across chunkings
+    cs, se = engine.run_churn(spec, engine.init_churn(spec), synth,
+                              faults=sched)
+    cs2, se2 = engine.run_churn(spec, engine.init_churn(spec), synth,
+                                faults=sched, windows_per_step=4,
+                                strict_wps=True)
+    for a, b in zip(jax.tree_util.tree_leaves(cs),
+                    jax.tree_util.tree_leaves(cs2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg="chunking changed faulted run")
+    for k in se:
+        np.testing.assert_array_equal(se[k], se2[k], err_msg=k)
+
+    # INV-CRASH-RECLAIM-COMPLETE: guest 2 stays crashed at the end
+    blocks = np.asarray(se["near_blocks"])
+    active = np.asarray(se["active"])
+    assert blocks[1, 0] == 0 and blocks[3, 2] == 0, (
+        "crash window still holds near blocks")
+    assert (blocks[~active] == 0).all(), "inactive lane holds near blocks"
+    hp_lo, hp_hi = spec.hp_range(2)
+    r = spec.cfg.hp_ratio
+    rmap = np.asarray(cs.state.rmap)
+    assert (rmap[hp_lo * r:hp_hi * r] == int(FREE)).all(), (
+        "crashed guest's gpa segment not FREE")
+    _, hp_owner, _, _ = faults.segment_tables(spec.canonical())
+    owner = np.asarray(hp_owner)
+    act = np.asarray(cs.active)
+    alloc = np.asarray(allocated_hp_mask(spec.cfg, cs.state))
+    orphans = alloc & (owner >= 0) & ~act[np.clip(owner, 0, None)]
+    assert not orphans.any(), f"orphaned huge pages: {np.nonzero(orphans)}"
+
+    # the pressure controller honors the physical tier and the shrink shows
+    # up in the series
+    usage = blocks.sum(axis=1)
+    assert (usage <= spec.cfg.n_near).all(), "near tier overcommitted"
+    caps = np.asarray(se["near_cap"])
+    assert caps[2] == max(1, spec.cfg.n_near - 2) and caps[7] == spec.cfg.n_near
+
+    print(f"churn engine smoke OK ({spec.n_guests} guests, {n_windows} "
+          f"windows, {sched.n_events} fault events: noop-exact, "
+          f"chunking-invariant, crash reclaim complete, near tier never "
+          f"overcommitted)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

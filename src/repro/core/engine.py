@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import address_space as asp
+from repro.core import faults as faults_mod
 from repro.core import gpac, metrics, telemetry, tiering
 from repro.core.types import GpacConfig, TieredState, allocated_hp_mask, init_state
 
@@ -612,7 +613,7 @@ def _step_impl(
 
 def step(
     spec: EngineSpec,
-    state: TieredState,
+    state,  # TieredState, or a ChurnState for the steady-state stepper
     accesses: jax.Array,
     policy: str = "memtierd",
     backend: str = "ipt",
@@ -620,8 +621,30 @@ def step(
     max_batches: int = 4,
     budget: int = 64,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
-) -> tuple[TieredState, dict]:
-    """One engine window (jitted single-window entry point)."""
+    *,
+    faults_row: dict | None = None,
+    mesh=None,
+    slack: int = 1,
+) -> tuple:
+    """One engine window (jitted single-window entry point).
+
+    Handed a :class:`ChurnState` (from :func:`init_churn`) this dispatches
+    to the steady-state stepper :func:`step_churn`: the carry persists the
+    activity mask and pressure-controller state between calls, and
+    ``faults_row`` injects this window's faults. A no-fault step loop over a
+    ChurnState reproduces :func:`run` bit-for-bit."""
+    if isinstance(state, ChurnState):
+        return step_churn(
+            spec, state, accesses, faults_row=faults_row, mesh=mesh,
+            policy=policy, backend=backend, use_gpac=use_gpac,
+            max_batches=max_batches, budget=budget, slack=slack,
+            collect=tuple(collect),
+        )
+    if faults_row is not None or mesh is not None:
+        raise TypeError(
+            "faults_row/mesh need the steady-state stepper: pass a "
+            "ChurnState carry (engine.init_churn)"
+        )
     return _step_impl(
         spec.canonical(), state, accesses, policy, backend, use_gpac,
         max_batches, budget, tuple(collect),
@@ -977,6 +1000,429 @@ def run_series(
         hit_rate=hit_rate,
         throughput=throughput,
     )
+
+
+# --------------------------------------------------------------------------
+# steady-state churn engine (DESIGN.md §13)
+# --------------------------------------------------------------------------
+# per-window series every churn driver emits alongside the collectors
+_CHURN_SERIES = ("active", "near_cap", "pressure")
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("state", "active", "window", "near_cap", "pressure", "engaged"),
+    meta_fields=(),
+)
+@dataclasses.dataclass
+class ChurnState:
+    """The steady-state stepper's carry: the tiered state plus the ring of
+    churn bookkeeping that persists *between* driver calls (DESIGN.md §13).
+
+    ``active`` is the guest-axis activity mask: the compiled geometry never
+    changes, lanes just flip active/inactive -- an inactive lane contributes
+    zero accesses, holds zero blocks and is excluded from arbitration.
+    ``window`` is the absolute index of the next window to run (the synth
+    RNG and fault schedules are keyed on it, so a stepper resumed at window
+    ``w`` continues the exact streams a straight run would produce).
+    ``near_cap`` / ``pressure`` / ``engaged`` carry the pressure controller
+    (``tiering.pressure_tick``) across windows.
+    """
+
+    state: TieredState
+    active: jax.Array  # bool[n_guests] lane activity mask
+    window: jax.Array  # int32[] absolute index of the next window
+    near_cap: jax.Array  # int32[] effective near capacity in force
+    pressure: jax.Array  # int32[] consecutive pressure-engaged windows
+    engaged: jax.Array  # bool[] pressure-controller hysteresis latch
+
+
+def init_churn(
+    spec: EngineSpec,
+    state: TieredState | None = None,
+    active: np.ndarray | None = None,
+    window: int = 0,
+) -> ChurnState:
+    """Wrap an engine state for the steady-state stepper.
+
+    With the defaults (fresh identity state, all lanes active, window 0)
+    a no-fault churn run is bit-identical to :func:`run` from the same
+    state (INV-CHURN-NOOP-EXACT). ``active`` may mark lanes inactive at
+    boot -- their segments are reclaimed immediately (crash semantics), so
+    they hold no blocks until a restart fault boots them.
+    """
+    if state is None:
+        state = init_engine_state(spec)
+    n_g = spec.n_guests
+    act = (np.ones((n_g,), bool) if active is None
+           else np.asarray(active, bool))
+    if act.shape != (n_g,):
+        raise ValueError(
+            f"active mask must be bool[n_guests={n_g}], got shape {act.shape}"
+        )
+    cs = ChurnState(
+        state=state,
+        active=jnp.asarray(act),
+        window=jnp.asarray(int(window), jnp.int32),
+        near_cap=jnp.asarray(spec.cfg.n_near, jnp.int32),
+        pressure=jnp.zeros((), jnp.int32),
+        engaged=jnp.zeros((), bool),
+    )
+    if not act.all():
+        st, act2 = faults_mod.apply_guest_faults(
+            spec.canonical(), cs.state, jnp.ones((n_g,), bool),
+            jnp.asarray(~act), jnp.zeros((n_g,), bool),
+        )
+        cs = dataclasses.replace(cs, state=st, active=act2)
+    return cs
+
+
+def _churn_window(
+    spec: EngineSpec,
+    cs: ChurnState,
+    accesses: jax.Array,  # int32[n_guests, k] guest-local ids, -1 padded
+    frow: dict,  # this window's fault row (crash/restart/near_cap/drop)
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    slack: int,
+    collect: tuple[str, ...],
+) -> tuple[ChurnState, dict]:
+    """Traceable body of one churn window: :func:`_window` with the fault
+    row applied first, inactive lanes' accesses masked to -1 (value-exact:
+    the engine treats negative ids as no-ops end to end), telemetry gated by
+    the dropout bit, and the pressure controller run after the policy tick.
+
+    With an all-no-op fault row and an all-active mask every extra operation
+    is value-exact identity, so the scan over windows stays bit-identical to
+    :func:`run` (INV-CHURN-NOOP-EXACT). The telemetry write uses the
+    histogram formulation unconditionally (``asp.access_histogram`` +
+    ``asp.apply_access_histogram``), the same bit-identical path the sharded
+    driver always takes, so the dropout gate is a single integer multiply.
+    """
+    cfg = spec.cfg
+    state, active = faults_mod.apply_guest_faults(
+        spec, cs.state, cs.active, frow["crash"], frow["restart"]
+    )
+    near_cap = jnp.minimum(frow["near_cap"], jnp.int32(cfg.n_near))
+    acc = jnp.where(active[:, None], accesses, -1)
+    ids = spec.localize(acc)
+    slot, _, valid = asp.translate(cfg, state, ids)
+    window = dict(
+        near_hits=(valid & (slot < cfg.n_near)).sum(axis=1),
+        far_hits=(valid & (slot >= cfg.n_near)).sum(axis=1),
+    )
+    keep = jnp.where(frow["drop"], 0, 1).astype(jnp.int32)
+    state = asp.apply_access_histogram(
+        cfg, state, asp.access_histogram(cfg, ids, valid) * keep
+    )
+    if use_gpac:
+        state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
+    state = tiering.tick(cfg, state, policy, budget=budget)
+    state, engaged, press = tiering.pressure_tick(
+        cfg, state, near_cap, cs.engaged, cs.pressure,
+        budget=budget, slack=slack,
+    )
+    state = telemetry.end_window(cfg, state)
+    out = run_collectors(spec, state, window, collect)
+    clash = set(out) & set(_CHURN_SERIES)
+    if clash:
+        raise ValueError(
+            f"collectors {collect} emit keys {sorted(clash)} reserved for "
+            f"the churn series {_CHURN_SERIES}"
+        )
+    out.update(active=active, near_cap=near_cap, pressure=press)
+    cs = ChurnState(
+        state=state, active=active, window=cs.window + 1,
+        near_cap=near_cap, pressure=press, engaged=engaged,
+    )
+    return cs, out
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "policy", "backend", "use_gpac", "max_batches", "budget",
+        "slack", "collect",
+    ),
+)
+def _churn_chunk(
+    spec: EngineSpec,
+    cs: ChurnState,
+    chunk: jax.Array,  # int32[n_windows, n_guests, k]
+    crash: jax.Array,  # bool[n_windows, n_guests]
+    restart: jax.Array,  # bool[n_windows, n_guests]
+    near_cap: jax.Array,  # int32[n_windows]
+    drop: jax.Array,  # bool[n_windows]
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    slack: int,
+    collect: tuple[str, ...],
+) -> tuple[ChurnState, dict]:
+    def body(c, xs):
+        acc, frow = xs
+        return _churn_window(
+            spec, c, acc, frow, policy, backend, use_gpac, max_batches,
+            budget, slack, collect,
+        )
+
+    xs = (chunk, dict(crash=crash, restart=restart, near_cap=near_cap, drop=drop))
+    return jax.lax.scan(body, cs, xs)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "spec", "plan", "policy", "backend", "use_gpac", "max_batches",
+        "budget", "slack", "collect",
+    ),
+)
+def _churn_chunk_synth(
+    spec: EngineSpec,
+    plan,  # repro.data.traces.SynthPlan (static)
+    cs: ChurnState,
+    widx: jax.Array,  # int32[n_windows] absolute window indices
+    tables: dict,  # traced per-guest rows (seeds/gids/wid/n_logical)
+    crash: jax.Array,
+    restart: jax.Array,
+    near_cap: jax.Array,
+    drop: jax.Array,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    slack: int,
+    collect: tuple[str, ...],
+) -> tuple[ChurnState, dict]:
+    """Churn chunk with on-device synthesis: window accesses are generated
+    inside the scan from the *absolute* window index, so a stepper resumed
+    at any window continues the exact access streams (counter-based RNG)."""
+    from repro.data import traces as tr
+
+    setup = tr.synth_setup(plan, tables)
+
+    def body(c, xs):
+        w, frow = xs
+        acc = tr.synth_accesses(plan, setup, w)
+        return _churn_window(
+            spec, c, acc, frow, policy, backend, use_gpac, max_batches,
+            budget, slack, collect,
+        )
+
+    xs = (widx, dict(crash=crash, restart=restart, near_cap=near_cap, drop=drop))
+    return jax.lax.scan(body, cs, xs)
+
+
+def _resolve_fault_tables(
+    spec: EngineSpec, cs: ChurnState, faults, n_windows: int, start: int,
+):
+    """The dense fault rows for this driver call: an explicit schedule
+    compiles against the physical ``n_near`` (its capacity step function is
+    absolute); ``faults=None`` keeps the carried effective capacity (a
+    shrink injected by an earlier call stays in force across no-fault
+    calls); precompiled :class:`repro.core.faults.FaultTables` must match
+    the run's exact window range (replayability guard)."""
+    cfg = spec.cfg
+    if faults is None:
+        return faults_mod.no_faults(spec.n_guests).tables(
+            n_windows, int(np.asarray(cs.near_cap)), start=start
+        )
+    if isinstance(faults, faults_mod.FaultSchedule):
+        if faults.n_guests != spec.n_guests:
+            raise ValueError(
+                f"fault schedule is for {faults.n_guests} guests, spec has "
+                f"{spec.n_guests}"
+            )
+        return faults.tables(n_windows, cfg.n_near, start=start)
+    if isinstance(faults, faults_mod.FaultTables):
+        if (faults.n_windows != n_windows or faults.n_guests != spec.n_guests
+                or faults.start != start):
+            raise ValueError(
+                f"fault tables cover windows [{faults.start}, "
+                f"{faults.start + faults.n_windows}) x {faults.n_guests} "
+                f"guests; this run is windows [{start}, {start + n_windows})"
+                f" x {spec.n_guests}"
+            )
+        return faults
+    raise TypeError(
+        f"faults must be a FaultSchedule, FaultTables or None, got "
+        f"{type(faults).__name__}"
+    )
+
+
+def run_churn(
+    spec: EngineSpec,
+    cs: ChurnState,
+    source: TraceSource | np.ndarray | None = None,
+    *,
+    faults=None,  # FaultSchedule | FaultTables | None
+    mesh=None,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    slack: int = 1,
+    windows_per_step: int = 0,
+    strict_wps: bool = False,
+    collect: tuple[str, ...] = ("hits", "near_blocks"),
+) -> tuple[ChurnState, dict]:
+    """Drive ``source.n_windows`` windows of the steady-state churn engine.
+
+    Same scan-fused driver as :func:`run`, but the carry is a
+    :class:`ChurnState` and a deterministic fault schedule rides the scan as
+    dense per-window rows (``repro.core.faults``): guests crash/restart
+    mid-run through the activity mask (no recompile -- the compiled
+    geometry is static), the near tier shrinks via the pressure controller,
+    and telemetry windows drop. Fault scenarios are bit-reproducible across
+    ``windows_per_step`` chunkings and meshes; with ``faults=None`` and an
+    all-active mask the run is bit-identical to :func:`run`
+    (INV-CHURN-NOOP-EXACT).
+
+    A :class:`SynthTrace` source keys each window's synthesis on the
+    *absolute* window index carried in ``cs.window``, so repeated
+    ``run_churn`` calls continue the exact access streams of one long run.
+    ``mesh`` shards the guest axis exactly like :func:`run_sharded` with
+    ``host_sharded=False`` (fault rows are replicated; the host-partitioned
+    near tier does not support the churn carry -- pass ``mesh=None`` or a
+    plain mesh, never ``host_sharded=True``).
+
+    Returns ``(cs, series)``; beyond the collectors the series always
+    carries the churn channels ``active`` (bool[n_windows, n_guests]),
+    ``near_cap`` and ``pressure`` (per window).
+    """
+    if not isinstance(cs, ChurnState):
+        raise TypeError(
+            f"run_churn needs a ChurnState carry (init_churn), got "
+            f"{type(cs).__name__}"
+        )
+    source = _coerce_source(source, None)
+    collect = _validate_run_args(spec, source, collect)
+    n_w = source.n_windows
+    if n_w == 0:
+        return cs, {}
+    w0 = int(np.asarray(cs.window))
+    ft = _resolve_fault_tables(spec, cs, faults, n_w, w0)
+    if mesh is not None:
+        from repro.core import sharding
+
+        n_shards = sharding.mesh_size(mesh)
+    if isinstance(source, SynthTrace):
+        plan, synth_tables = _bind_synth(
+            spec, source, n_shards if mesh is not None else 1
+        )
+        by_window = np.arange(w0, w0 + n_w, dtype=np.int32)
+    else:
+        plan, synth_tables = None, None
+        traces = source.traces
+        if mesh is not None:
+            traces = sharding.pad_guest_rows(traces, n_shards)
+        by_window = np.ascontiguousarray(np.transpose(traces, (1, 0, 2)))
+    spec = spec.canonical()
+
+    if mesh is not None:
+        tables = sharding.guest_tables(spec, n_shards)
+
+        def chunk_fn(c, win, crash, restart, cap, drop):
+            return sharding.run_chunk_churn_sharded(
+                spec, mesh, c, win, tables, crash=crash, restart=restart,
+                near_cap=cap, drop=drop, policy=policy, backend=backend,
+                use_gpac=use_gpac, max_batches=max_batches, budget=budget,
+                slack=slack, collect=collect, plan=plan,
+                synth_tables=synth_tables,
+            )
+    elif plan is not None:
+        jt = {k: jnp.asarray(v) for k, v in synth_tables.items()}
+
+        def chunk_fn(c, win, crash, restart, cap, drop):
+            return _churn_chunk_synth(
+                spec, plan, c, win, jt, crash, restart, cap, drop, policy,
+                backend, use_gpac, max_batches, budget, slack, collect,
+            )
+    else:
+
+        def chunk_fn(c, win, crash, restart, cap, drop):
+            return _churn_chunk(
+                spec, c, win, crash, restart, cap, drop, policy, backend,
+                use_gpac, max_batches, budget, slack, collect,
+            )
+
+    wps = _round_wps(n_w, windows_per_step, strict_wps)
+    chunks = []
+    for s in range(0, n_w, wps):
+        sl = slice(s, s + wps)
+        cs, out = chunk_fn(
+            cs, jnp.asarray(by_window[sl]), jnp.asarray(ft.crash[sl]),
+            jnp.asarray(ft.restart[sl]), jnp.asarray(ft.near_cap[sl]),
+            jnp.asarray(ft.drop[sl]),
+        )
+        chunks.append(out)
+    series = {
+        k: np.concatenate([np.asarray(c[k]) for c in chunks]) for k in chunks[0]
+    }
+    return cs, series
+
+
+def step_churn(
+    spec: EngineSpec,
+    cs: ChurnState,
+    accesses: jax.Array,  # int32[n_guests, k] guest-local ids, -1 padded
+    *,
+    faults_row: dict | None = None,
+    mesh=None,
+    policy: str = "memtierd",
+    backend: str = "ipt",
+    use_gpac: bool = True,
+    max_batches: int = 4,
+    budget: int = 64,
+    slack: int = 1,
+    collect: tuple[str, ...] = ("hits", "near_blocks"),
+) -> tuple[ChurnState, dict]:
+    """One churn window (the steady-state single-step entry point;
+    :func:`step` dispatches here when handed a :class:`ChurnState`).
+
+    ``faults_row`` injects this window's faults: optional keys ``crash`` /
+    ``restart`` (bool[n_guests]), ``near_cap`` (int; defaults to the
+    capacity already in force) and ``drop`` (bool). A no-fault step loop is
+    bit-identical to :func:`run` / a single :func:`run_churn` call.
+    """
+    acc = np.asarray(accesses)
+    if acc.ndim != 2 or acc.shape[0] != spec.n_guests:
+        raise ValueError(
+            f"accesses must be [n_guests={spec.n_guests}, k], got {acc.shape}"
+        )
+    row = dict(faults_row or {})
+    unknown = set(row) - {"crash", "restart", "near_cap", "drop"}
+    if unknown:
+        raise ValueError(
+            f"unknown faults_row keys {sorted(unknown)} (valid: crash, "
+            f"restart, near_cap, drop)"
+        )
+    n_g = spec.n_guests
+    crash = np.zeros((1, n_g), bool)
+    crash[0] = np.asarray(row.get("crash", False), bool)
+    restart = np.zeros((1, n_g), bool)
+    restart[0] = np.asarray(row.get("restart", False), bool)
+    cap = int(row.get("near_cap", np.asarray(cs.near_cap)))
+    ft = faults_mod.FaultTables(
+        start=int(np.asarray(cs.window)),
+        crash=crash,
+        restart=restart,
+        near_cap=np.asarray([cap], np.int32),
+        drop=np.asarray([bool(row.get("drop", False))]),
+    )
+    cs, series = run_churn(
+        spec, cs, ArrayTrace(acc[:, None, :]), faults=ft, mesh=mesh,
+        policy=policy, backend=backend, use_gpac=use_gpac,
+        max_batches=max_batches, budget=budget, slack=slack, collect=collect,
+    )
+    return cs, {k: v[0] for k, v in series.items()}
 
 
 # --------------------------------------------------------------------------

@@ -60,6 +60,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import address_space as asp
+from repro.core import faults as faults_mod
 from repro.core import gpac, telemetry, tiering
 from repro.core.types import FREE, GpacConfig, TieredState
 
@@ -401,6 +402,206 @@ def run_chunk_sharded(
     args = (
         state,
         chunk,
+        jnp.asarray(tables["logical_lo"]),
+        jnp.asarray(tables["logical_pad"]),
+        jnp.asarray(tables["hp_pad"]),
+    )
+    if plan is not None:
+        args += _synth_args(synth_tables)
+    return fn(*args)
+
+
+# --------------------------------------------------------------------------
+# sharded churn window (engine.run_churn's mesh path, DESIGN.md §13)
+# --------------------------------------------------------------------------
+def _churn_sharded_window(
+    spec,  # canonical EngineSpec (static)
+    n_shards: int,
+    cs,  # repro.core.engine.ChurnState (replicated carry)
+    accesses: jax.Array,  # int32[G_loc, k] guest-local ids of local guests
+    frow: dict,  # replicated fault row (crash/restart/near_cap/drop)
+    logical_lo: jax.Array,
+    logical_pad: jax.Array,
+    hp_pad: jax.Array,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    slack: int,
+    collect: tuple[str, ...],
+):
+    """:func:`_sharded_window` with the churn carry: the fault row and the
+    activity mask are replicated, so ``apply_guest_faults`` and both
+    replicated ticks compute identically on every device; only the access
+    masking is per-device (each device silences its own local guests'
+    rows). Still exactly **one** collective per window -- bit-for-bit equal
+    to ``engine._churn_window`` on the unpadded guests."""
+    from repro.core.engine import _CHURN_SERIES, ChurnState, run_collectors
+
+    cfg = spec.cfg
+    n_g = spec.n_guests
+    # ---- 0. fault row (replicated inputs -> replicated transforms) -------
+    state, active = faults_mod.apply_guest_faults(
+        spec, cs.state, cs.active, frow["crash"], frow["restart"]
+    )
+    near_cap = jnp.minimum(frow["near_cap"], jnp.int32(cfg.n_near))
+    base = state
+    # ---- 1. access phase (sharded; inactive + padding lanes emit -1) -----
+    g_loc = accesses.shape[0]
+    pos = jax.lax.axis_index(AXIS) * g_loc + jnp.arange(g_loc)
+    act_loc = jnp.where(pos < n_g, active[jnp.minimum(pos, n_g - 1)], False)
+    acc = jnp.where(act_loc[:, None], accesses, -1)
+    ids = jnp.where(acc >= 0, acc + logical_lo[:, None], -1)
+    slot, _, valid = asp.translate(cfg, state, ids)
+    near_loc = (valid & (slot < cfg.n_near)).sum(axis=1)
+    far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1)
+    keep = jnp.where(frow["drop"], 0, 1).astype(jnp.int32)
+    local = asp.apply_access_histogram(
+        cfg, state, asp.access_histogram(cfg, ids, valid) * keep
+    )
+    # ---- 2. GPAC phase (sharded: this device's segment rows only) --------
+    if use_gpac:
+        local = gpac.gpac_maintenance_rows(
+            cfg, local, backend, max_batches,
+            jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad,
+        )
+    # ---- 3. one-collective ownership merge -------------------------------
+    state, (near_all, far_all) = merge_window(
+        cfg, base, local, logical_pad, hp_pad,
+        (_spread_rows(near_loc, n_shards), _spread_rows(far_loc, n_shards)),
+        merged_gpac=use_gpac,
+    )
+    # ---- 4. host + pressure ticks, window roll (replicated) --------------
+    state = tiering.tick(cfg, state, policy, budget=budget)
+    state, engaged, press = tiering.pressure_tick(
+        cfg, state, near_cap, cs.engaged, cs.pressure,
+        budget=budget, slack=slack,
+    )
+    state = telemetry.end_window(cfg, state)
+    window = dict(near_hits=near_all[:n_g], far_hits=far_all[:n_g])
+    out = run_collectors(spec, state, window, collect)
+    clash = set(out) & set(_CHURN_SERIES)
+    if clash:
+        raise ValueError(
+            f"collectors {collect} emit keys {sorted(clash)} reserved for "
+            f"the churn series {_CHURN_SERIES}"
+        )
+    out.update(active=active, near_cap=near_cap, pressure=press)
+    cs = ChurnState(
+        state=state, active=active, window=cs.window + 1,
+        near_cap=near_cap, pressure=press, engaged=engaged,
+    )
+    return cs, out
+
+
+@lru_cache(maxsize=64)
+def _churn_chunk_fn(
+    spec,  # canonical EngineSpec
+    mesh,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    slack: int,
+    collect: tuple[str, ...],
+    plan=None,
+):
+    """Compiled sharded churn chunk driver: :func:`_chunk_fn` with the
+    ChurnState carry and the replicated fault rows threaded through the
+    scan as extra (window-axis) xs."""
+    n_shards = mesh_size(mesh)
+
+    def window_body(c, acc, frow, logical_lo, logical_pad, hp_pad):
+        return _churn_sharded_window(
+            spec, n_shards, c, acc, frow, logical_lo, logical_pad, hp_pad,
+            policy, backend, use_gpac, max_batches, budget, slack, collect,
+        )
+
+    if plan is None:
+
+        def body(cs, chunk, crash, restart, near_cap, drop,
+                 logical_lo, logical_pad, hp_pad):
+            def window(c, xs):
+                acc, frow = xs
+                return window_body(c, acc, frow, logical_lo, logical_pad, hp_pad)
+
+            xs = (chunk, dict(
+                crash=crash, restart=restart, near_cap=near_cap, drop=drop))
+            return jax.lax.scan(window, cs, xs)
+
+        in_specs = (
+            P(), P(None, AXIS, None), P(None, None), P(None, None), P(None),
+            P(None), P(AXIS), P(AXIS, None), P(AXIS, None),
+        )
+    else:
+        from repro.data import traces as tr
+
+        def body(cs, widx, crash, restart, near_cap, drop,
+                 logical_lo, logical_pad, hp_pad, seeds, gids, wid, n_logical):
+            setup = tr.synth_setup(plan, dict(
+                seeds=seeds, gids=gids, wid=wid, n_logical=n_logical))
+
+            def window(c, xs):
+                w, frow = xs
+                acc = tr.synth_accesses(plan, setup, w)
+                return window_body(c, acc, frow, logical_lo, logical_pad, hp_pad)
+
+            xs = (widx, dict(
+                crash=crash, restart=restart, near_cap=near_cap, drop=drop))
+            return jax.lax.scan(window, cs, xs)
+
+        in_specs = (
+            P(), P(None), P(None, None), P(None, None), P(None), P(None),
+            P(AXIS), P(AXIS, None), P(AXIS, None),
+            P(AXIS), P(AXIS), P(AXIS), P(AXIS),
+        )
+
+    sharded = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=P(),
+        check_rep=False,
+    )
+    return jax.jit(sharded)
+
+
+def run_chunk_churn_sharded(
+    spec,
+    mesh,
+    cs,
+    chunk: jax.Array,  # int32[n_windows, G_pad, k], or int32[n_windows]
+    tables: dict,      # window indices when plan is given
+    *,
+    crash,
+    restart,
+    near_cap,
+    drop,
+    policy: str,
+    backend: str,
+    use_gpac: bool,
+    max_batches: int,
+    budget: int,
+    slack: int,
+    collect: tuple[str, ...],
+    plan=None,
+    synth_tables: dict | None = None,
+):
+    """One scan-fused chunk of the sharded churn engine
+    (``engine.run_churn``'s mesh path)."""
+    fn = _churn_chunk_fn(
+        spec, mesh, policy, backend, use_gpac, max_batches, budget, slack,
+        collect, plan,
+    )
+    args = (
+        cs,
+        chunk,
+        jnp.asarray(crash),
+        jnp.asarray(restart),
+        jnp.asarray(near_cap),
+        jnp.asarray(drop),
         jnp.asarray(tables["logical_lo"]),
         jnp.asarray(tables["logical_pad"]),
         jnp.asarray(tables["hp_pad"]),

@@ -277,6 +277,63 @@ def tick(cfg: GpacConfig, state: TieredState, policy: str, **kw) -> TieredState:
     return fn(cfg, state, **kw)
 
 
+# --------------------------------------------------------------------------
+# near-memory pressure controller (graceful degradation under churn/shrink)
+# --------------------------------------------------------------------------
+def pressure_tick(
+    cfg: GpacConfig,
+    state: TieredState,
+    near_cap: jax.Array,  # int32[] effective near capacity (<= n_near)
+    engaged: jax.Array,  # bool[]  hysteresis latch carried between windows
+    pressure: jax.Array,  # int32[] consecutive engaged windows (backoff signal)
+    budget: int = 64,
+    slack: int = 1,
+) -> tuple[TieredState, jax.Array, jax.Array]:
+    """Enforce an injected effective near capacity with two watermarks.
+
+    Runs after the policy tick (which only knows the physical ``n_near``):
+    when allocated near usage breaches the **high watermark** ``near_cap``
+    (a fault-injected shrink, or churn overcommitting the near tier) the
+    controller engages and demotes coldest-first -- allocated near blocks
+    paired with unallocated far blocks -- down to the **low watermark**
+    ``near_cap - slack``, up to ``budget`` blocks per window (TPP's
+    ``wmark_demote`` shape: reclaiming past the trigger point by ``slack``
+    keeps small fluctuations from re-breaching every window). The previous
+    window's ``engaged`` only feeds observability; engagement re-evaluates
+    from this window's usage, so a capacity grow-back disengages
+    immediately instead of latching into a demote/promote flap against the
+    policy tick.
+
+    Returns ``(state, engaged', pressure')``: ``pressure`` counts
+    consecutive engaged windows -- the backoff signal the serving layer's
+    admission control reads (``serve.scheduler.AdmissionQueue``). It keeps
+    growing while demand exceeds the effective capacity: either the policy
+    tick re-promotes a working set bigger than ``near_cap`` every window,
+    or no free far block exists to demote into (the fleet genuinely
+    overcommits the far tier) -- both are exactly the conditions under
+    which admission should back off. The controller never promotes and
+    never exceeds the physical ``n_near``, so with ``near_cap == n_near``
+    (no fault injected) usage can never breach the cap and the whole
+    function is a value-exact no-op (INV-CHURN-NOOP-EXACT relies on this).
+    """
+    del engaged  # previous-window breach: carried for observers, not logic
+    alloc = allocated_hp_mask(cfg, state)
+    in_near = state.block_table < cfg.n_near
+    usage = (alloc & in_near).sum().astype(jnp.int32)
+    low = jnp.maximum(near_cap - slack, 0)
+    engaged = usage > near_cap
+    n_demote = jnp.where(engaged, jnp.clip(usage - low, 0, budget), 0)
+    score = _block_score(cfg, state)
+    far_ids, near_ids, k = _paired_ids(
+        ~alloc & ~in_near, jnp.zeros_like(score), alloc & in_near, score,
+        budget,
+    )
+    state = swap_blocks(cfg, state, far_ids, near_ids,
+                        jnp.minimum(k, n_demote))
+    pressure = jnp.where(engaged, pressure + 1, 0).astype(jnp.int32)
+    return state, engaged, pressure
+
+
 # ==========================================================================
 # host-partitioned tick (DESIGN.md §11)
 #

@@ -140,6 +140,55 @@ def hash_workload(spec: TraceSpec, rng: np.random.Generator) -> np.ndarray:
     return _popularity_trace(spec, rng, sampler, hot_fraction=0.30)
 
 
+def _drift_trace(
+    spec: TraceSpec,
+    rng: np.random.Generator,
+    sampler,
+    hot_fraction: float,
+    period: int,
+    rotate: float,
+) -> np.ndarray:
+    """Phase-shifting variant of :func:`_popularity_trace`: every ``period``
+    windows the hot set jumps by ``rotate * n_hot`` positions along the full
+    scatter permutation, so the *set of hot pages itself* turns over (the
+    churn benchmark's drifting tenants), not just the popularity center
+    within a fixed hot set (the ``drift=`` knob above). Promotions made for
+    one phase go cold wholesale at the next shift -- worst case for the
+    pressure controller's coldest-first demotion."""
+    n_hot = max(1, int(spec.n_logical * hot_fraction))
+    scatter = _perm(spec.n_logical, rng)
+    step = max(1, int(n_hot * rotate))
+    out = np.empty((spec.n_windows, spec.accesses_per_window), np.int32)
+    for w in range(spec.n_windows):
+        keys = sampler(rng, spec.accesses_per_window)
+        shift = ((w // period) * step) % spec.n_logical
+        out[w] = scatter[(_trim(keys % n_hot, 0, n_hot) + shift) % spec.n_logical]
+    return out
+
+
+def redis_drift(spec: TraceSpec, rng: np.random.Generator) -> np.ndarray:
+    """redis whose hot set rotates by half its width every 2 windows:
+    Gaussian popularity over a compact window that slides along the scatter
+    permutation (phase-change churn rather than slow center drift)."""
+    def sampler(r, k):
+        n_hot = max(1, int(spec.n_logical * 0.08))
+        return np.abs(r.normal(0.0, n_hot / 3.0, size=k)).astype(np.int64)
+
+    return _drift_trace(spec, rng, sampler, hot_fraction=0.08,
+                        period=2, rotate=0.5)
+
+
+def hash_drift(spec: TraceSpec, rng: np.random.Generator) -> np.ndarray:
+    """hash_bkt_rcu under rehashing: the uniform ~30% hot set jumps by half
+    its width every 4 windows (bucket array reallocated elsewhere)."""
+    def sampler(r, k):
+        n_hot = max(1, int(spec.n_logical * 0.30))
+        return r.integers(0, n_hot, size=k)
+
+    return _drift_trace(spec, rng, sampler, hot_fraction=0.30,
+                        period=4, rotate=0.5)
+
+
 def ocean_ncp(spec: TraceSpec, rng: np.random.Generator) -> np.ndarray:
     """Grid sweeps touching every other page of ~60%-of-space runs: the
     W-cycle multigrid stencil reads alternate rows at each level, so huge
@@ -363,6 +412,38 @@ def hash_window(ctx: WindowCtx):
     return _j_popularity(ctx, sample, hot_fraction=0.30)
 
 
+def _j_drift(ctx: WindowCtx, sample, hot_fraction: float, period: int,
+             rotate: float):
+    """JAX port of :func:`_drift_trace`'s window body. The shift depends
+    only on the absolute window index, so it is chunking- and
+    mesh-invariant like every other window input. The pre-mod product
+    ``(w // period) * step`` stays well under int32 for any realistic run
+    length (windows in the thousands, step <= n_logical/2)."""
+    n_hot = jnp.maximum(1, (ctx.n_logical * hot_fraction).astype(jnp.int32))
+    keys = sample(ctx, n_hot)
+    n = jnp.maximum(ctx.n_logical, 1)
+    step = jnp.maximum(
+        1, (n_hot.astype(jnp.float32) * rotate).astype(jnp.int32))
+    shift = ((ctx.w // period) * step) % n
+    idx = (jnp.clip(keys % n_hot, 0, n_hot - 1) + shift) % n
+    return ctx.scatter[idx].astype(jnp.int32)
+
+
+def redis_drift_window(ctx: WindowCtx):
+    def sample(c, n_hot):
+        sigma = n_hot.astype(jnp.float32) / 3.0
+        return jnp.abs(jax.random.normal(c.key, (c.k,)) * sigma).astype(jnp.int32)
+
+    return _j_drift(ctx, sample, hot_fraction=0.08, period=2, rotate=0.5)
+
+
+def hash_drift_window(ctx: WindowCtx):
+    def sample(c, n_hot):
+        return jax.random.randint(c.key, (c.k,), 0, n_hot)
+
+    return _j_drift(ctx, sample, hot_fraction=0.30, period=4, rotate=0.5)
+
+
 def _stride_positions(k: int, n: "jax.Array") -> "jax.Array":
     """int32[k]: ``floor(i * n / k)`` for ``i in [0, k)`` without the int32
     overflow of the direct product (x64 is disabled, so there is no int64 to
@@ -496,6 +577,10 @@ register_workload("memcached", memcached, memcached_window, needs_scatter=True)
 register_workload("hash", hash_workload, hash_window, needs_scatter=True)
 register_workload("ocean_ncp", ocean_ncp, ocean_ncp_window)
 register_workload("liblinear", liblinear, liblinear_window)
+register_workload("redis_drift", redis_drift, redis_drift_window,
+                  needs_scatter=True)
+register_workload("hash_drift", hash_drift, hash_drift_window,
+                  needs_scatter=True)
 register_workload("zipf", zipf, zipf_window, needs_scatter=True)
 register_workload("uniform", uniform, uniform_window, needs_scatter=True)
 register_workload("gauss", gauss, gauss_window, needs_scatter=True)

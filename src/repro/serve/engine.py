@@ -31,7 +31,9 @@ from repro.core import metrics as core_metrics
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models.registry import Model
-from repro.serve.scheduler import Request, Scheduler, SchedulerConfig
+from repro.serve.scheduler import (
+    AdmissionQueue, Request, Scheduler, SchedulerConfig,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -289,3 +291,148 @@ class Engine:
 
     def stats(self) -> dict:
         return core_metrics.snapshot(self.pcfg, self.pstate)
+
+
+# --------------------------------------------------------------------------
+# steady-state tiering service (the churn engine's serving front, §13)
+# --------------------------------------------------------------------------
+class TieringService:
+    """Tenants arriving and departing on the churn engine's guest lanes.
+
+    The dormant half of the serving story: where :class:`Engine` runs a
+    real model over the tiered KV cache, the service runs the *fleet* --
+    each admitted tenant occupies one guest lane of an
+    ``engine.EngineSpec`` fleet (its accesses synthesized on device from
+    the lane's workload identity), admission goes through the
+    pressure-aware :class:`repro.serve.scheduler.AdmissionQueue` (retries
+    with exponential backoff while ``ChurnState.pressure`` is up, instead
+    of failing), a departure is a crash fault (the lane's near blocks are
+    reclaimed within the same window), and per-tenant QoS counters
+    (admission latency, evictions, hit-rate) accumulate from the churn
+    series. The compiled geometry never changes across the whole tenant
+    lifecycle -- lanes just flip active/inactive.
+    """
+
+    def __init__(
+        self,
+        spec,
+        queue: AdmissionQueue | None = None,
+        accesses_per_window: int = 512,
+        policy: str = "memtierd",
+        use_gpac: bool = True,
+        budget: int = 64,
+        slack: int = 1,
+    ):
+        from repro.core import engine as ce
+        from repro.data import traces as tr
+
+        self.spec = spec
+        self.queue = queue if queue is not None else AdmissionQueue()
+        self.knobs = dict(
+            policy=policy, use_gpac=use_gpac, budget=budget, slack=slack)
+        n_g = spec.n_guests
+        self.cs = ce.init_churn(spec, active=np.zeros((n_g,), bool))
+        self.lane_tenant = np.full((n_g,), -1, np.int64)  # lane -> tenant
+        self._departing: set[int] = set()  # tenants crashing next tick
+        self._near_cap_req: int | None = None
+        plan, tables = ce._bind_synth(
+            spec, ce.SynthTrace(1, accesses_per_window))
+        self._plan = plan
+        self._setup = tr.synth_setup(
+            plan, {k: jnp.asarray(v) for k, v in tables.items()})
+        self._prev_near = np.zeros((n_g,), np.int64)
+
+    # ---- tenant lifecycle ----------------------------------------------
+    @property
+    def window(self) -> int:
+        return int(np.asarray(self.cs.window))
+
+    def submit(self, tenant: int):
+        self.queue.submit(tenant, now=self.window)
+
+    def depart(self, tenant: int):
+        """Tenant leaves: its lane crashes on the next :meth:`tick` (blocks
+        reclaimed inside that window)."""
+        if tenant not in self.lane_tenant:
+            raise ValueError(f"tenant {tenant} is not resident")
+        self._departing.add(tenant)
+
+    def set_near_cap(self, near_cap: int | None):
+        """Inject an effective near-capacity (None restores the physical
+        tier) from the next :meth:`tick` on."""
+        self._near_cap_req = (
+            self.spec.cfg.n_near if near_cap is None else int(near_cap))
+
+    def lane_of(self, tenant: int) -> int:
+        lanes = np.nonzero(self.lane_tenant == tenant)[0]
+        return int(lanes[0]) if lanes.size else -1
+
+    # ---- the window loop ------------------------------------------------
+    def tick(self) -> dict:
+        """One serving window: admit (pressure-aware) -> crash departures /
+        restart admissions -> one churn engine step -> QoS accounting."""
+        from repro.core import engine as ce
+        from repro.data import traces as tr
+
+        now = self.window
+        pressure = int(np.asarray(self.cs.pressure))
+        n_g = self.spec.n_guests
+        free = [int(l) for l in np.nonzero(self.lane_tenant < 0)[0]]
+        crash = np.zeros((n_g,), bool)
+        for tenant in self._departing:
+            lane = self.lane_of(tenant)
+            if lane >= 0:
+                crash[lane] = True
+                self.lane_tenant[lane] = -1
+        self._departing.clear()
+        free = [int(l) for l in np.nonzero(self.lane_tenant < 0)[0]]
+        restart = np.zeros((n_g,), bool)
+        for tenant in self.queue.admit(now, pressure, len(free)):
+            lane = free.pop(0)
+            restart[lane] = True
+            self.lane_tenant[lane] = tenant
+            self._prev_near[lane] = 0
+        row = dict(crash=crash, restart=restart)
+        if self._near_cap_req is not None:
+            row["near_cap"] = self._near_cap_req
+            self._near_cap_req = None
+        acc = tr.synth_accesses(
+            self._plan, self._setup, jnp.asarray(now, jnp.int32))
+        self.cs, out = ce.step(
+            self.spec, self.cs, acc, faults_row=row, **self.knobs)
+        # ---- per-tenant QoS accounting ---------------------------------
+        near = np.asarray(out["near_hits"])
+        far = np.asarray(out["far_hits"])
+        blocks = np.asarray(out["near_blocks"]).astype(np.int64)
+        for lane in range(n_g):
+            tenant = int(self.lane_tenant[lane])
+            if tenant < 0:
+                continue
+            q = self.queue.qos[tenant]
+            q.near_hits += int(near[lane])
+            q.far_hits += int(far[lane])
+            if not restart[lane]:  # eviction = resident near blocks lost
+                q.evictions += int(max(self._prev_near[lane] - blocks[lane], 0))
+        self._prev_near = blocks
+        return out
+
+    def stats(self) -> dict:
+        """Service-level snapshot: pressure/backoff state plus every
+        tenant's QoS counters."""
+        return dict(
+            window=self.window,
+            pressure=int(np.asarray(self.cs.pressure)),
+            engaged=bool(np.asarray(self.cs.engaged)),
+            near_cap=int(np.asarray(self.cs.near_cap)),
+            resident=int((self.lane_tenant >= 0).sum()),
+            waiting=self.queue.n_waiting,
+            tenants={
+                t: dict(
+                    admission_latency=q.admission_latency,
+                    attempts=q.attempts,
+                    evictions=q.evictions,
+                    hit_rate=q.hit_rate,
+                )
+                for t, q in self.queue.qos.items()
+            },
+        )

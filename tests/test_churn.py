@@ -1,0 +1,627 @@
+"""Steady-state churn engine: stepper carry, fault injection, crash
+reclaim, the pressure controller, and the serving front.
+
+The load-bearing invariants (ISSUE 6 acceptance):
+
+* INV-CHURN-NOOP-EXACT -- a no-fault churn run (all lanes active, no
+  capacity shrink, no dropout) is bit-identical to ``engine.run`` /
+  ``engine.run_sharded``: final state AND every collector series, across
+  ``windows_per_step`` chunkings, step loops, split driver calls, and
+  1-device vs forced-8-device meshes (the multi-device matrix rides a
+  subprocess, same pattern as tests/test_engine_sharded.py).
+* INV-CRASH-RECLAIM-COMPLETE -- a crashed guest's near blocks are
+  reclaimed within the same maintenance window, its rmap segment is FREE,
+  and the block table stays a permutation.
+* Fault scenarios are deterministic and bit-reproducible across
+  chunkings (property sweep over seeded random Poisson schedules --
+  hypothesis is not in the container, so the sweep is seeded numpy).
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, faults, sharding
+from repro.core.types import FREE, allocated_hp_mask
+from repro.data import traces as tr
+from repro.serve.engine import TieringService
+from repro.serve.scheduler import AdmissionQueue, BackoffConfig
+
+
+def assert_states_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def assert_series_equal(a, b):
+    assert set(a) == set(b)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=k)
+
+
+def mixed_fleet():
+    guests = (
+        engine.GuestSpec(n_logical=96, cl=3, gpa_slack=0.5, workload="redis", seed=0),
+        engine.GuestSpec(n_logical=176, cl=8, gpa_slack=0.25, workload="masim", seed=1),
+        engine.GuestSpec(n_logical=64, cl=None, gpa_slack=1.0, workload="hash", seed=2),
+    )
+    host = engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=6)
+    return engine.build(guests, host)
+
+
+def drop_churn_channels(series):
+    return {k: v for k, v in series.items() if k not in engine._CHURN_SERIES}
+
+
+class TestNoFaultExact:
+    """INV-CHURN-NOOP-EXACT on the unsharded drivers."""
+
+    @pytest.mark.parametrize("use_gpac", [True, False])
+    def test_run_churn_matches_run_array(self, use_gpac):
+        spec, s0 = mixed_fleet()
+        traces = engine.guest_traces(spec, n_windows=5, accesses_per_window=64)
+        ref_state, ref = engine.run(spec, s0, traces, use_gpac=use_gpac)
+        cs, se = engine.run_churn(
+            spec, engine.init_churn(spec), engine.ArrayTrace(traces),
+            use_gpac=use_gpac)
+        assert_states_equal(ref_state, cs.state)
+        assert_series_equal(ref, drop_churn_channels(se))
+        assert np.asarray(se["active"]).all()
+        np.testing.assert_array_equal(se["near_cap"], spec.cfg.n_near)
+        np.testing.assert_array_equal(se["pressure"], 0)
+        assert int(np.asarray(cs.window)) == 5
+
+    def test_run_churn_matches_run_synth(self):
+        spec, s0 = mixed_fleet()
+        synth = engine.SynthTrace(n_windows=6, accesses_per_window=64)
+        ref_state, ref = engine.run(spec, s0, synth)
+        cs, se = engine.run_churn(spec, engine.init_churn(spec), synth)
+        assert_states_equal(ref_state, cs.state)
+        assert_series_equal(ref, drop_churn_channels(se))
+
+    def test_step_loop_matches_run(self):
+        """engine.step dispatches on the ChurnState carry; a no-fault step
+        loop reproduces engine.run window for window."""
+        spec, s0 = mixed_fleet()
+        traces = engine.guest_traces(spec, n_windows=4, accesses_per_window=64)
+        ref_state, ref = engine.run(spec, s0, traces)
+        cs = engine.init_churn(spec)
+        outs = []
+        for w in range(4):
+            cs, out = engine.step(spec, cs, traces[:, w, :])
+            outs.append(out)
+        assert_states_equal(ref_state, cs.state)
+        for k in ref:
+            got = np.stack([np.asarray(o[k]) for o in outs])
+            np.testing.assert_array_equal(ref[k], got, err_msg=k)
+
+    def test_split_calls_match_one_run(self):
+        """Synth windows are keyed on the absolute index carried in the
+        ChurnState, so 5+3 windows across two driver calls continue the
+        exact access streams of one 8-window run."""
+        spec, _ = mixed_fleet()
+        one, se_one = engine.run_churn(
+            spec, engine.init_churn(spec),
+            engine.SynthTrace(n_windows=8, accesses_per_window=64))
+        cs = engine.init_churn(spec)
+        cs, se_a = engine.run_churn(
+            spec, cs, engine.SynthTrace(n_windows=5, accesses_per_window=64))
+        cs, se_b = engine.run_churn(
+            spec, cs, engine.SynthTrace(n_windows=3, accesses_per_window=64))
+        assert_states_equal(one.state, cs.state)
+        for k in se_one:
+            np.testing.assert_array_equal(
+                se_one[k], np.concatenate([se_a[k], se_b[k]]), err_msg=k)
+
+    def test_zero_windows_is_identity(self):
+        spec, _ = mixed_fleet()
+        cs = engine.init_churn(spec)
+        cs2, se = engine.run_churn(
+            spec, cs, engine.SynthTrace(n_windows=0, accesses_per_window=8))
+        assert se == {}
+        assert_states_equal(cs, cs2)
+
+    def test_step_rejects_faults_without_churn_carry(self):
+        spec, s0 = mixed_fleet()
+        acc = np.full((spec.n_guests, 8), -1, np.int32)
+        with pytest.raises(TypeError, match="ChurnState"):
+            engine.step(spec, s0, acc, faults_row=dict(drop=True))
+
+    def test_run_churn_rejects_plain_state(self):
+        spec, s0 = mixed_fleet()
+        with pytest.raises(TypeError, match="ChurnState"):
+            engine.run_churn(
+                spec, s0, engine.SynthTrace(n_windows=1, accesses_per_window=8))
+
+    def test_init_churn_bad_mask_shape_raises(self):
+        spec, _ = mixed_fleet()
+        with pytest.raises(ValueError, match="active mask"):
+            engine.init_churn(spec, active=np.ones((2,), bool))
+
+
+class TestFaultSchedule:
+    def test_builder_validation(self):
+        s = faults.FaultSchedule(3)
+        with pytest.raises(ValueError, match="window"):
+            s.crash(-1, 0)
+        with pytest.raises(ValueError, match="out of range"):
+            s.crash(0, 3)
+        with pytest.raises(ValueError, match="near_cap"):
+            s.shrink(0, -2)
+
+    def test_tables_dense_placement_and_start(self):
+        s = (faults.FaultSchedule(2)
+             .crash(3, 1).restart(5, 1).shrink(2, 6).shrink(4, 9)
+             .dropout(4, n_windows=2))
+        t = s.tables(4, n_near=8, start=2)
+        assert t.start == 2 and t.n_windows == 4 and t.n_guests == 2
+        assert t.crash[1, 1] and t.crash.sum() == 1
+        assert t.restart[3, 1] and t.restart.sum() == 1
+        # shrink at w=2 applies from the first compiled row; the w=4 grow
+        # overrides but clamps to the physical n_near
+        np.testing.assert_array_equal(t.near_cap, [6, 6, 8, 8])
+        np.testing.assert_array_equal(t.drop, [False, False, True, True])
+
+    def test_shrink_before_range_still_applies(self):
+        s = faults.FaultSchedule(1).shrink(0, 3)
+        t = s.tables(2, n_near=8, start=10)
+        np.testing.assert_array_equal(t.near_cap, [3, 3])
+
+    def test_run_churn_rejects_mismatched_tables(self):
+        spec, _ = mixed_fleet()
+        cs = engine.init_churn(spec)
+        src = engine.SynthTrace(n_windows=3, accesses_per_window=16)
+        bad = faults.no_faults(spec.n_guests).tables(2, spec.cfg.n_near)
+        with pytest.raises(ValueError, match="windows"):
+            engine.run_churn(spec, cs, src, faults=bad)
+        with pytest.raises(ValueError, match="guests"):
+            engine.run_churn(
+                spec, cs, src, faults=faults.no_faults(spec.n_guests + 1))
+        with pytest.raises(TypeError, match="FaultSchedule"):
+            engine.run_churn(spec, cs, src, faults="crash everything")
+
+    def test_step_churn_validation(self):
+        spec, _ = mixed_fleet()
+        cs = engine.init_churn(spec)
+        with pytest.raises(ValueError, match="unknown faults_row"):
+            engine.step_churn(
+                spec, cs, np.full((spec.n_guests, 4), -1, np.int32),
+                faults_row=dict(explode=True))
+        with pytest.raises(ValueError, match="n_guests"):
+            engine.step_churn(spec, cs, np.zeros((1, 4), np.int32))
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_poisson_churn_deterministic_and_consistent(self, seed):
+        a = faults.poisson_churn(4, 12, arrival_rate=0.5,
+                                 departure_rate=0.3, seed=seed)
+        b = faults.poisson_churn(4, 12, arrival_rate=0.5,
+                                 departure_rate=0.3, seed=seed)
+        assert (a.crashes, a.restarts) == (b.crashes, b.restarts)
+        # events are state-consistent: crashes hit active lanes, restarts
+        # boot inactive ones
+        active = np.ones(4, bool)
+        events = sorted(
+            [(w, 0, g) for w, g in a.crashes]
+            + [(w, 1, g) for w, g in a.restarts])
+        for _, kind, g in events:
+            if kind == 0:
+                assert active[g], "crash of an inactive lane"
+                active[g] = False
+            else:
+                assert not active[g], "restart of an active lane"
+                active[g] = True
+
+
+class TestCrashReclaim:
+    """INV-CRASH-RECLAIM-COMPLETE."""
+
+    def run_with(self, schedule, n_windows=6, **kw):
+        spec, _ = mixed_fleet()
+        cs, se = engine.run_churn(
+            spec, engine.init_churn(spec),
+            engine.SynthTrace(n_windows=n_windows, accesses_per_window=64),
+            faults=schedule, **kw)
+        return spec, cs, se
+
+    def test_crash_reclaims_segment_same_window(self):
+        spec, cs, se = self.run_with(
+            faults.FaultSchedule(3).crash(2, 0), n_windows=5)
+        blocks = np.asarray(se["near_blocks"])
+        active = np.asarray(se["active"])
+        # the crash window itself already reports zero near blocks
+        assert (blocks[2:, 0] == 0).all()
+        assert not active[2:, 0].any() and active[:2, 0].all()
+        # the whole gpa segment is FREE and holds no allocated huge pages
+        hp_lo, hp_hi = spec.hp_range(0)
+        r = spec.cfg.hp_ratio
+        rmap = np.asarray(cs.state.rmap)
+        assert (rmap[hp_lo * r:hp_hi * r] == int(FREE)).all()
+        alloc = np.asarray(allocated_hp_mask(spec.cfg, cs.state))
+        assert not alloc[hp_lo:hp_hi].any()
+
+    def test_block_table_stays_permutation_after_crash(self):
+        spec, cs, _ = self.run_with(
+            faults.FaultSchedule(3).crash(1, 1).crash(3, 0), n_windows=5)
+        bt = np.asarray(cs.state.block_table)
+        assert len(np.unique(bt)) == bt.size
+        owner = np.asarray(cs.state.slot_owner)
+        np.testing.assert_array_equal(owner[bt], np.arange(bt.size))
+
+    def test_restart_resumes_hits(self):
+        spec, cs, se = self.run_with(
+            faults.FaultSchedule(3).crash(1, 0).restart(3, 0), n_windows=6)
+        hits = np.asarray(se["near_hits"]) + np.asarray(se["far_hits"])
+        assert (hits[2:3, 0] == 0).all()  # down: no accesses at all
+        assert (hits[3:, 0] > 0).all()  # back: identity mapping serves again
+        assert np.asarray(se["active"])[3:, 0].all()
+
+    def test_crash_and_restart_same_window_is_reboot(self):
+        spec, cs, se = self.run_with(
+            faults.FaultSchedule(3).crash(2, 0).restart(2, 0), n_windows=4)
+        active = np.asarray(se["active"])
+        assert active[:, 0].all()  # never observed down
+        hits = np.asarray(se["near_hits"]) + np.asarray(se["far_hits"])
+        assert (hits[2:, 0] > 0).all()
+
+    def test_full_dropout_freezes_telemetry(self):
+        spec, cs, _ = self.run_with(
+            faults.FaultSchedule(3).dropout(0, n_windows=4), n_windows=4)
+        assert np.asarray(cs.state.ipt_hist).sum() == 0
+        assert np.asarray(cs.state.host_hist).sum() == 0
+
+
+class TestPressureController:
+    def churn(self, schedule, n_windows, spec=None):
+        if spec is None:
+            spec, _ = mixed_fleet()
+        cs, se = engine.run_churn(
+            spec, engine.init_churn(spec),
+            engine.SynthTrace(n_windows=n_windows, accesses_per_window=64),
+            faults=schedule)
+        return spec, cs, se
+
+    def test_shrink_converges_with_far_space(self):
+        """Crash the big guest first (frees far victims), then shrink: the
+        controller demotes coldest-first down to the low watermark and near
+        usage stays at or under the injected cap from then on."""
+        spec, _ = mixed_fleet()
+        cap = max(1, spec.cfg.n_near - 3)
+        sched = faults.FaultSchedule(3).crash(0, 1).shrink(3, cap)
+        spec, cs, se = self.churn(sched, n_windows=8, spec=spec)
+        usage = np.asarray(se["near_blocks"]).sum(axis=1)
+        assert (usage[3:] <= cap).all(), usage
+        np.testing.assert_array_equal(np.asarray(se["near_cap"])[3:], cap)
+
+    def test_never_overcommits_physical_near(self):
+        sched = (faults.poisson_churn(3, 10, arrival_rate=0.4,
+                                      departure_rate=0.3, seed=5)
+                 .shrink(4, 2).shrink(7, 64))
+        spec, cs, se = self.churn(sched, n_windows=10)
+        usage = np.asarray(se["near_blocks"]).sum(axis=1)
+        assert (usage <= spec.cfg.n_near).all()
+        np.testing.assert_array_equal(
+            np.asarray(se["near_cap"]),
+            np.minimum([spec.cfg.n_near] * 4 + [2] * 3 + [spec.cfg.n_near] * 3,
+                       spec.cfg.n_near))
+
+    def test_capacity_deficit_reports_growing_pressure(self):
+        """With no free far blocks to demote into, a deep shrink cannot
+        converge -- the controller reports it as sustained, growing
+        pressure (the admission backoff signal) instead of thrashing."""
+        spec, cs, se = self.churn(
+            faults.FaultSchedule(3).shrink(2, 2), n_windows=8)
+        press = np.asarray(se["pressure"])
+        usage = np.asarray(se["near_blocks"]).sum(axis=1)
+        assert usage[-1] > 2  # deficit persists...
+        assert press[-1] >= 4  # ...and the signal says so
+        tail = press[2:]
+        assert (np.diff(tail) >= 0).all() and tail[-1] == tail.max()
+
+    def test_grow_back_disengages(self):
+        spec, _ = mixed_fleet()
+        sched = (faults.FaultSchedule(3)
+                 .shrink(1, 2).shrink(4, spec.cfg.n_near))
+        spec, cs, se = self.churn(sched, n_windows=8, spec=spec)
+        press = np.asarray(se["pressure"])
+        assert press[1:4].max() > 0
+        assert (press[4:] == 0).all()
+        assert int(np.asarray(cs.pressure)) == 0
+
+
+class TestChurnProperties:
+    """Seeded random-schedule sweep (hypothesis is not available in the
+    container, so properties run over fixed numpy seeds)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_random_schedule_invariants(self, seed):
+        spec, _ = mixed_fleet()
+        rng = np.random.default_rng(seed)
+        sched = faults.poisson_churn(
+            spec.n_guests, 9, arrival_rate=0.4, departure_rate=0.35,
+            seed=seed)
+        sched.shrink(int(rng.integers(0, 9)),
+                     int(rng.integers(1, spec.cfg.n_near + 1)))
+        sched.dropout(int(rng.integers(0, 9)))
+        src = engine.SynthTrace(n_windows=9, accesses_per_window=64)
+        cs, se = engine.run_churn(spec, engine.init_churn(spec), src,
+                                  faults=sched)
+        # block table stays a permutation, slot_owner its inverse
+        bt = np.asarray(cs.state.block_table)
+        assert len(np.unique(bt)) == bt.size
+        np.testing.assert_array_equal(
+            np.asarray(cs.state.slot_owner)[bt], np.arange(bt.size))
+        # no allocated huge page belongs to an inactive guest (no orphans)
+        _, hp_owner, _, _ = faults.segment_tables(spec.canonical())
+        owner = np.asarray(hp_owner)
+        active = np.asarray(cs.active)
+        alloc = np.asarray(allocated_hp_mask(spec.cfg, cs.state))
+        owned = owner >= 0
+        orphans = alloc & owned & ~active[np.clip(owner, 0, None)]
+        assert not orphans.any(), np.nonzero(orphans)
+        # inactive lanes hold zero near blocks in every window they are down
+        blocks = np.asarray(se["near_blocks"])
+        act = np.asarray(se["active"])
+        assert (blocks[~act] == 0).all()
+
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_fault_runs_chunking_invariant(self, seed):
+        spec, _ = mixed_fleet()
+        sched = (faults.poisson_churn(spec.n_guests, 6, arrival_rate=0.4,
+                                      departure_rate=0.35, seed=seed)
+                 .shrink(3, 4).dropout(2))
+        src = engine.SynthTrace(n_windows=6, accesses_per_window=64)
+        ref_cs, ref = engine.run_churn(
+            spec, engine.init_churn(spec), src, faults=sched)
+        for wps in (1, 3):
+            cs, se = engine.run_churn(
+                spec, engine.init_churn(spec), src, faults=sched,
+                windows_per_step=wps, strict_wps=True)
+            assert_states_equal(ref_cs, cs)
+            assert_series_equal(ref, se)
+
+
+FAULTED_SHARDED_CHECK = r"""
+import jax
+import numpy as np
+from repro.core import engine, faults, sharding
+
+guests = tuple(
+    engine.GuestSpec(n_logical=n, workload=w, seed=s)
+    for n, w, s in [(96, "redis", 0), (176, "masim", 1), (64, "hash", 2),
+                    (64, "redis_drift", 3), (96, "hash_drift", 4),
+                    (64, "memcached", 5)])
+host = engine.HostSpec(hp_ratio=16, near_fraction=0.4, base_elems=2, cl=6)
+spec, s0 = engine.build(guests, host)
+assert len(jax.devices()) == 8, jax.devices()
+mesh = sharding.guest_mesh(8)
+sched = (faults.poisson_churn(spec.n_guests, 6, arrival_rate=0.5,
+                              departure_rate=0.3, seed=3)
+         .shrink(2, spec.cfg.n_near // 2).dropout(4))
+
+def check(src, wps, tag):
+    ref_cs, ref = engine.run_churn(
+        spec, engine.init_churn(spec), src, faults=sched,
+        windows_per_step=wps)
+    cs, se = engine.run_churn(
+        spec, engine.init_churn(spec), src, faults=sched, mesh=mesh,
+        windows_per_step=wps)
+    for a, b in zip(jax.tree_util.tree_leaves(ref_cs),
+                    jax.tree_util.tree_leaves(cs)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert set(ref) == set(se)
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], se[k], err_msg=(tag, k))
+    print("OK", tag, flush=True)
+
+arr = engine.guest_traces(spec, n_windows=6, accesses_per_window=64)
+check(engine.ArrayTrace(arr), 0, "array")
+check(engine.SynthTrace(n_windows=6, accesses_per_window=64), 0, "synth")
+check(engine.SynthTrace(n_windows=6, accesses_per_window=64), 3, "chunked")
+"""
+
+
+class TestChurnSharded:
+    def faulted(self):
+        spec, _ = mixed_fleet()
+        sched = (faults.FaultSchedule(3)
+                 .crash(1, 0).restart(3, 0).crash(2, 2)
+                 .shrink(2, spec.cfg.n_near - 2).dropout(3))
+        return spec, sched
+
+    def test_one_device_mesh_matches_unsharded_array(self):
+        spec, sched = self.faulted()
+        arr = engine.guest_traces(spec, n_windows=5, accesses_per_window=64)
+        ref_cs, ref = engine.run_churn(
+            spec, engine.init_churn(spec), engine.ArrayTrace(arr),
+            faults=sched)
+        cs, se = engine.run_churn(
+            spec, engine.init_churn(spec), engine.ArrayTrace(arr),
+            faults=sched, mesh=sharding.guest_mesh(1))
+        assert_states_equal(ref_cs, cs)
+        assert_series_equal(ref, se)
+
+    def test_one_device_mesh_matches_unsharded_synth(self):
+        spec, sched = self.faulted()
+        src = engine.SynthTrace(n_windows=5, accesses_per_window=64)
+        ref_cs, ref = engine.run_churn(
+            spec, engine.init_churn(spec), src, faults=sched)
+        cs, se = engine.run_churn(
+            spec, engine.init_churn(spec), src, faults=sched,
+            mesh=sharding.guest_mesh(1))
+        assert_states_equal(ref_cs, cs)
+        assert_series_equal(ref, se)
+
+    def test_forced_8_device_mesh_matches_unsharded(self):
+        """Faulted array + synth + chunked runs on a forced 8-device CPU
+        mesh, bit-identical to the unsharded stepper (subprocess because
+        device count is fixed at jax init)."""
+        env = dict(
+            os.environ,
+            XLA_FLAGS="--xla_force_host_platform_device_count=8",
+            JAX_PLATFORMS="cpu",
+            PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+        )
+        proc = subprocess.run(
+            [sys.executable, "-c", FAULTED_SHARDED_CHECK],
+            env=env,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True,
+            text=True,
+            timeout=600,
+        )
+        assert proc.returncode == 0, (
+            f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+        assert proc.stdout.count("OK") == 3, proc.stdout
+
+
+class TestDriftWorkloads:
+    def hot_sets(self, gen, workload, period):
+        spec = tr.TraceSpec(workload, 4096, 64, n_windows=2 * period,
+                            accesses_per_window=4096, seed=3)
+        t = gen(spec)
+        return [set(np.unique(t[w])) for w in range(t.shape[0])]
+
+    @pytest.mark.parametrize("workload,period",
+                             [("redis_drift", 2), ("hash_drift", 4)])
+    def test_hot_set_rotates_at_phase_boundary(self, workload, period):
+        def jaccard(a, b):
+            return len(a & b) / len(a | b)
+
+        for gen in (tr.generate, tr.synth_generate):
+            h = self.hot_sets(gen, workload, period)
+            within = jaccard(h[0], h[period - 1]) if period > 1 else 1.0
+            across = jaccard(h[0], h[period])
+            assert across < 0.6 * within if period > 1 else across < 0.6, (
+                gen.__name__, within, across)
+
+    def test_drift_fleet_runs_in_churn_engine(self):
+        guests = (
+            engine.GuestSpec(n_logical=96, workload="redis_drift", seed=0),
+            engine.GuestSpec(n_logical=64, workload="hash_drift", seed=1),
+        )
+        spec, s0 = engine.build(
+            guests, engine.HostSpec(hp_ratio=16, near_fraction=0.4,
+                                    base_elems=2, cl=6))
+        src = engine.SynthTrace(n_windows=4, accesses_per_window=64)
+        ref_state, ref = engine.run(spec, s0, src)
+        cs, se = engine.run_churn(spec, engine.init_churn(spec), src)
+        assert_states_equal(ref_state, cs.state)
+        assert_series_equal(ref, drop_churn_channels(se))
+
+
+class TestAdmissionQueue:
+    def test_backoff_delay_schedule(self):
+        b = BackoffConfig(base=1, cap=16)
+        assert [b.delay(n) for n in range(7)] == [1, 2, 4, 8, 16, 16, 16]
+        assert BackoffConfig(base=3, cap=10).delay(50) == 10  # no overflow
+
+    def test_duplicate_submit_raises(self):
+        q = AdmissionQueue()
+        q.submit(7, now=0)
+        with pytest.raises(ValueError, match="already submitted"):
+            q.submit(7, now=1)
+
+    def test_pressure_pushes_out_with_growing_attempts(self):
+        q = AdmissionQueue(BackoffConfig(base=1, cap=16))
+        q.submit(1, now=0)
+        assert q.admit(0, pressure=5, free_lanes=4) == []
+        assert q.qos[1].attempts == 1 and q.qos[1].retry_at == 1
+        assert q.admit(1, pressure=5, free_lanes=4) == []
+        assert q.qos[1].attempts == 2 and q.qos[1].retry_at == 3
+        assert q.admit(2, pressure=5, free_lanes=4) == []  # not due yet
+        assert q.qos[1].attempts == 2
+        assert q.qos[1].admission_latency == -1
+
+    def test_backoff_holds_after_pressure_clears(self):
+        q = AdmissionQueue(BackoffConfig(base=4, cap=16))
+        q.submit(1, now=0)
+        q.admit(0, pressure=1, free_lanes=1)  # pushed to retry_at=4
+        assert q.admit(1, pressure=0, free_lanes=1) == []
+        assert q.admit(4, pressure=0, free_lanes=1) == [1]
+        assert q.qos[1].admission_latency == 4
+
+    def test_fifo_admission_respects_free_lanes(self):
+        q = AdmissionQueue()
+        for t in (1, 2, 3):
+            q.submit(t, now=0)
+        assert q.admit(0, pressure=0, free_lanes=2) == [1, 2]
+        assert q.n_waiting == 1
+        assert q.admit(1, pressure=0, free_lanes=1) == [3]
+        assert q.qos[3].admission_latency == 1
+
+    def test_hit_rate_safe_on_zero(self):
+        q = AdmissionQueue()
+        assert q.submit(1, now=0).hit_rate == 0.0
+
+
+def service_fleet(n_lanes=4):
+    guests = tuple(
+        engine.GuestSpec(n_logical=64, workload="redis", seed=g)
+        for g in range(n_lanes))
+    spec, _ = engine.build(
+        guests, engine.HostSpec(hp_ratio=16, near_fraction=0.4,
+                                base_elems=2, cl=6))
+    return spec
+
+
+class TestTieringService:
+    def test_admit_and_serve(self):
+        svc = TieringService(service_fleet(), accesses_per_window=128)
+        svc.submit(11)
+        svc.tick()
+        st = svc.stats()
+        assert st["resident"] == 1 and st["waiting"] == 0
+        assert st["tenants"][11]["admission_latency"] == 0
+        assert svc.lane_of(11) >= 0
+        for _ in range(3):
+            svc.tick()
+        assert svc.stats()["tenants"][11]["hit_rate"] > 0
+
+    def test_depart_crashes_lane(self):
+        svc = TieringService(service_fleet(), accesses_per_window=128)
+        svc.submit(1)
+        svc.tick()
+        lane = svc.lane_of(1)
+        svc.depart(1)
+        out = svc.tick()
+        assert svc.lane_of(1) == -1
+        assert int(np.asarray(out["near_blocks"])[lane]) == 0
+        assert not bool(np.asarray(out["active"])[lane])
+        with pytest.raises(ValueError, match="not resident"):
+            svc.depart(1)
+
+    def test_backoff_under_pressure_then_admit(self):
+        """The end-to-end serving story: residents fill the near tier, a
+        capacity shrink raises pressure, a late tenant is pushed out with
+        exponential backoff, and admits once capacity is restored."""
+        svc = TieringService(service_fleet(), accesses_per_window=128)
+        svc.submit(1)
+        svc.submit(2)
+        for _ in range(4):  # admit + promote a working set
+            svc.tick()
+        assert svc.stats()["resident"] == 2
+        svc.set_near_cap(1)
+        for _ in range(3):  # build sustained pressure
+            svc.tick()
+        assert svc.stats()["pressure"] > 0
+        svc.submit(3)
+        for _ in range(3):
+            svc.tick()
+        st = svc.stats()
+        assert st["resident"] == 2 and st["waiting"] == 1
+        assert st["tenants"][3]["attempts"] >= 1
+        svc.set_near_cap(None)
+        for _ in range(20):
+            svc.tick()
+            if svc.stats()["resident"] == 3:
+                break
+        st = svc.stats()
+        assert st["resident"] == 3
+        assert st["tenants"][3]["admission_latency"] > 0
+        assert st["tenants"][3]["evictions"] >= 0

@@ -30,6 +30,10 @@ def test_ragged_smoke_runs_in_process():
     assert load_script("ci_smoke_ragged").main() == 0
 
 
+def test_churn_smoke_runs_in_process():
+    assert load_script("ci_smoke_churn").main() == 0
+
+
 def test_sharded_smoke_runs_on_forced_mesh():
     """The 8-device smoke needs its own process: device count is fixed at
     jax init, exactly like CI's smoke step sets XLA_FLAGS for it."""
