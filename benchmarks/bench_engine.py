@@ -270,9 +270,13 @@ def _churn_case() -> dict:
     _best_of(make_plain, run_plain, None, case, "engine")
     _best_of(make_churn, run_churned, None, case, "churn")
     case["churn_vs_engine"] = case["engine_s"] / case["churn_s"]
-    # INV-CRASH-RECLAIM-COMPLETE on the final carry of an untimed run
-    cs, _ = engine.run_churn(spec, engine.init_churn(spec), synth,
-                             faults=sched)
+    # INV-CRASH-RECLAIM-COMPLETE on the final carry of an untimed run; the
+    # same run carries the TCO collector (ISSUE 7) so the perf-trajectory
+    # artifact tracks the fleet's steady-state $-weighted placement
+    cs, se = engine.run_churn(spec, engine.init_churn(spec), synth,
+                              faults=sched, collect=("hits", "tco"))
+    case["tco"] = float(np.asarray(se["tco"])[-3:].mean())
+    case["amat_ns"] = float(np.asarray(se["amat_ns"])[-3:].mean())
     _, hp_owner, _, _ = faults.segment_tables(spec.canonical())
     owner = np.asarray(hp_owner)
     active = np.asarray(cs.active)
@@ -383,6 +387,8 @@ def run() -> dict:
         pod_synth_s=pod["synth_s"],
         churn_vs_engine=churn["churn_vs_engine"],
         reclaim_complete=churn["reclaim_complete"],
+        tco=churn["tco"],
+        amat_ns=churn["amat_ns"],
     )
     if sharded_at_scale:
         # acceptance: the sharded path is no slower than the single-device

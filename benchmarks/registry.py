@@ -24,6 +24,8 @@ SUITES: dict[str, str] = {
     "fig16_mixed_tenants": "per-guest skew histograms, mixed ragged tenants "
                            "on one host (Fig. 16 at scale, SynthTrace)",
     "fig17_pressure": "benefit vs near:far capacity ratio (Fig. 17)",
+    "fig_tco_curve": "TCO/performance frontier: 2-tier vs compressed 3-tier "
+                     "hierarchies under the $/GB objective (ISSUE 7)",
     "bench_engine": "engine vs seed-reference wall-clock (BENCH_engine.json)",
     "bench_churn": "steady-state churn: Poisson guest arrival/departure with "
                    "faults and pressure-aware degradation (ISSUE 6 headline)",

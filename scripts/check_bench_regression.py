@@ -65,6 +65,16 @@ def main(baseline_path: str, fresh_path: str) -> int:
             print(f"FAIL: churn driver overhead regressed below "
                   f"{TOLERANCE}x baseline")
             failed = True
+    if "tco" in fresh:
+        # informational only: the TCO column (ISSUE 7) tracks the churn
+        # fleet's $-weighted placement; baselines from before the tier
+        # subsystem have no such column, so never gate on it
+        if "tco" in baseline:
+            print(f"churn fleet TCO: baseline {baseline['tco']:.4g}, "
+                  f"fresh {fresh['tco']:.4g} (informational)")
+        else:
+            print(f"churn fleet TCO: fresh {fresh['tco']:.4g} "
+                  f"(baseline predates the tco column)")
     if failed:
         return 1
     print("OK: no bench regression")

@@ -1,0 +1,113 @@
+#!/usr/bin/env python
+"""N-tier hierarchy CI smoke on a forced multi-device CPU mesh (ISSUE 7).
+
+Requires `XLA_FLAGS=--xla_force_host_platform_device_count=8` (device count
+is fixed at jax init). Two checks ride one mesh:
+
+* INV-TIER-2SPECIALCASE-EXACT at mesh scale: an explicit
+  ``tiers=two_tier(cfg)`` engine is bit-for-bit equal to the legacy 2-tier
+  engine through BOTH sharded drivers (replicated host and host-partitioned
+  near tier), final state and every collector series.
+* The 3-tier compressed hierarchy (dram + zram + nvmm, DESIGN.md §14) runs
+  the ``compressed`` policy with the TCO collector through both host paths,
+  pinned against ``engine.run`` -- and the 2-tier-only builtin partitioned
+  ticks refuse the 3-tier spec loudly instead of mis-tiering.
+
+Shared entry point for CI (`python scripts/ci_smoke_tiers.py`) and the test
+suite (`pytest -m smoke`, tests/test_ci_smoke.py) so the smoke code cannot
+drift from the library API.
+"""
+import sys
+
+N_DEVICES = 8
+
+
+def main() -> int:
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core import engine, sharding, tiers
+
+    assert jax.local_device_count() == N_DEVICES, (
+        f"need XLA_FLAGS=--xla_force_host_platform_device_count={N_DEVICES}, "
+        f"have {jax.local_device_count()} device(s)")
+
+    def check_equal(ref, got, label):
+        s_ref, a = ref
+        s_got, b = got
+        assert set(a) == set(b), (label, sorted(a), sorted(b))
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k], err_msg=f"{label}: {k}")
+        for x, y in zip(jax.tree_util.tree_leaves(s_ref),
+                        jax.tree_util.tree_leaves(s_got)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=label)
+
+    guests = tuple(
+        engine.GuestSpec(n_logical=64 + 16 * (g % 4),
+                         cl=(None if g % 3 == 0 else 3 + g % 5),
+                         workload=["redis", "masim", "hash"][g % 3],
+                         seed=g)
+        for g in range(6))  # 6 guests on 8 shards: padding path
+    mesh = sharding.guest_mesh(N_DEVICES)
+    synth = engine.SynthTrace(n_windows=4, accesses_per_window=192)
+
+    # -- 2-tier special case: explicit tier vector == legacy, bit-for-bit --
+    spec, state = engine.build(
+        guests, engine.HostSpec(hp_ratio=16, near_fraction=0.4,
+                                base_elems=2, cl=6))
+    spec_tv = dataclasses.replace(spec, tiers=tiers.two_tier(spec.cfg))
+    ref = engine.run(spec, state, synth, collect=("hits", "tco"))
+    check_equal(ref, engine.run(spec_tv, state, synth,
+                                collect=("hits", "tco")), "two_tier run")
+    for host_sharded in (False, True):
+        check_equal(
+            engine.run_sharded(spec, state, synth, mesh=mesh,
+                               host_sharded=host_sharded,
+                               collect=("hits", "tco")),
+            engine.run_sharded(spec_tv, state, synth, mesh=mesh,
+                               host_sharded=host_sharded,
+                               collect=("hits", "tco")),
+            f"two_tier host_sharded={host_sharded}")
+
+    # -- 3-tier compressed hierarchy through both host paths --
+    host3 = engine.HostSpec(
+        hp_ratio=16, base_elems=2, cl=6,
+        tiers=tiers.compressed_specs(near_fraction=0.2, mid_fraction=0.2,
+                                     compression=2.0))
+    spec3, state3 = engine.build(guests, host3)
+    tv = spec3.tiers
+    assert tv is not None and tv.n_tiers == 3, tv
+    ref3 = engine.run(spec3, state3, synth, policy="compressed",
+                      collect=("hits", "tco"))
+    for host_sharded in (False, True):
+        check_equal(
+            ref3,
+            engine.run_sharded(spec3, state3, synth, mesh=mesh,
+                               policy="compressed",
+                               host_sharded=host_sharded,
+                               collect=("hits", "tco")),
+            f"compressed host_sharded={host_sharded}")
+    tco = np.asarray(ref3[1]["tco"])
+    assert (tco > 0).all(), tco
+
+    # the 2-tier-only builtin partitioned ticks must refuse the 3-tier spec
+    try:
+        engine.run_sharded(spec3, state3, synth, mesh=mesh,
+                           policy="memtierd", host_sharded=True)
+    except ValueError as e:
+        assert "tier" in str(e), e
+    else:
+        raise AssertionError(
+            "memtierd host-partitioned tick accepted a 3-tier spec")
+
+    print(f"tiers smoke OK ({N_DEVICES}-device mesh: 2-tier special case "
+          f"bit-exact on both host paths, 3-tier compressed + TCO pinned, "
+          f"boundaries={tv.boundaries})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

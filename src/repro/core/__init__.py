@@ -20,9 +20,14 @@ from repro.core import (  # noqa: F401
     sharding,
     telemetry,
     tiering,
+    tiers,
 )
 from repro.core.engine import (  # noqa: F401
     EngineSpec,
     GuestSpec,
     HostSpec,
+)
+from repro.core.tiers import (  # noqa: F401
+    TierSpec,
+    TierVector,
 )

@@ -40,6 +40,7 @@ import numpy as np
 from repro.core import address_space as asp
 from repro.core import faults as faults_mod
 from repro.core import gpac, metrics, telemetry, tiering
+from repro.core import tiers as tiers_mod
 from repro.core.types import GpacConfig, TieredState, allocated_hp_mask, init_state
 
 
@@ -78,7 +79,10 @@ class HostSpec:
 
     ``near_fraction`` sizes the near tier as a fraction of the guests' total
     *needed* huge pages (the paper's DRAM:NVMM ratio knob, Fig. 17);
-    ``n_near`` overrides it with an explicit block count.
+    ``n_near`` overrides it with an explicit block count. ``tiers`` replaces
+    both with an N-tier hierarchy: a tuple of ``core.tiers.TierSpec`` whose
+    capacity fractions ``build`` resolves into slot boundaries (tier 0
+    becomes the near pool); it is mutually exclusive with ``n_near``.
     """
 
     hp_ratio: int = 512
@@ -91,6 +95,43 @@ class HostSpec:
     ipt_min_hits: int = 1
     reconsolidate_cooldown: int = 2
     dtype: Any = jnp.float32
+    tiers: tuple | None = None
+
+    def __post_init__(self):
+        if self.hp_ratio < 1:
+            raise ValueError(
+                f"HostSpec: hp_ratio must be >= 1, got {self.hp_ratio}")
+        if not 0.0 < self.near_fraction <= 1.0:
+            raise ValueError(
+                f"HostSpec: near_fraction must be in (0, 1], got "
+                f"{self.near_fraction}")
+        if self.n_near < 0:
+            raise ValueError(
+                f"HostSpec: n_near must be >= 0 (0 means derive from "
+                f"near_fraction), got {self.n_near}")
+        if self.base_elems < 1:
+            raise ValueError(
+                f"HostSpec: base_elems must be >= 1, got {self.base_elems}")
+        if not 1 <= self.cl <= self.hp_ratio:
+            raise ValueError(
+                f"HostSpec: Consolidation Limit must be in [1, hp_ratio="
+                f"{self.hp_ratio}], got cl={self.cl}")
+        if self.tiers is not None:
+            if self.n_near:
+                raise ValueError(
+                    f"HostSpec: tiers and n_near are mutually exclusive "
+                    f"(tier 0's capacity sizes the near pool), got n_near="
+                    f"{self.n_near} with {len(self.tiers)} tiers")
+            object.__setattr__(self, "tiers", tuple(self.tiers))
+            if len(self.tiers) < 2:
+                raise ValueError(
+                    f"HostSpec: tiers needs >= 2 entries, got "
+                    f"{len(self.tiers)}")
+            for t in self.tiers:
+                if not isinstance(t, tiers_mod.TierSpec):
+                    raise ValueError(
+                        f"HostSpec: tiers entries must be TierSpec, got "
+                        f"{type(t).__name__}: {t!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,10 +151,18 @@ class EngineSpec:
     guests: tuple[GuestSpec, ...]
     logical_offsets: tuple[int, ...]  # len n_guests+1
     hp_offsets: tuple[int, ...]  # len n_guests+1
+    # resolved core.tiers.TierVector when built from HostSpec.tiers; None
+    # keeps every legacy path on the 2-tier near/far special case
+    tiers: Any = None
 
     @property
     def n_guests(self) -> int:
         return len(self.guests)
+
+    @property
+    def tier_vector(self):
+        """The resolved hierarchy, defaulting to the legacy 2-tier split."""
+        return tiers_mod.as_vector(self.cfg, self.tiers)
 
     def logical_range(self, g: int) -> tuple[int, int]:
         return self.logical_offsets[g], self.logical_offsets[g + 1]
@@ -204,7 +253,12 @@ def build(
     hp_offsets = tuple(np.cumsum([0] + hp_sizes).tolist())
     n_hp = hp_offsets[-1]
     total_need = sum(g.hp_need(host.hp_ratio) for g in guests)
-    n_near = host.n_near or max(1, int(host.near_fraction * total_need))
+    tv = None
+    if host.tiers is not None:
+        tv = tiers_mod.resolve(host.tiers, n_slots=n_hp, total_need=total_need)
+        n_near = tv.boundaries[1]
+    else:
+        n_near = host.n_near or max(1, int(host.near_fraction * total_need))
     cfg = GpacConfig(
         n_logical=logical_offsets[-1],
         hp_ratio=host.hp_ratio,
@@ -218,7 +272,7 @@ def build(
         reconsolidate_cooldown=host.reconsolidate_cooldown,
         dtype=host.dtype,
     )
-    spec = EngineSpec(cfg, guests, logical_offsets, hp_offsets)
+    spec = EngineSpec(cfg, guests, logical_offsets, hp_offsets, tiers=tv)
     return spec, init_engine_state(spec)
 
 
@@ -554,6 +608,18 @@ def _collect_snapshot(spec, state, window) -> dict:
     return metrics.device_snapshot(spec.cfg, state)
 
 
+@register_collector("tco")
+def _collect_tco(spec, state, window) -> dict:
+    """The TCO objective per window (``core.tiers.tco_metrics``): $-weighted
+    resident GB of the post-tick placement, the per-tier AMAT of this
+    window's accesses, and the raw per-tier block/hit vectors. Works on any
+    spec -- without ``HostSpec.tiers`` it prices the legacy near/far split
+    as a DRAM/NVMM pair."""
+    tv = spec.tier_vector
+    blocks = tiers_mod.tier_alloc_counts(spec.cfg, state, tv)
+    return tiers_mod.tco_metrics(spec.cfg, tv, blocks, window["tier_hits"])
+
+
 # --------------------------------------------------------------------------
 # the one shared driver
 # --------------------------------------------------------------------------
@@ -578,13 +644,16 @@ def _window(
         near_hits=(valid & (slot < cfg.n_near)).sum(axis=1),
         far_hits=(valid & (slot >= cfg.n_near)).sum(axis=1),
     )
+    if "tco" in collect:
+        window["tier_hits"] = tiers_mod.tier_hit_counts(
+            spec.tier_vector, slot, valid)
     state = asp.record_accesses(cfg, state, ids.reshape(-1))
     if use_gpac:
         # all N guest daemons in one batched pass over the segment-offset
         # tables; disjoint segments make this bit-equal to N sequential
         # per-guest gpac_maintenance calls (see run_reference)
         state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
-    state = tiering.tick(cfg, state, policy, budget=budget)
+    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
     state = telemetry.end_window(cfg, state)
     return state, run_collectors(spec, state, window, collect)
 
@@ -845,7 +914,7 @@ def run(
 # collectors with a host-partitioned implementation (repro.core.sharding
 # computes them from the per-window candidate exchange without ever
 # materializing the replicated host state)
-HOST_SHARDED_COLLECTORS = ("hits", "near_blocks", "snapshot")
+HOST_SHARDED_COLLECTORS = ("hits", "near_blocks", "snapshot", "tco")
 
 
 def run_sharded(
@@ -1114,16 +1183,19 @@ def _churn_window(
         near_hits=(valid & (slot < cfg.n_near)).sum(axis=1),
         far_hits=(valid & (slot >= cfg.n_near)).sum(axis=1),
     )
+    if "tco" in collect:
+        window["tier_hits"] = tiers_mod.tier_hit_counts(
+            spec.tier_vector, slot, valid)
     keep = jnp.where(frow["drop"], 0, 1).astype(jnp.int32)
     state = asp.apply_access_histogram(
         cfg, state, asp.access_histogram(cfg, ids, valid) * keep
     )
     if use_gpac:
         state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
-    state = tiering.tick(cfg, state, policy, budget=budget)
+    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
     state, engaged, press = tiering.pressure_tick(
         cfg, state, near_cap, cs.engaged, cs.pressure,
-        budget=budget, slack=slack,
+        budget=budget, slack=slack, tiers=spec.tiers,
     )
     state = telemetry.end_window(cfg, state)
     out = run_collectors(spec, state, window, collect)
@@ -1481,7 +1553,7 @@ def _step_reference_impl(
                 cfg, state, backend, max_batches, spec.guest_cl(g),
                 allow=allow, hp_range=spec.hp_range(g),
             )
-    state = tiering.tick(cfg, state, policy, budget=budget)
+    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
     alloc = allocated_hp_mask(cfg, state)
     in_near = state.block_table < cfg.n_near
     near_blocks = []

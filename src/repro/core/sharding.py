@@ -51,7 +51,7 @@ bytes scale ~1/n_devices.
 from __future__ import annotations
 
 import dataclasses
-from functools import lru_cache
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +62,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import address_space as asp
 from repro.core import faults as faults_mod
 from repro.core import gpac, telemetry, tiering
+from repro.core import tiers as tiers_mod
 from repro.core.types import FREE, GpacConfig, TieredState
 
 AXIS = "guest"
@@ -280,18 +281,28 @@ def _sharded_window(
             jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad,
         )
     # ---- 3. one-collective ownership merge -------------------------------
-    state, (near_all, far_all) = merge_window(
-        cfg, base, local, logical_pad, hp_pad,
-        (_spread_rows(near_loc, n_shards), _spread_rows(far_loc, n_shards)),
+    extras = [
+        _spread_rows(near_loc, n_shards), _spread_rows(far_loc, n_shards),
+    ]
+    if "tco" in collect:
+        # local per-tier hit vector; the psum of int counts reproduces the
+        # replicated tier_hit_counts exactly
+        extras.append(
+            tiers_mod.tier_hit_counts(spec.tier_vector, slot, valid))
+    state, merged_extras = merge_window(
+        cfg, base, local, logical_pad, hp_pad, tuple(extras),
         merged_gpac=use_gpac,
     )
+    near_all, far_all = merged_extras[0], merged_extras[1]
     # ---- 4. host tick + window roll (replicated) ------------------------
-    state = tiering.tick(cfg, state, policy, budget=budget)
+    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
     state = telemetry.end_window(cfg, state)
     window = dict(
         near_hits=near_all[: spec.n_guests],
         far_hits=far_all[: spec.n_guests],
     )
+    if "tco" in collect:
+        window["tier_hits"] = merged_extras[2]
     return state, run_collectors(spec, state, window, collect)
 
 
@@ -467,19 +478,27 @@ def _churn_sharded_window(
             jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad,
         )
     # ---- 3. one-collective ownership merge -------------------------------
-    state, (near_all, far_all) = merge_window(
-        cfg, base, local, logical_pad, hp_pad,
-        (_spread_rows(near_loc, n_shards), _spread_rows(far_loc, n_shards)),
+    extras = [
+        _spread_rows(near_loc, n_shards), _spread_rows(far_loc, n_shards),
+    ]
+    if "tco" in collect:
+        extras.append(
+            tiers_mod.tier_hit_counts(spec.tier_vector, slot, valid))
+    state, merged_extras = merge_window(
+        cfg, base, local, logical_pad, hp_pad, tuple(extras),
         merged_gpac=use_gpac,
     )
+    near_all, far_all = merged_extras[0], merged_extras[1]
     # ---- 4. host + pressure ticks, window roll (replicated) --------------
-    state = tiering.tick(cfg, state, policy, budget=budget)
+    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
     state, engaged, press = tiering.pressure_tick(
         cfg, state, near_cap, cs.engaged, cs.pressure,
-        budget=budget, slack=slack,
+        budget=budget, slack=slack, tiers=spec.tiers,
     )
     state = telemetry.end_window(cfg, state)
     window = dict(near_hits=near_all[:n_g], far_hits=far_all[:n_g])
+    if "tco" in collect:
+        window["tier_hits"] = merged_extras[2]
     out = run_collectors(spec, state, window, collect)
     clash = set(out) & set(_CHURN_SERIES)
     if clash:
@@ -815,26 +834,43 @@ def _near_blocks_local(cfg: GpacConfig, alloc: jax.Array, bt: jax.Array,
 
 
 def _near_blocks_delta(spec, swaps, g_pad: int) -> jax.Array:
-    """Replicated per-guest near-block delta of the arbitrated swap rounds
-    (promoted allocated blocks enter near, demoted ones leave)."""
+    """Replicated per-guest near-block delta of the arbitrated swap rounds.
+
+    Slot-aware: each committed candidate moves from its own slot to its
+    partner's, so its near-count contribution is ``(partner in near) - (self
+    in near)``. For the builtin 2-tier rounds that is exactly the old
+    +1/-1 per promoted/demoted block; for N-tier flows (the ``compressed``
+    policy) a swap deeper than the near boundary contributes 0.
+    """
+    n_near = spec.cfg.n_near
     hp_off = jnp.asarray(spec.hp_offsets, jnp.int32)
     delta = jnp.zeros((g_pad,), jnp.int32)
     for far, near, ok in swaps:
-        for cand, sign in ((far, 1), (near, -1)):
+        for cand, other in ((far, near), (near, far)):
             g = jnp.searchsorted(hp_off, cand["id"], side="right") - 1
-            w = jnp.where(ok & (cand["alloc"] > 0), sign, 0)
+            w = jnp.where(
+                ok & (cand["alloc"] > 0),
+                (other["slot"] < n_near).astype(jnp.int32)
+                - (cand["slot"] < n_near).astype(jnp.int32),
+                0,
+            )
             delta = delta.at[jnp.where(ok, g, g_pad)].add(w, mode="drop")
     return delta
 
 
-def _near_scalar_delta(swaps) -> jax.Array:
+def _near_scalar_delta(cfg: GpacConfig, swaps) -> jax.Array:
     """Replicated host-wide delta of allocated near blocks from the
     arbitrated swaps (the scalar form of :func:`_near_blocks_delta`, for the
-    host-sharded ``snapshot`` collector)."""
+    host-sharded ``snapshot`` collector); slot-aware like it."""
     d = jnp.int32(0)
     for far, near, ok in swaps:
-        d = d + jnp.where(ok & (far["alloc"] > 0), 1, 0).sum()
-        d = d - jnp.where(ok & (near["alloc"] > 0), 1, 0).sum()
+        for cand, other in ((far, near), (near, far)):
+            d = d + jnp.where(
+                ok & (cand["alloc"] > 0),
+                (other["slot"] < cfg.n_near).astype(jnp.int32)
+                - (cand["slot"] < cfg.n_near).astype(jnp.int32),
+                0,
+            ).sum()
     return d
 
 
@@ -914,6 +950,9 @@ def _host_sharded_window(
         alloc=jnp.where(hp_ids >= 0, alloc_full[jnp.maximum(hp_ids, 0)], False),
     )
     prepare, apply = tiering.sharded_tick_fns(policy)
+    if spec.tiers is not None:
+        prepare = partial(prepare, tiers=spec.tiers)
+        apply = partial(apply, tiers=spec.tiers)
     payload = prepare(cfg, L, budget)
     exchange = dict(
         cands=jax.tree_util.tree_map(
@@ -928,6 +967,15 @@ def _host_sharded_window(
             _near_blocks_local(cfg, L["alloc"], loc["bt"], hp_lo, hp_pad),
             n_shards,
         )
+    if "tco" in collect:
+        # local per-tier access and pre-tick block counts ride the same
+        # psum; the arbitrated swap deltas correct blocks to post-tick
+        # replicatedly (tier_count_delta), so the priced placement is
+        # bit-identical to the replicated collector's
+        tv = spec.tier_vector
+        exchange["tier_hits"] = tiers_mod.tier_hit_counts(tv, slot, valid)
+        exchange["tier_blocks"] = tiers_mod.tier_block_counts(
+            tv, loc["bt"], L["alloc"])
     if gstats is not None:
         # snapshot scalars ride the same collective: this device's window
         # stat deltas so far (access + GPAC phases; the tick's are
@@ -977,7 +1025,7 @@ def _host_sharded_window(
         elif name == "snapshot":
             # metrics.device_snapshot reconstructed from the exchange: same
             # int sums -> bit-identical float divisions
-            alloc_near = merged["alloc_near"] + _near_scalar_delta(swaps)
+            alloc_near = merged["alloc_near"] + _near_scalar_delta(cfg, swaps)
             rss = jnp.maximum(merged["alloc_tot"], 1)
             emitted = dict(
                 epoch=epoch,
@@ -987,6 +1035,12 @@ def _host_sharded_window(
                     gstats["near_hits"] + gstats["far_hits"], 1),
                 **gstats,
             )
+        elif name == "tco":
+            tv = spec.tier_vector
+            blocks = merged["tier_blocks"] + tiers_mod.tier_count_delta(
+                tv, swaps)
+            emitted = tiers_mod.tco_metrics(cfg, tv, blocks,
+                                            merged["tier_hits"])
         else:  # pragma: no cover - engine.run_sharded validates upfront
             raise ValueError(f"collector {name!r} has no host-sharded form")
         clash = set(emitted) & set(out)

@@ -149,12 +149,27 @@ def _paired_ids(mask_a, score_a, mask_b, score_b, budget):
 # --------------------------------------------------------------------------
 # policies
 # --------------------------------------------------------------------------
-def memtierd_tick(cfg: GpacConfig, state: TieredState, budget: int = 64) -> TieredState:
+def _flow(cfg, state, tiers, pair_name, **kw):
+    """Dispatch a builtin policy over an N-tier vector as adjacent-pair
+    flows (``core.tiers``); the 2-tier vector is pinned bit-for-bit against
+    the legacy body below (INV-TIER-2SPECIALCASE-EXACT)."""
+    from repro.core import tiers as tiers_mod
+
+    return tiers_mod.flow_tick(
+        cfg, state, tiers, tiers_mod._PAIR_FNS[pair_name], **kw)
+
+
+def memtierd_tick(
+    cfg: GpacConfig, state: TieredState, budget: int = 64, tiers=None
+) -> TieredState:
     """Proactive ranking: the hottest allocated blocks belong near.
 
     Promote the hottest far blocks whose score beats the coldest near blocks
-    (swap pairs), up to ``budget`` migrations per tick.
+    (swap pairs), up to ``budget`` migrations per tick. With an N-tier
+    ``tiers`` vector, runs as adjacent-pair flows instead.
     """
+    if tiers is not None:
+        return _flow(cfg, state, tiers, "memtierd", budget=budget)
     score = _block_score(cfg, state)
     alloc = allocated_hp_mask(cfg, state)
     in_near = state.block_table < cfg.n_near
@@ -194,8 +209,12 @@ def autonuma_tick(
     state: TieredState,
     budget: int = 16,
     pressure: float = 0.95,
+    tiers=None,
 ) -> TieredState:
     """Hint-fault promotion; demote only under pressure (LRU victims)."""
+    if tiers is not None:
+        return _flow(cfg, state, tiers, "autonuma", budget=budget,
+                     pressure=pressure)
     alloc = allocated_hp_mask(cfg, state)
     in_near = state.block_table < cfg.n_near
     faulting = alloc & ~in_near & (state.host_counts >= 2)
@@ -216,6 +235,7 @@ def tpp_tick(
     state: TieredState,
     budget: int = 16,
     watermark: float = 0.1,
+    tiers=None,
 ) -> TieredState:
     """Fault promotion + watermark demotion under allocation pressure
     (TPP's two loops).
@@ -226,6 +246,9 @@ def tpp_tick(
        TPP's wmark_demote path;
     2. promote blocks with >=2 faults this window into the freed space.
     """
+    if tiers is not None:
+        return _flow(cfg, state, tiers, "tpp", budget=budget,
+                     watermark=watermark)
     alloc = allocated_hp_mask(cfg, state)
     in_near = state.block_table < cfg.n_near
     free_near = (in_near & ~alloc).sum()
@@ -266,14 +289,20 @@ register_policy("autonuma", autonuma_tick)
 register_policy("tpp", tpp_tick)
 
 
-def tick(cfg: GpacConfig, state: TieredState, policy: str, **kw) -> TieredState:
-    """Dispatch to a registered host tiering policy by name."""
+def tick(
+    cfg: GpacConfig, state: TieredState, policy: str, tiers=None, **kw
+) -> TieredState:
+    """Dispatch to a registered host tiering policy by name. ``tiers`` (a
+    ``core.tiers.TierVector``) is forwarded only when set, so policies
+    registered before the tier subsystem keep their signatures."""
     try:
         fn = _POLICIES[policy]
     except KeyError:
         raise ValueError(
             f"unknown tiering policy {policy!r} (have {policies()})"
         ) from None
+    if tiers is not None:
+        kw["tiers"] = tiers
     return fn(cfg, state, **kw)
 
 
@@ -288,6 +317,7 @@ def pressure_tick(
     pressure: jax.Array,  # int32[] consecutive engaged windows (backoff signal)
     budget: int = 64,
     slack: int = 1,
+    tiers=None,
 ) -> tuple[TieredState, jax.Array, jax.Array]:
     """Enforce an injected effective near capacity with two watermarks.
 
@@ -315,8 +345,18 @@ def pressure_tick(
     never exceeds the physical ``n_near``, so with ``near_cap == n_near``
     (no fault injected) usage can never breach the cap and the whole
     function is a value-exact no-op (INV-CHURN-NOOP-EXACT relies on this).
+
+    With an N-tier ``tiers`` vector the controller becomes a per-tier
+    cascade (``core.tiers.pressure_cascade``): every tier enforces its own
+    watermark by demoting into the tier below, and the returned
+    ``engaged``/``pressure`` track tier 0 (the admission signal).
     """
     del engaged  # previous-window breach: carried for observers, not logic
+    if tiers is not None:
+        from repro.core import tiers as tiers_mod
+
+        return tiers_mod.pressure_cascade(
+            cfg, state, tiers, near_cap, pressure, budget=budget, slack=slack)
     alloc = allocated_hp_mask(cfg, state)
     in_near = state.block_table < cfg.n_near
     usage = (alloc & in_near).sum().astype(jnp.int32)
@@ -372,6 +412,19 @@ def pressure_tick(
 def _b(cfg: GpacConfig, budget: int) -> int:
     """Effective per-side budget (matches ``_paired_ids``'s shape clamp)."""
     return min(budget, cfg.n_gpa_hp)
+
+
+def _check_two_tier(cfg: GpacConfig, tiers) -> None:
+    """The builtin sharded ticks arbitrate exactly one near/far pair: they
+    accept a tier vector only when it IS the legacy 2-tier split (the
+    ``compressed`` policy in ``core.tiers`` handles N > 2 on this path)."""
+    if tiers is None or tiers.boundaries == (0, cfg.n_near, cfg.n_slots):
+        return
+    raise ValueError(
+        f"builtin sharded ticks support only the 2-tier split "
+        f"(0, {cfg.n_near}, {cfg.n_slots}); got boundaries "
+        f"{tiers.boundaries} -- use policy='compressed' or "
+        f"host_sharded=False")
 
 
 def _cand_kw(L: dict) -> dict:
@@ -503,7 +556,8 @@ def apply_swaps_local(
 # --------------------------------------------------------------------------
 # per-policy (prepare, apply) pairs
 # --------------------------------------------------------------------------
-def _memtierd_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
+def _memtierd_prepare(cfg: GpacConfig, L: dict, budget: int, tiers=None) -> dict:
+    _check_two_tier(cfg, tiers)
     b = _b(cfg, budget)
     kw = _cand_kw(L)
     valid = L["hp_ids"] >= 0
@@ -521,7 +575,10 @@ def _memtierd_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
     ), sums=dict())
 
 
-def _memtierd_apply(cfg: GpacConfig, L: dict, merged: dict, budget: int):
+def _memtierd_apply(
+    cfg: GpacConfig, L: dict, merged: dict, budget: int, tiers=None
+):
+    _check_two_tier(cfg, tiers)
     b = _b(cfg, budget)
     C = {k: _flat_cands(v) for k, v in merged["cands"].items()}
     # round 1: hottest far vs coldest near, only strictly-improving pairs
@@ -554,7 +611,8 @@ def _memtierd_apply(cfg: GpacConfig, L: dict, merged: dict, budget: int):
     return bt, {s: d1[s] + d2[s] for s in d1}, ((far, near, ok1), (far2, near2, ok2))
 
 
-def _autonuma_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
+def _autonuma_prepare(cfg: GpacConfig, L: dict, budget: int, tiers=None) -> dict:
+    _check_two_tier(cfg, tiers)
     b = _b(cfg, budget)
     kw = _cand_kw(L)
     valid = L["hp_ids"] >= 0
@@ -570,8 +628,10 @@ def _autonuma_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
 
 
 def _autonuma_apply(
-    cfg: GpacConfig, L: dict, merged: dict, budget: int, pressure: float = 0.95
+    cfg: GpacConfig, L: dict, merged: dict, budget: int,
+    pressure: float = 0.95, tiers=None,
 ):
+    _check_two_tier(cfg, tiers)
     b = _b(cfg, budget)
     C = {k: _flat_cands(v) for k, v in merged["cands"].items()}
     pressured = merged["sums"]["near_used"] >= jnp.int32(pressure * cfg.n_near)
@@ -586,7 +646,8 @@ def _autonuma_apply(
     return bt, d, ((far, near, ok),)
 
 
-def _tpp_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
+def _tpp_prepare(cfg: GpacConfig, L: dict, budget: int, tiers=None) -> dict:
+    _check_two_tier(cfg, tiers)
     b = _b(cfg, budget)
     kw = _cand_kw(L)
     valid = L["hp_ids"] >= 0
@@ -606,8 +667,10 @@ def _tpp_prepare(cfg: GpacConfig, L: dict, budget: int) -> dict:
 
 
 def _tpp_apply(
-    cfg: GpacConfig, L: dict, merged: dict, budget: int, watermark: float = 0.1
+    cfg: GpacConfig, L: dict, merged: dict, budget: int,
+    watermark: float = 0.1, tiers=None,
 ):
+    _check_two_tier(cfg, tiers)
     b = _b(cfg, budget)
     C = {k: _flat_cands(v) for k, v in merged["cands"].items()}
     want_free = jnp.int32(watermark * cfg.n_near)

@@ -1,0 +1,733 @@
+"""N-tier memory hierarchies: software-defined tiers, inter-tier flows, TCO.
+
+The paper's near/far split is the 2-tier special case of a general memory
+hierarchy. Following *Taming Server Memory TCO with Multiple Software-Defined
+Compressed Tiers* (arXiv 2404.13886) and *HybridTier* (arXiv 2312.04789),
+this module generalizes the slot space into an ordered vector of tiers:
+
+  * :class:`TierSpec`   -- one tier: capacity fraction, latency, bandwidth,
+    compression factor (effective capacity = capacity x compression) and a
+    $/GB cost weight (the TCO objective).
+  * :class:`TierVector` -- a resolved hierarchy: the tier specs plus slot
+    boundaries partitioning ``[0, n_slots)`` into contiguous tier ranges.
+    Tier 0 is the fastest (the paper's "near" tier); the last tier is the
+    capacity backstop. ``two_tier(cfg)`` reconstructs the legacy near/far
+    split, so every existing code path is the 2-tier special case.
+
+Placement generalizes from promote/demote pairs to **inter-tier flows**
+between adjacent tiers: :func:`flow_tick` runs a pair policy top-down over
+each adjacent (upper, lower) boundary pair, and :func:`swap_flow` is the
+bounds-parameterized migration primitive (``tiering.swap_blocks`` with the
+near/far constants replaced by tier ranges). With a 2-tier vector every
+flow body below is **bit-for-bit identical** to the legacy tick it mirrors
+(INV-TIER-2SPECIALCASE-EXACT): the extra range conjuncts are tautologies on
+a slot permutation, and the generalized pool gather/scatter only changes
+*dropped* rows (garbage gathered under ``~ok`` never lands because the
+scatter row is the out-of-range sentinel).
+
+Two new policies ride the flow machinery:
+
+  * ``compressed`` -- demote-into-compressed (arXiv 2404.13886): each pair
+    keeps a free-headroom watermark in the upper tier by demoting coldest
+    blocks down, then promotes identified-hot blocks up; effective capacity
+    per tier is already folded into the boundaries by :func:`resolve`.
+    Registered on BOTH paths (replicated + host-sharded (prepare, apply)).
+  * ``hybridtier`` -- adaptive placement (arXiv 2312.04789): each pair
+    tracks a moving hot threshold (mean resident score of the upper tier)
+    and promotes only blocks hotter than it, evicting colder-than-threshold
+    residents. Replicated-only (``host_sharded=False``).
+
+TCO metric: :func:`tco_metrics` prices the post-tick placement --
+``tco = sum_t blocks_t * GB/block * cost_t / compression_t`` -- and an
+AMAT charged per tier latency; ``engine.register_collector("tco")`` wires
+it next to hit-rate on every driver path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics
+from repro.core.address_space import dataclasses_replace
+from repro.core.tiering import (
+    NEG,
+    _b,
+    _cand_kw,
+    _paired_ids,
+    _pair_k,
+    allocated_hp_mask,
+    apply_swaps_local,
+    block_score_arrays,
+    nominate,
+    rank_select,
+    register_policy,
+    register_sharded_tick,
+    slots_after_swaps,
+    _flat_cands,
+)
+from repro.core.types import GpacConfig, TieredState
+
+# default $/GB weights per tier name (arXiv 2404.13886's TCO framing: the
+# near tier is the expensive one; compressed/far tiers are the cheap ones)
+DEFAULT_COST = {"hbm": 2.5, "dram": 1.0, "zram": 1.0, "cxl": 0.6, "nvmm": 0.4}
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One software-defined tier.
+
+    ``capacity`` is a fraction of the allocated huge-page demand (mirrors
+    ``HostSpec.near_fraction``); ``compression`` multiplies it into an
+    effective block count (a zswap-style tier stores ``capacity x
+    compression`` blocks in ``capacity`` worth of physical GB, and is
+    priced on the *physical* GB). The last tier of a vector is the
+    capacity backstop: its ``capacity`` is ignored and it absorbs every
+    remaining slot.
+    """
+
+    name: str
+    capacity: float
+    latency_ns: float
+    bandwidth_gbps: float = 100.0
+    compression: float = 1.0
+    cost_per_gb: float = 1.0
+
+    def __post_init__(self):
+        if not 0.0 < self.capacity <= 1.0:
+            raise ValueError(
+                f"TierSpec {self.name!r}: capacity must be in (0, 1], got "
+                f"{self.capacity}")
+        if self.latency_ns <= 0.0:
+            raise ValueError(
+                f"TierSpec {self.name!r}: latency_ns must be > 0, got "
+                f"{self.latency_ns}")
+        if self.bandwidth_gbps <= 0.0:
+            raise ValueError(
+                f"TierSpec {self.name!r}: bandwidth_gbps must be > 0, got "
+                f"{self.bandwidth_gbps}")
+        if self.compression < 1.0:
+            raise ValueError(
+                f"TierSpec {self.name!r}: compression must be >= 1, got "
+                f"{self.compression}")
+        if self.cost_per_gb < 0.0:
+            raise ValueError(
+                f"TierSpec {self.name!r}: cost_per_gb must be >= 0, got "
+                f"{self.cost_per_gb}")
+
+
+@dataclasses.dataclass(frozen=True)
+class TierVector:
+    """A resolved tier hierarchy over the slot space.
+
+    ``boundaries`` has ``len(tiers) + 1`` entries: tier ``t`` owns slots
+    ``[boundaries[t], boundaries[t+1])``; ``boundaries[0] == 0`` and
+    ``boundaries[-1] == n_slots``. Hashable (tuples only) so it can ride
+    ``EngineSpec`` as a static jit key.
+    """
+
+    tiers: tuple[TierSpec, ...]
+    boundaries: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.tiers) < 2:
+            raise ValueError(
+                f"TierVector needs >= 2 tiers, got {len(self.tiers)}")
+        if len(self.boundaries) != len(self.tiers) + 1:
+            raise ValueError(
+                f"TierVector: {len(self.tiers)} tiers need "
+                f"{len(self.tiers) + 1} boundaries, got "
+                f"{len(self.boundaries)}")
+        if self.boundaries[0] != 0:
+            raise ValueError(
+                f"TierVector: boundaries must start at 0, got "
+                f"{self.boundaries[0]}")
+        if any(b >= c for b, c in zip(self.boundaries, self.boundaries[1:])):
+            raise ValueError(
+                f"TierVector: boundaries must be strictly increasing, got "
+                f"{self.boundaries}")
+
+    @property
+    def n_tiers(self) -> int:
+        return len(self.tiers)
+
+    def bounds(self, t: int) -> tuple[int, int]:
+        """Slot range ``[lo, hi)`` of tier ``t``."""
+        return self.boundaries[t], self.boundaries[t + 1]
+
+
+def two_tier(cfg: GpacConfig) -> TierVector:
+    """The legacy near/far split as a :class:`TierVector` (the 2-tier
+    special case every existing path runs)."""
+    return TierVector(
+        tiers=(
+            TierSpec("dram", 1.0, metrics.TIER_LATENCY_NS["dram"],
+                     cost_per_gb=DEFAULT_COST["dram"]),
+            TierSpec("nvmm", 1.0, metrics.TIER_LATENCY_NS["nvmm"],
+                     cost_per_gb=DEFAULT_COST["nvmm"]),
+        ),
+        boundaries=(0, cfg.n_near, cfg.n_slots),
+    )
+
+
+def compressed_specs(
+    near_fraction: float = 0.15,
+    mid_fraction: float = 0.25,
+    compression: float = 3.0,
+) -> tuple[TierSpec, ...]:
+    """A 3-tier DRAM / compressed-DRAM (zram) / NVMM hierarchy -- the
+    canonical arXiv-2404.13886 shape the smoke script and benchmarks use.
+    The middle tier stores ``mid_fraction x compression`` blocks in
+    ``mid_fraction`` worth of DRAM; its latency adds a decompression charge
+    on top of DRAM."""
+    return (
+        TierSpec("dram", near_fraction, metrics.TIER_LATENCY_NS["dram"],
+                 cost_per_gb=DEFAULT_COST["dram"]),
+        TierSpec("zram", mid_fraction,
+                 metrics.TIER_LATENCY_NS["dram"] + 170.0,
+                 compression=compression, cost_per_gb=DEFAULT_COST["zram"]),
+        TierSpec("nvmm", 1.0, metrics.TIER_LATENCY_NS["nvmm"],
+                 cost_per_gb=DEFAULT_COST["nvmm"]),
+    )
+
+
+def resolve(
+    specs: tuple[TierSpec, ...], n_slots: int, total_need: int
+) -> TierVector:
+    """Resolve capacity fractions into slot boundaries over ``n_slots``.
+
+    Each non-final tier gets ``int(capacity * total_need) * compression``
+    effective slots (at least one), clamped so every later tier keeps at
+    least one slot; the final tier absorbs the remainder. Mirrors how
+    ``engine.build`` derives ``n_near`` from ``near_fraction``.
+    """
+    specs = tuple(specs)
+    n = len(specs)
+    if n < 2:
+        raise ValueError(f"tier hierarchy needs >= 2 tiers, got {n}")
+    if n_slots < n:
+        raise ValueError(
+            f"{n} tiers need at least {n} slots, got n_slots={n_slots}")
+    bounds = [0]
+    for t in range(n - 1):
+        s = specs[t]
+        eff = max(1, int(max(1, int(s.capacity * total_need)) * s.compression))
+        bounds.append(min(bounds[-1] + eff, n_slots - (n - 1 - t)))
+    bounds.append(n_slots)
+    return TierVector(tiers=specs, boundaries=tuple(bounds))
+
+
+def as_vector(cfg: GpacConfig, tiers: TierVector | None) -> TierVector:
+    """``tiers`` if given, else the legacy 2-tier split."""
+    return tiers if tiers is not None else two_tier(cfg)
+
+
+def tier_of_slot(tv: TierVector, slots: jax.Array) -> jax.Array:
+    """Tier index of each slot (int32; out-of-range sentinels land past the
+    last tier -- callers mask them out)."""
+    t = jnp.zeros(slots.shape, jnp.int32)
+    for b in tv.boundaries[1:-1]:
+        t = t + (slots >= b).astype(jnp.int32)
+    return t
+
+
+# --------------------------------------------------------------------------
+# the flow migration primitive (tiering.swap_blocks with tier bounds)
+# --------------------------------------------------------------------------
+def _read_slots(cfg: GpacConfig, state: TieredState, slots, ok):
+    """Gather block payloads by slot regardless of which pool holds them.
+    Rows gathered under ``~ok`` are garbage; every caller scatters them to
+    the drop sentinel, so they never land (the 2-tier bit-exactness relies
+    on exactly this)."""
+    s = jnp.where(ok, slots, 0)
+    near = state.near_pool[jnp.clip(s, 0, cfg.n_near - 1)]
+    far = state.far_pool[jnp.clip(s - cfg.n_near, 0, cfg.n_far - 1)]
+    return jnp.where((s < cfg.n_near)[:, None, None], near, far)
+
+
+def _write_slots(cfg: GpacConfig, near_pool, far_pool, slots, data, ok):
+    near_row = jnp.where(ok & (slots < cfg.n_near), slots, cfg.n_near)
+    far_row = jnp.where(
+        ok & (slots >= cfg.n_near), slots - cfg.n_near, cfg.n_far)
+    return (
+        near_pool.at[near_row].set(data, mode="drop"),
+        far_pool.at[far_row].set(data, mode="drop"),
+    )
+
+
+def swap_flow(
+    cfg: GpacConfig,
+    state: TieredState,
+    lo_hps: jax.Array,
+    hi_hps: jax.Array,
+    k: jax.Array,
+    hi_bounds: tuple[int, int],
+    lo_bounds: tuple[int, int],
+) -> TieredState:
+    """Promote ``lo_hps[i]`` (lower tier) and demote ``hi_hps[i]`` (upper
+    tier) for i < k -- :func:`tiering.swap_blocks` generalized to an
+    adjacent tier pair. Pairs where either id is -1, i >= k, or the current
+    slot is outside its claimed tier range are dropped."""
+    u_lo, u_hi = hi_bounds
+    d_lo, d_hi = lo_bounds
+    m = lo_hps.shape[0]
+    i = jnp.arange(m)
+    lo_c = jnp.maximum(lo_hps, 0)
+    hi_c = jnp.maximum(hi_hps, 0)
+    s_lo = state.block_table[lo_c]
+    s_hi = state.block_table[hi_c]
+    ok = (
+        (i < k)
+        & (lo_hps >= 0)
+        & (hi_hps >= 0)
+        & (s_lo >= d_lo)
+        & (s_lo < d_hi)
+        & (s_hi >= u_lo)
+        & (s_hi < u_hi)
+    )
+    data_lo = _read_slots(cfg, state, s_lo, ok)
+    data_hi = _read_slots(cfg, state, s_hi, ok)
+    near_pool, far_pool = _write_slots(
+        cfg, state.near_pool, state.far_pool, s_hi, data_lo, ok)
+    near_pool, far_pool = _write_slots(
+        cfg, near_pool, far_pool, s_lo, data_hi, ok)
+
+    bt = state.block_table
+    bt = bt.at[jnp.where(ok, lo_hps, cfg.n_gpa_hp)].set(s_hi, mode="drop")
+    bt = bt.at[jnp.where(ok, hi_hps, cfg.n_gpa_hp)].set(s_lo, mode="drop")
+    so = state.slot_owner
+    so = so.at[jnp.where(ok, s_hi, cfg.n_slots)].set(lo_c, mode="drop")
+    so = so.at[jnp.where(ok, s_lo, cfg.n_slots)].set(hi_c, mode="drop")
+
+    n_swaps = ok.sum().astype(jnp.int32)
+    alloc = allocated_hp_mask(cfg, state)
+    promoted = (ok & alloc[lo_c]).sum().astype(jnp.int32)
+    demoted = (ok & alloc[hi_c]).sum().astype(jnp.int32)
+    stats = dict(state.stats)
+    stats["promoted_blocks"] = stats["promoted_blocks"] + promoted
+    stats["demoted_blocks"] = stats["demoted_blocks"] + demoted
+    stats["tlb_shootdowns"] = (
+        stats["tlb_shootdowns"] + (n_swaps > 0).astype(jnp.int32))
+    return dataclasses_replace(
+        state,
+        block_table=bt,
+        slot_owner=so,
+        near_pool=near_pool,
+        far_pool=far_pool,
+        stats=stats,
+    )
+
+
+def flow_tick(cfg, state, tiers: TierVector, pair_fn, **kw) -> TieredState:
+    """Run ``pair_fn(cfg, state, upper_bounds, lower_bounds, **kw)`` over
+    every adjacent tier pair, top-down (blocks move at most one tier per
+    pair, so a hot block climbs one tier per tick -- HybridTier's staged
+    promotion)."""
+    for t in range(tiers.n_tiers - 1):
+        state = pair_fn(cfg, state, tiers.bounds(t), tiers.bounds(t + 1), **kw)
+    return state
+
+
+# --------------------------------------------------------------------------
+# the three builtin policies as adjacent-pair flows (2-tier == legacy tick,
+# bit-for-bit: see module docstring)
+# --------------------------------------------------------------------------
+def _in_range(bt, bounds):
+    lo, hi = bounds
+    return (bt >= lo) & (bt < hi)
+
+
+def memtierd_pair(cfg, state, u_bounds, d_bounds, budget: int = 64):
+    """:func:`tiering.memtierd_tick` between one adjacent tier pair."""
+    score = block_score_arrays(state.host_counts, state.host_hist)
+    alloc = allocated_hp_mask(cfg, state)
+    in_u = _in_range(state.block_table, u_bounds)
+    in_d = _in_range(state.block_table, d_bounds)
+    victim_score = jnp.where(alloc, score, NEG + 1)
+    lo_ids, hi_ids, k = _paired_ids(
+        alloc & in_d & (score > 0), score, in_u, victim_score, budget)
+    gain = jnp.where(
+        (lo_ids >= 0) & (hi_ids >= 0),
+        score[jnp.maximum(lo_ids, 0)] > victim_score[jnp.maximum(hi_ids, 0)],
+        False,
+    )
+    k = jnp.minimum(k, gain.astype(jnp.int32).cumprod().sum())
+    state = swap_flow(cfg, state, lo_ids, hi_ids, k, u_bounds, d_bounds)
+
+    alloc = allocated_hp_mask(cfg, state)
+    in_u = _in_range(state.block_table, u_bounds)
+    in_d = _in_range(state.block_table, d_bounds)
+    score = block_score_arrays(state.host_counts, state.host_hist)
+    cold_u = alloc & in_u & (score == 0)
+    free_d = ~alloc & in_d
+    lo_ids, hi_ids, k = _paired_ids(
+        free_d, jnp.zeros_like(score), cold_u, score, budget)
+    return swap_flow(cfg, state, lo_ids, hi_ids, k, u_bounds, d_bounds)
+
+
+def autonuma_pair(
+    cfg, state, u_bounds, d_bounds, budget: int = 16, pressure: float = 0.95
+):
+    """:func:`tiering.autonuma_tick` between one adjacent tier pair."""
+    alloc = allocated_hp_mask(cfg, state)
+    in_u = _in_range(state.block_table, u_bounds)
+    in_d = _in_range(state.block_table, d_bounds)
+    faulting = alloc & in_d & (state.host_counts >= 2)
+    upper_used = (alloc & in_u).sum()
+    pressured = upper_used >= jnp.int32(pressure * (u_bounds[1] - u_bounds[0]))
+    lru = state.last_touch_epoch.astype(jnp.int32)
+    victim_ok = in_u & (~alloc | pressured)
+    victim_score = jnp.where(alloc, lru, NEG + 1)
+    lo_ids, hi_ids, k = _paired_ids(
+        faulting, state.host_counts.astype(jnp.int32), victim_ok,
+        victim_score, budget)
+    return swap_flow(cfg, state, lo_ids, hi_ids, k, u_bounds, d_bounds)
+
+
+def tpp_pair(
+    cfg, state, u_bounds, d_bounds, budget: int = 16, watermark: float = 0.1
+):
+    """:func:`tiering.tpp_tick` between one adjacent tier pair."""
+    alloc = allocated_hp_mask(cfg, state)
+    in_u = _in_range(state.block_table, u_bounds)
+    in_d = _in_range(state.block_table, d_bounds)
+    free_u = (in_u & ~alloc).sum()
+    want_free = jnp.int32(watermark * (u_bounds[1] - u_bounds[0]))
+    demand = (alloc & in_d & (state.host_counts >= 2)).sum()
+    need = jnp.maximum(jnp.minimum(want_free, demand),
+                       jnp.minimum(demand, budget))
+    n_demote = jnp.clip(need - free_u, 0, budget)
+    lru = state.last_touch_epoch.astype(jnp.int32)
+    lo_free_ids, hi_cold_ids, k_d = _paired_ids(
+        in_d & ~alloc, jnp.zeros_like(lru), in_u & alloc, lru, budget)
+    state = swap_flow(
+        cfg, state, lo_free_ids, hi_cold_ids, jnp.minimum(k_d, n_demote),
+        u_bounds, d_bounds)
+    alloc = allocated_hp_mask(cfg, state)
+    in_u = _in_range(state.block_table, u_bounds)
+    in_d = _in_range(state.block_table, d_bounds)
+    faulting = alloc & in_d & (state.host_counts >= 2)
+    lo_ids, hi_ids, k_p = _paired_ids(
+        faulting, state.host_counts.astype(jnp.int32), in_u & ~alloc,
+        jnp.zeros_like(lru), budget)
+    return swap_flow(cfg, state, lo_ids, hi_ids, k_p, u_bounds, d_bounds)
+
+
+_PAIR_FNS = {
+    "memtierd": memtierd_pair,
+    "autonuma": autonuma_pair,
+    "tpp": tpp_pair,
+}
+
+
+# --------------------------------------------------------------------------
+# per-tier pressure cascade (tiering.pressure_tick generalized)
+# --------------------------------------------------------------------------
+def pressure_cascade(
+    cfg: GpacConfig,
+    state: TieredState,
+    tiers: TierVector,
+    near_cap: jax.Array,
+    pressure: jax.Array,
+    budget: int = 64,
+    slack: int = 1,
+):
+    """Per-tier watermark enforcement, top-down: each tier demotes into the
+    one below when its allocated usage breaches its cap. Tier 0's cap is
+    the injected ``near_cap`` (the churn engine's fault-shrunk capacity);
+    deeper tiers enforce their physical size minus ``slack`` so a demote
+    wave cascades down instead of overcommitting the middle. With a 2-tier
+    vector only the tier-0 pair runs and the result is bit-identical to
+    :func:`tiering.pressure_tick`. Returns ``(state, engaged0, pressure')``
+    keyed on tier 0 -- the signal admission control reads.
+    """
+    engaged0 = None
+    for t in range(tiers.n_tiers - 1):
+        u_lo, u_hi = tiers.bounds(t)
+        d_bounds = tiers.bounds(t + 1)
+        cap = near_cap if t == 0 else jnp.int32(max(u_hi - u_lo - slack, 0))
+        alloc = allocated_hp_mask(cfg, state)
+        in_u = _in_range(state.block_table, (u_lo, u_hi))
+        in_d = _in_range(state.block_table, d_bounds)
+        usage = (alloc & in_u).sum().astype(jnp.int32)
+        low = jnp.maximum(cap - slack, 0)
+        engaged = usage > cap
+        n_demote = jnp.where(engaged, jnp.clip(usage - low, 0, budget), 0)
+        score = block_score_arrays(state.host_counts, state.host_hist)
+        lo_ids, hi_ids, k = _paired_ids(
+            ~alloc & in_d, jnp.zeros_like(score), alloc & in_u, score, budget)
+        state = swap_flow(
+            cfg, state, lo_ids, hi_ids, jnp.minimum(k, n_demote),
+            (u_lo, u_hi), d_bounds)
+        if t == 0:
+            engaged0 = engaged
+    pressure = jnp.where(engaged0, pressure + 1, 0).astype(jnp.int32)
+    return state, engaged0, pressure
+
+
+# --------------------------------------------------------------------------
+# compressed-tier policy (arXiv 2404.13886) -- replicated + host-sharded
+# --------------------------------------------------------------------------
+def compressed_tick(
+    cfg: GpacConfig,
+    state: TieredState,
+    budget: int = 64,
+    tiers: TierVector | None = None,
+    free_frac: float = 0.1,
+) -> TieredState:
+    """Demote-into-compressed placement over an N-tier vector.
+
+    Per adjacent pair, top-down: (1) demote coldest allocated upper blocks
+    into the lower tier until ``free_frac`` of the upper tier is free
+    (zswap's writeback watermark -- headroom for incoming promotions);
+    (2) promote identified-hot lower blocks (score > 0) over strictly
+    colder upper victims. All candidate masks and scores come from the
+    PRE-TICK snapshot; the swap predicates re-check the *current* slot
+    range, so a block that already moved this tick simply drops out of a
+    later pair -- the exact discipline the host-sharded apply uses, which
+    is what keeps the two paths bit-identical.
+    """
+    tv = as_vector(cfg, tiers)
+    score0 = block_score_arrays(state.host_counts, state.host_hist)
+    alloc0 = allocated_hp_mask(cfg, state)
+    bt0 = state.block_table
+    vict0 = jnp.where(alloc0, score0, NEG + 1)
+    zero = jnp.zeros_like(score0)
+    for t in range(tv.n_tiers - 1):
+        u_bounds, d_bounds = tv.bounds(t), tv.bounds(t + 1)
+        in_u0 = _in_range(bt0, u_bounds)
+        in_d0 = _in_range(bt0, d_bounds)
+        # (1) watermark demotion: coldest allocated upper -> free lower
+        free_u0 = (in_u0 & ~alloc0).sum()
+        want = jnp.int32(free_frac * (u_bounds[1] - u_bounds[0]))
+        n_demote = jnp.clip(want - free_u0, 0, budget)
+        lo_ids, hi_ids, k = _paired_ids(
+            in_d0 & ~alloc0, zero, in_u0 & alloc0, score0, budget)
+        state = swap_flow(
+            cfg, state, lo_ids, hi_ids, jnp.minimum(k, n_demote),
+            u_bounds, d_bounds)
+        # (2) promotion: identified-hot lower blocks over colder victims
+        lo_ids, hi_ids, k = _paired_ids(
+            alloc0 & in_d0 & (score0 > 0), score0, in_u0, vict0, budget)
+        gain = jnp.where(
+            (lo_ids >= 0) & (hi_ids >= 0),
+            score0[jnp.maximum(lo_ids, 0)] > vict0[jnp.maximum(hi_ids, 0)],
+            False,
+        )
+        k = jnp.minimum(k, gain.astype(jnp.int32).cumprod().sum())
+        state = swap_flow(cfg, state, lo_ids, hi_ids, k, u_bounds, d_bounds)
+    return state
+
+
+def _compressed_prepare(
+    cfg: GpacConfig, L: dict, budget: int, tiers: TierVector | None = None
+) -> dict:
+    tv = as_vector(cfg, tiers)
+    b = _b(cfg, budget)
+    kw = _cand_kw(L)
+    valid = L["hp_ids"] >= 0
+    score = block_score_arrays(L["hc"], L["hh"])
+    alloc = L["alloc"]
+    vict = jnp.where(alloc, score, NEG + 1)
+    zero = jnp.zeros_like(score)
+    cands, sums = {}, {}
+    for t in range(tv.n_tiers - 1):
+        in_u = _in_range(L["bt"], tv.bounds(t))
+        in_d = _in_range(L["bt"], tv.bounds(t + 1))
+        cands[f"df{t}"] = nominate(valid & in_d & ~alloc, zero, b, **kw)
+        cands[f"dv{t}"] = nominate(valid & in_u & alloc, -score, b, **kw)
+        cands[f"ph{t}"] = nominate(
+            valid & alloc & in_d & (score > 0), score, b, **kw)
+        cands[f"pv{t}"] = nominate(valid & in_u, -vict, b, **kw)
+        sums[f"free{t}"] = (valid & in_u & ~alloc).sum()
+    return dict(cands=cands, sums=sums)
+
+
+def flow_outcome(
+    cfg: GpacConfig, lo: dict, hi: dict, k: jax.Array,
+    hi_bounds: tuple[int, int], lo_bounds: tuple[int, int],
+):
+    """:func:`tiering.swap_outcome` with tier bounds: which arbitrated
+    pairs commit under :func:`swap_flow`'s predicate, plus stats deltas."""
+    u_lo, u_hi = hi_bounds
+    d_lo, d_hi = lo_bounds
+    i = jnp.arange(lo["id"].shape[0])
+    ok = (
+        (i < k)
+        & (lo["id"] >= 0)
+        & (hi["id"] >= 0)
+        & (lo["slot"] >= d_lo)
+        & (lo["slot"] < d_hi)
+        & (hi["slot"] >= u_lo)
+        & (hi["slot"] < u_hi)
+    )
+    stats = dict(
+        promoted_blocks=(ok & (lo["alloc"] > 0)).sum().astype(jnp.int32),
+        demoted_blocks=(ok & (hi["alloc"] > 0)).sum().astype(jnp.int32),
+        tlb_shootdowns=(ok.sum() > 0).astype(jnp.int32),
+    )
+    return ok, stats
+
+
+def _compressed_apply(
+    cfg: GpacConfig, L: dict, merged: dict, budget: int,
+    tiers: TierVector | None = None, free_frac: float = 0.1,
+):
+    tv = as_vector(cfg, tiers)
+    b = _b(cfg, budget)
+    C = {k: _flat_cands(v) for k, v in merged["cands"].items()}
+    rounds = []
+    bt = L["bt"]
+
+    def current(c):
+        # chase each candidate's slot through every committed round so the
+        # range predicates see the live placement, exactly like the
+        # replicated tick's swap_flow reads state.block_table
+        slot = c["slot"]
+        for lo_r, hi_r, ok_r in rounds:
+            slot = slots_after_swaps(c["id"], slot, lo_r, hi_r, ok_r)
+        return {**c, "slot": slot}
+
+    stats = dict(promoted_blocks=jnp.int32(0), demoted_blocks=jnp.int32(0),
+                 tlb_shootdowns=jnp.int32(0))
+    for t in range(tv.n_tiers - 1):
+        u_bounds, d_bounds = tv.bounds(t), tv.bounds(t + 1)
+        want = jnp.int32(free_frac * (u_bounds[1] - u_bounds[0]))
+        n_demote = jnp.clip(want - merged["sums"][f"free{t}"], 0, budget)
+        lo = current(rank_select(C[f"df{t}"], b))
+        hi = current(rank_select(C[f"dv{t}"], b))
+        ok, d = flow_outcome(
+            cfg, lo, hi, jnp.minimum(_pair_k(lo, hi), n_demote),
+            u_bounds, d_bounds)
+        bt = apply_swaps_local(bt, L["hp_lo"], L["hp_hi"], lo, hi, ok)
+        rounds.append((lo, hi, ok))
+        stats = {s: stats[s] + d[s] for s in stats}
+
+        lo = current(rank_select(C[f"ph{t}"], b))
+        hi = current(rank_select(C[f"pv{t}"], b))
+        gain = jnp.where(
+            (lo["id"] >= 0) & (hi["id"] >= 0), lo["val"] > -hi["val"], False)
+        k = jnp.minimum(
+            _pair_k(lo, hi), gain.astype(jnp.int32).cumprod().sum())
+        ok, d = flow_outcome(cfg, lo, hi, k, u_bounds, d_bounds)
+        bt = apply_swaps_local(bt, L["hp_lo"], L["hp_hi"], lo, hi, ok)
+        rounds.append((lo, hi, ok))
+        stats = {s: stats[s] + d[s] for s in stats}
+    return bt, stats, tuple(rounds)
+
+
+# --------------------------------------------------------------------------
+# HybridTier-style adaptive policy (arXiv 2312.04789) -- replicated only
+# --------------------------------------------------------------------------
+def hybridtier_tick(
+    cfg: GpacConfig,
+    state: TieredState,
+    budget: int = 16,
+    tiers: TierVector | None = None,
+) -> TieredState:
+    """Adaptive hot-threshold placement: per pair, the promotion bar is the
+    mean score of the upper tier's resident blocks (a moving threshold that
+    rises as the tier fills with hot data and falls as it cools --
+    HybridTier's lightweight frequency-tracking, without per-page PEBS).
+    Promotes lower blocks strictly above the bar over upper victims at or
+    below it. No host-sharded form (run with ``host_sharded=False``)."""
+    tv = as_vector(cfg, tiers)
+    for t in range(tv.n_tiers - 1):
+        u_bounds, d_bounds = tv.bounds(t), tv.bounds(t + 1)
+        score = block_score_arrays(state.host_counts, state.host_hist)
+        alloc = allocated_hp_mask(cfg, state)
+        in_u = _in_range(state.block_table, u_bounds)
+        in_d = _in_range(state.block_table, d_bounds)
+        resident = alloc & in_u
+        n_res = resident.sum().astype(jnp.int32)
+        thr = (jnp.where(resident, score, 0).sum().astype(jnp.int32)
+               // jnp.maximum(n_res, 1))
+        vict = jnp.where(alloc, score, NEG + 1)
+        lo_ids, hi_ids, k = _paired_ids(
+            alloc & in_d & (score > thr), score,
+            in_u & (~alloc | (score <= thr)), vict, budget)
+        gain = jnp.where(
+            (lo_ids >= 0) & (hi_ids >= 0),
+            score[jnp.maximum(lo_ids, 0)] > vict[jnp.maximum(hi_ids, 0)],
+            False,
+        )
+        k = jnp.minimum(k, gain.astype(jnp.int32).cumprod().sum())
+        state = swap_flow(cfg, state, lo_ids, hi_ids, k, u_bounds, d_bounds)
+    return state
+
+
+# --------------------------------------------------------------------------
+# TCO metric (priced placement + per-tier AMAT)
+# --------------------------------------------------------------------------
+def tier_hit_counts(tv: TierVector, slot: jax.Array, valid: jax.Array):
+    """Per-tier access counts for one window's translated slots
+    (int32[n_tiers]); invalid accesses count nowhere."""
+    return jnp.stack([
+        (valid & (slot >= lo) & (slot < hi)).sum().astype(jnp.int32)
+        for lo, hi in (tv.bounds(t) for t in range(tv.n_tiers))
+    ])
+
+
+def tier_block_counts(tv: TierVector, bt: jax.Array, alloc: jax.Array):
+    """Allocated-block count per tier from block_table rows (int32[n_tiers]);
+    works on the full table or a device's local rows (padded rows carry the
+    out-of-range sentinel and a False alloc bit, so they count nowhere)."""
+    return jnp.stack([
+        (alloc & (bt >= lo) & (bt < hi)).sum().astype(jnp.int32)
+        for lo, hi in (tv.bounds(t) for t in range(tv.n_tiers))
+    ])
+
+
+def tier_alloc_counts(
+    cfg: GpacConfig, state: TieredState, tv: TierVector
+) -> jax.Array:
+    return tier_block_counts(
+        tv, state.block_table, allocated_hp_mask(cfg, state))
+
+
+def tier_count_delta(tv: TierVector, swaps) -> jax.Array:
+    """Per-tier allocated-block delta implied by arbitrated swap rounds --
+    the host-sharded path's way to price the POST-tick placement from
+    pre-tick counts plus the committed swaps (rides the same psum)."""
+    d = jnp.zeros((tv.n_tiers,), jnp.int32)
+    for lo, hi, ok in swaps:
+        for side, other in ((lo, hi), (hi, lo)):
+            w = (ok & (side["alloc"] > 0)).astype(jnp.int32)
+            d = d.at[tier_of_slot(tv, side["slot"])].add(-w, mode="drop")
+            d = d.at[tier_of_slot(tv, other["slot"])].add(w, mode="drop")
+    return d
+
+
+def tco_metrics(
+    cfg: GpacConfig, tv: TierVector,
+    tier_blocks: jax.Array, tier_hits: jax.Array,
+) -> dict:
+    """The TCO objective: physical $-weighted resident GB plus the per-tier
+    AMAT. ``tco = sum_t blocks_t * GB/block * cost_t / compression_t``
+    (a compressed tier stores ``compression`` blocks per physical block's
+    GB, so its blocks are cheap); ``amat_ns`` charges each tier's hits at
+    its latency. Identical fixed python loop order on every path, so the
+    float accumulation is bit-reproducible."""
+    gb_per_block = cfg.hp_bytes / float(1 << 30)
+    tco = jnp.float32(0.0)
+    amat = jnp.float32(0.0)
+    for t in range(tv.n_tiers):
+        s = tv.tiers[t]
+        tco = tco + tier_blocks[t].astype(jnp.float32) * jnp.float32(
+            gb_per_block * s.cost_per_gb / s.compression)
+        amat = amat + tier_hits[t].astype(jnp.float32) * jnp.float32(
+            s.latency_ns)
+    total = tier_hits.sum().astype(jnp.float32)
+    return dict(
+        tco=tco,
+        amat_ns=amat / jnp.maximum(total, 1.0),
+        tier_blocks=tier_blocks,
+        tier_hits=tier_hits,
+    )
+
+
+register_policy("compressed", compressed_tick)
+register_sharded_tick("compressed", _compressed_prepare, _compressed_apply)
+register_policy("hybridtier", hybridtier_tick)

@@ -347,8 +347,17 @@ class TieringService:
     def window(self) -> int:
         return int(np.asarray(self.cs.window))
 
-    def submit(self, tenant: int):
-        self.queue.submit(tenant, now=self.window)
+    def submit(self, tenant: int, tier_floor: int = 0):
+        """Queue a tenant; ``tier_floor`` names the deepest tier index its
+        SLO tolerates (0 = near only; ``n_tiers - 1`` accepts any
+        placement). Floors are accounted against the spec's tier vector:
+        a floor at the last tier counts every hit in-SLO, a floor of 0
+        counts near hits only, and intermediate floors are scored
+        conservatively from the near/far split (near hits are always at or
+        above any floor)."""
+        n_tiers = self.spec.tier_vector.n_tiers
+        self.queue.submit(
+            tenant, now=self.window, tier_floor=min(tier_floor, n_tiers - 1))
 
     def depart(self, tenant: int):
         """Tenant leaves: its lane crashes on the next :meth:`tick` (blocks
@@ -411,6 +420,12 @@ class TieringService:
             q = self.queue.qos[tenant]
             q.near_hits += int(near[lane])
             q.far_hits += int(far[lane])
+            # SLO floor: near hits always satisfy the floor; a floor at
+            # the deepest tier accepts everything (per-tenant hits only
+            # resolve the near/far split, so middle floors score near-only)
+            q.floor_hits += int(near[lane])
+            if q.tier_floor >= self.spec.tier_vector.n_tiers - 1:
+                q.floor_hits += int(far[lane])
             if not restart[lane]:  # eviction = resident near blocks lost
                 q.evictions += int(max(self._prev_near[lane] - blocks[lane], 0))
         self._prev_near = blocks
@@ -432,6 +447,8 @@ class TieringService:
                     attempts=q.attempts,
                     evictions=q.evictions,
                     hit_rate=q.hit_rate,
+                    tier_floor=q.tier_floor,
+                    floor_hit_rate=q.floor_hit_rate,
                 )
                 for t, q in self.queue.qos.items()
             },

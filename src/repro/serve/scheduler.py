@@ -95,7 +95,13 @@ class BackoffConfig:
 class TenantQoS:
     """Per-tenant quality-of-service counters (the churn benchmark's
     per-tenant figure): admission latency in windows, blocks evicted from
-    the near tier while resident, and the tenant's cumulative hit split."""
+    the near tier while resident, and the tenant's cumulative hit split.
+
+    ``tier_floor`` is the deepest tier index this tenant's SLO tolerates
+    (0 = near-tier only, ``n_tiers - 1`` = any placement is fine);
+    ``floor_hits`` accumulates the accesses that landed at or above the
+    floor, so ``floor_hit_rate`` is the fraction of traffic inside SLO.
+    """
 
     tenant: int
     submitted_at: int = -1
@@ -105,6 +111,8 @@ class TenantQoS:
     evictions: int = 0  # near blocks lost while resident
     near_hits: int = 0
     far_hits: int = 0
+    tier_floor: int = 0  # deepest acceptable tier index (SLO)
+    floor_hits: int = 0  # accesses that landed at or above the floor
 
     @property
     def admission_latency(self) -> int:
@@ -117,6 +125,12 @@ class TenantQoS:
     def hit_rate(self) -> float:
         total = self.near_hits + self.far_hits
         return self.near_hits / total if total else 0.0
+
+    @property
+    def floor_hit_rate(self) -> float:
+        """Fraction of this tenant's accesses served inside its SLO floor."""
+        total = self.near_hits + self.far_hits
+        return self.floor_hits / total if total else 0.0
 
 
 class AdmissionQueue:
@@ -139,10 +153,14 @@ class AdmissionQueue:
         self.waiting: deque = deque()  # tenant ids, FIFO
         self.qos: dict[int, TenantQoS] = {}
 
-    def submit(self, tenant: int, now: int) -> TenantQoS:
+    def submit(self, tenant: int, now: int, tier_floor: int = 0) -> TenantQoS:
         if tenant in self.qos:
             raise ValueError(f"tenant {tenant} already submitted")
-        q = TenantQoS(tenant=tenant, submitted_at=now, retry_at=now)
+        if tier_floor < 0:
+            raise ValueError(
+                f"tenant {tenant}: tier_floor must be >= 0, got {tier_floor}")
+        q = TenantQoS(tenant=tenant, submitted_at=now, retry_at=now,
+                      tier_floor=tier_floor)
         self.qos[tenant] = q
         self.waiting.append(tenant)
         return q

@@ -52,6 +52,33 @@ def test_sharded_smoke_runs_on_forced_mesh():
     assert "sharded engine smoke OK" in proc.stdout
 
 
+def test_tiers_smoke_runs_on_forced_mesh():
+    """The N-tier smoke also needs the forced 8-device mesh (same reason as
+    the sharded smoke: device count is fixed at jax init)."""
+    env = dict(
+        os.environ,
+        XLA_FLAGS="--xla_force_host_platform_device_count=8",
+        JAX_PLATFORMS="cpu",
+        PYTHONPATH="src" + os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, "ci_smoke_tiers.py")],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "tiers smoke OK" in proc.stdout
+
+
+def test_tiers_smoke_refuses_wrong_device_count():
+    import jax
+
+    if jax.local_device_count() != 1:
+        pytest.skip("needs the suite's single-device environment")
+    with pytest.raises(AssertionError, match="device_count"):
+        load_script("ci_smoke_tiers").main()
+
+
 def test_sharded_smoke_refuses_wrong_device_count():
     """Run in-process (single device): the script must fail loudly rather
     than silently smoke-test a 1-device mesh."""

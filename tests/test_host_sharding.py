@@ -221,6 +221,41 @@ class TestHostShardedSnapshot:
                 collect=("hits", "snapshot"))
 
 
+class TestHostShardedTco:
+    """The TCO collector's host-partitioned form: per-device tier block
+    counts ride the arbitration psum, committed swap deltas are applied as
+    exact int updates, and the final cost/AMAT floats use the same op order
+    as the replicated collector -- so the series match bit-for-bit."""
+
+    @pytest.mark.parametrize("use_gpac", [False, True])
+    def test_matches_replicated_collector(self, use_gpac):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=5, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(
+            spec, s0, traces, use_gpac=use_gpac, collect=("hits", "tco"))
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, use_gpac=use_gpac,
+            host_sharded=True, collect=("hits", "tco"))
+        assert_states_equal(ref_state, sh_state)
+        assert set(ref) == set(sh)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+    def test_composes_with_snapshot_and_chunking(self):
+        spec, s0 = ragged_engine()
+        traces = engine.guest_traces(spec, n_windows=6, accesses_per_window=128)
+        mesh = sharding.guest_mesh(1)
+        ref_state, ref = engine.run(
+            spec, s0, traces, collect=("snapshot", "tco"))
+        sh_state, sh = engine.run_sharded(
+            spec, s0, traces, mesh=mesh, host_sharded=True,
+            collect=("snapshot", "tco"), windows_per_step=3)
+        assert_states_equal(ref_state, sh_state)
+        for k in ref:
+            np.testing.assert_array_equal(ref[k], sh[k], err_msg=k)
+
+
 MULTI_DEVICE_CHECK = """
 import numpy as np, jax
 from repro.core import engine, sharding
@@ -297,6 +332,7 @@ check(8, 4, True, "memtierd", 2) # chunked: two merges through the carry
 check_synth(6, 8, True, ("hits", "near_blocks"), 2)
 check_synth(8, 4, False, ("hits", "near_blocks"))
 check_synth(8, 8, True, ("snapshot",))
+check_synth(8, 8, True, ("hits", "tco"))   # TCO deltas ride the psum
 """
 
 
@@ -321,4 +357,4 @@ class TestHostShardedMultiDevice:
         )
         assert proc.returncode == 0, (
             f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
-        assert proc.stdout.count("OK") == 9, proc.stdout
+        assert proc.stdout.count("OK") == 10, proc.stdout

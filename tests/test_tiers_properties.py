@@ -1,0 +1,116 @@
+"""Hypothesis property forms of the tier-subsystem invariants (DESIGN.md §10):
+
+  * INV-TIER-2SPECIALCASE-EXACT -- any legacy policy tick equals its
+    ``two_tier`` flow parameterization bit-for-bit, for any config/telemetry;
+  * INV-PRESSURE-NO-OVERCOMMIT -- the pressure controller demotes at most
+    its budget, never promotes, and lands exactly on the low watermark when
+    candidates and budget allow.
+
+Split from test_tiers.py so containers without hypothesis skip only these
+(same gate as test_core_invariants.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GpacConfig,
+    address_space as asp,
+    init_state,
+    start_all_far,
+    tiering,
+    tiers,
+)
+from repro.core.types import allocated_hp_mask
+
+
+def payload(cfg, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(cfg.n_logical, cfg.base_elems)), jnp.float32)
+
+
+def assert_states_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def check_permutation(cfg, state):
+    bt = np.asarray(state.block_table)
+    so = np.asarray(state.slot_owner)
+    assert sorted(bt) == list(range(cfg.n_slots)), "block_table not a permutation"
+    assert (so[bt] == np.arange(cfg.n_gpa_hp)).all(), "slot_owner∘block_table != id"
+
+
+@st.composite
+def tier_cfg(draw):
+    hp_ratio = draw(st.sampled_from([4, 8, 16]))
+    n_hp = draw(st.integers(6, 14))
+    n_logical = draw(st.integers(hp_ratio, (n_hp - 2) * hp_ratio))
+    n_near = draw(st.integers(1, n_hp - 2))
+    cfg = GpacConfig(
+        n_logical=n_logical, hp_ratio=hp_ratio, n_gpa_hp=n_hp, n_near=n_near,
+        base_elems=2, cl=draw(st.integers(1, hp_ratio)),
+    )
+    seed = draw(st.integers(0, 7))
+    policy = draw(st.sampled_from(tuple(tiering.POLICIES)))
+    return cfg, seed, policy
+
+
+@given(tier_cfg())
+@settings(max_examples=15, deadline=None)
+def test_inv_tier_2specialcase_exact(args):
+    """INV-TIER-2SPECIALCASE-EXACT: for any config/telemetry, every legacy
+    policy tick equals its two_tier flow parameterization bit-for-bit."""
+    cfg, seed, policy = args
+    rng = np.random.default_rng(seed)
+    state = start_all_far(cfg, init_state(cfg, fill=payload(cfg, seed)))
+    ids = jnp.asarray(rng.integers(0, cfg.n_logical, size=64), jnp.int32)
+    state = asp.record_accesses(cfg, state, ids)
+    legacy = tiering.tick(cfg, state, policy)
+    flow = tiering.tick(cfg, state, policy, tiers=tiers.two_tier(cfg))
+    assert_states_equal(legacy, flow)
+
+
+@given(tier_cfg(), st.integers(0, 6), st.integers(1, 8), st.integers(0, 2))
+@settings(max_examples=15, deadline=None)
+def test_inv_pressure_no_overcommit(args, cap, budget, slack):
+    """INV-PRESSURE-NO-OVERCOMMIT: the controller demotes at most ``budget``
+    blocks, never promotes, lands exactly at the low watermark when enough
+    candidates and budget exist, and reports engaged = usage > cap."""
+    cfg, seed, _ = args
+    rng = np.random.default_rng(seed)
+    state = start_all_far(cfg, init_state(cfg, fill=payload(cfg, seed)))
+    ids = jnp.asarray(rng.integers(0, cfg.n_logical, size=64), jnp.int32)
+    state = asp.record_accesses(cfg, state, ids)
+    state = tiering.tick(cfg, state, "memtierd")  # promote some blocks near
+
+    def near_used(s):
+        alloc = np.asarray(allocated_hp_mask(cfg, s))
+        return int((alloc & (np.asarray(s.block_table) < cfg.n_near)).sum())
+
+    used = near_used(state)
+    cap_a = jnp.asarray(cap, jnp.int32)
+    out, engaged, pressure = tiering.pressure_tick(
+        cfg, state, cap_a, jnp.zeros((), bool), jnp.zeros((), jnp.int32),
+        budget=budget, slack=slack)
+    check_permutation(cfg, out)
+    used2 = near_used(out)
+    assert bool(engaged) == (used > cap)
+    assert used2 <= used, "pressure tick must never promote"
+    assert used - used2 <= budget, "demoted more than the budget"
+    target = max(cap - slack, 0)
+    free_far = (cfg.n_slots - cfg.n_near) - (
+        int(np.asarray(allocated_hp_mask(cfg, state)).sum()) - used)
+    if used > cap and used - target <= budget and free_far >= used - target:
+        assert used2 == target, "must land on the low watermark"
+    # and the two_tier parameterization is the same controller, bit-for-bit
+    out_tv = tiering.pressure_tick(
+        cfg, state, cap_a, jnp.zeros((), bool), jnp.zeros((), jnp.int32),
+        budget=budget, slack=slack, tiers=tiers.two_tier(cfg))
+    assert_states_equal((out, engaged, pressure), out_tv)
