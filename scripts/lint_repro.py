@@ -1,0 +1,67 @@
+#!/usr/bin/env python
+"""Run the repo-specific AST lints (repro.analysis.lint) over src/repro/.
+
+Exit 0 iff there are no violations outside the tracked allowlist AND no
+stale (unused) allowlist entries. CI runs this in the ``lint`` job next to
+the invariant-ledger drift check; ``pytest -m smoke`` shares the entry
+point via tests/test_ci_smoke.py.
+
+Usage:
+    python scripts/lint_repro.py              # lint src/repro/
+    python scripts/lint_repro.py --list       # show the lint catalogue
+    python scripts/lint_repro.py --self-test  # prove each lint fires on
+                                              # its seeded violation fixture
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import tempfile
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis import lint  # noqa: E402
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true", help="list registered lints")
+    ap.add_argument(
+        "--self-test", action="store_true",
+        help="verify every lint trips on its seeded violation fixture")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for entry in lint.all_lints():
+            print(f"{entry.name}: {entry.description}")
+        return 0
+
+    if args.self_test:
+        with tempfile.TemporaryDirectory() as td:
+            failures = lint.self_test(Path(td))
+        for f in failures:
+            print(f"SELF-TEST FAIL {f}", file=sys.stderr)
+        print(f"lint self-test: {len(lint.all_lints())} lints, "
+              f"{len(failures)} silent")
+        return 1 if failures else 0
+
+    violations, unused = lint.run(ROOT)
+    for v in violations:
+        print(v.format(), file=sys.stderr)
+        if v.source_line:
+            print(f"    {v.source_line}", file=sys.stderr)
+    for e in unused:
+        print(
+            f"stale allowlist entry: ({e.lint}, {e.path}, {e.match!r}) "
+            f"matched nothing — remove it (reason was: {e.reason})",
+            file=sys.stderr)
+    n_files = len(lint.default_targets(ROOT))
+    print(f"linted {n_files} files with {len(lint.all_lints())} lints: "
+          f"{len(violations)} violations, {len(unused)} stale allowlist entries")
+    return 1 if (violations or unused) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

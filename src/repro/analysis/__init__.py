@@ -1,0 +1,13 @@
+"""Repo-specific static analysis (DESIGN.md §15): AST lints + allowlist."""
+from repro.analysis.lint import (  # noqa: F401
+    ALLOWLIST,
+    AllowlistEntry,
+    Lint,
+    Violation,
+    all_lints,
+    get_lint,
+    lint_names,
+    register_lint,
+    run,
+    self_test,
+)

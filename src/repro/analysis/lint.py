@@ -1,0 +1,576 @@
+"""Repo-specific AST lints (DESIGN.md §15).
+
+Each lint encodes one architectural rule the PRs fought for and the next
+PRs could silently regress:
+
+* ``REPRO-L001`` — no materialized ``[n_guests, n_windows, k]`` trace
+  arrays on the synth path (PR 5's whole point);
+* ``REPRO-L002`` — no string-``if`` policy/telemetry/workload/collector
+  dispatch outside the registries (PR 2 converted these);
+* ``REPRO-L003`` — no Python-level branching on traced values inside
+  ``lax.scan`` bodies (the §13 no-op discipline: idle arithmetic must be
+  the same arithmetic, not a branch);
+* ``REPRO-L004`` — no full-pool ``jnp.concatenate`` in ``core/`` (PR 1
+  replaced it with the predicated dual-pool gather);
+* ``REPRO-L005`` — no direct numpy calls on the engine hot path (scan
+  bodies and window functions must stay traceable).
+
+The lint registry mirrors the PR-2 registries (duplicates raise, unknown
+names raise listing the live set). Every lint carries a seeded violation
+*fixture* — a minimal source file that must trip it — so the self-test
+(``tests/test_lint.py``, ``scripts/lint_repro.py --self-test``) proves
+each lint actually fires. Deliberate exceptions go in :data:`ALLOWLIST`
+with a reason; unused allowlist entries are themselves an error (the list
+is tracked, not a dumping ground).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from pathlib import Path
+from typing import Callable, Iterable
+
+# --------------------------------------------------------------------------
+# violations, lint registry
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    lint: str
+    path: str  # repo-relative posix path
+    line: int
+    message: str
+    source_line: str = ""
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}: [{self.lint}] {self.message}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Lint:
+    """One registered lint: ``fn(tree, rel_path, lines) -> Iterable[Violation]``.
+
+    ``fixture`` is a minimal source snippet that MUST trip the lint when
+    written at ``fixture_path`` (repo-relative) — the self-test runs every
+    fixture and fails if its lint stays silent.
+    """
+
+    name: str
+    description: str
+    fn: Callable
+    fixture: str
+    fixture_path: str
+
+
+_LINTS: dict[str, Lint] = {}
+
+
+def register_lint(name: str, description: str, fixture: str, fixture_path: str):
+    """Decorator: register an AST lint. Duplicates raise."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in _LINTS:
+            raise ValueError(f"lint {name!r} already registered")
+        if not fixture.strip() or not fixture_path:
+            raise ValueError(f"lint {name!r} needs a violation fixture")
+        _LINTS[name] = Lint(name, description, fn, fixture, fixture_path)
+        return fn
+
+    return deco
+
+
+def get_lint(name: str) -> Lint:
+    try:
+        return _LINTS[name]
+    except KeyError:
+        raise ValueError(f"unknown lint {name!r} (have {lint_names()})") from None
+
+
+def lint_names() -> tuple[str, ...]:
+    return tuple(sorted(_LINTS))
+
+
+def all_lints() -> tuple[Lint, ...]:
+    return tuple(_LINTS[n] for n in lint_names())
+
+
+# --------------------------------------------------------------------------
+# allowlist: deliberate, reasoned exceptions
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AllowlistEntry:
+    """Suppresses violations of ``lint`` in ``path`` whose flagged source
+    line contains ``match``. ``reason`` is mandatory and human-facing."""
+
+    lint: str
+    path: str  # repo-relative posix path
+    match: str  # substring of the flagged source line
+    reason: str
+
+    def __post_init__(self):
+        if not self.reason.strip():
+            raise ValueError(
+                f"allowlist entry ({self.lint}, {self.path}) needs a reason")
+
+
+ALLOWLIST: tuple[AllowlistEntry, ...] = (
+    AllowlistEntry(
+        lint="REPRO-L004",
+        path="src/repro/core/address_space.py",
+        match="jnp.concatenate([near, far]",
+        reason="_flat_rows backs the host-side read_logical/write_logical "
+               "debug/data path, never the traced engine scan; the engine "
+               "hot path uses the predicated dual-pool gather instead "
+               "(consolidator, PR 1).",
+    ),
+    AllowlistEntry(
+        lint="REPRO-L002",
+        path="src/repro/core/engine.py",
+        match='"tco" in collect',
+        reason="static membership test on the jit-static collect tuple "
+               "gates an optional per-window metric; the collector itself "
+               "is registry-dispatched (run_collectors).",
+    ),
+    AllowlistEntry(
+        lint="REPRO-L002",
+        path="src/repro/core/sharding.py",
+        match='"tco" in collect',
+        reason="same jit-static collect gating as engine.py: membership "
+               "decides which extras ride the ownership-merge psum, not "
+               "which implementation runs (collectors stay registry-"
+               "dispatched).",
+    ),
+    AllowlistEntry(
+        lint="REPRO-L002",
+        path="src/repro/core/sharding.py",
+        match='"near_blocks" in collect',
+        reason="jit-static collect gating for the sharded near_blocks "
+               "exchange payload (PR 6); registry-dispatched collector "
+               "consumes the merged rows.",
+    ),
+    AllowlistEntry(
+        lint="REPRO-L002",
+        path="src/repro/core/sharding.py",
+        match='"snapshot" in collect',
+        reason="jit-static collect gating: the snapshot collector needs "
+               "gstats in the scan carry, so the carry layout is chosen "
+               "before tracing.",
+    ),
+    AllowlistEntry(
+        lint="REPRO-L005",
+        path="src/repro/core/engine.py",
+        match="np.concatenate([np.asarray(c[k])",
+        reason="_drive_chunks stitches per-chunk collected series on the "
+               "host AFTER the jitted scan returns — one transfer per "
+               "chunk is the designed device/host boundary (PR 3), not a "
+               "hot-path numpy detour.",
+    ),
+    AllowlistEntry(
+        lint="REPRO-L001",
+        path="src/repro/contracts/invariants.py",
+        match="tr.synth_generate(ts, gid=3)",
+        reason="INV-SYNTH-DETERMINISM must materialize the same synthesized "
+               "guest twice to assert bit-equality; the contract verifies "
+               "the synth path rather than being on it.",
+    ),
+)
+
+
+# --------------------------------------------------------------------------
+# AST helpers
+# --------------------------------------------------------------------------
+
+
+def _call_name(node: ast.Call) -> str:
+    """Dotted name of a call target: ``jnp.concatenate``, ``pack_traces``."""
+    parts = []
+    t = node.func
+    while isinstance(t, ast.Attribute):
+        parts.append(t.attr)
+        t = t.value
+    if isinstance(t, ast.Name):
+        parts.append(t.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _attrs_in(node: ast.AST) -> set[str]:
+    return {n.attr for n in ast.walk(node) if isinstance(n, ast.Attribute)}
+
+
+def _functions(tree: ast.AST):
+    """Every (fn_node, qualname_parts) in the module, nested included."""
+    out = []
+
+    def visit(node, stack):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.append((child, stack + [child.name]))
+                visit(child, stack + [child.name])
+            else:
+                visit(child, stack)
+
+    visit(tree, [])
+    return out
+
+
+def _src(lines: list[str], lineno: int) -> str:
+    return lines[lineno - 1].strip() if 0 < lineno <= len(lines) else ""
+
+
+def _v(name: str, rel: str, lines: list[str], node: ast.AST, msg: str) -> Violation:
+    return Violation(name, rel, node.lineno, msg, _src(lines, node.lineno))
+
+
+# --------------------------------------------------------------------------
+# REPRO-L001: no materialized trace arrays on the synth path
+# --------------------------------------------------------------------------
+_L001_BANNED_CALLS = {"guest_traces", "pack_traces", "synth_generate", "ArrayTrace"}
+_L001_ALLOC = {"zeros", "full", "empty", "ones"}
+
+_L001_FIXTURE = '''\
+import numpy as np
+from repro.core import engine
+
+
+def _run_chunk_synth(spec, state, widx):
+    # BAD: the synth path exists so this array never does
+    traces = engine.guest_traces(spec, n_windows=8, accesses_per_window=64)
+    buf = np.zeros((4, 8, 64), np.int32)
+    return traces, buf
+'''
+
+
+@register_lint(
+    "REPRO-L001",
+    "no materialized [n_guests, n_windows, k] trace arrays on the synth "
+    "path (functions named *synth*): no guest_traces/pack_traces/"
+    "synth_generate/ArrayTrace calls, no rank-3 array allocation",
+    _L001_FIXTURE,
+    "src/repro/core/engine.py",
+)
+def _lint_no_materialized_trace(tree, rel, lines) -> Iterable[Violation]:
+    if not rel.startswith("src/repro/"):
+        return []
+    out = []
+    for fn, stack in _functions(tree):
+        if not any("synth" in part.lower() for part in stack):
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            leaf = name.rsplit(".", 1)[-1]
+            if leaf in _L001_BANNED_CALLS:
+                out.append(_v(
+                    "REPRO-L001", rel, lines, node,
+                    f"{name}() inside synth-path function "
+                    f"{'.'.join(stack)} materializes a host trace array"))
+            elif leaf in _L001_ALLOC and name.split(".")[0] in ("np", "jnp", "numpy"):
+                shape = node.args[0] if node.args else None
+                if isinstance(shape, ast.Tuple) and len(shape.elts) >= 3:
+                    out.append(_v(
+                        "REPRO-L001", rel, lines, node,
+                        f"rank-{len(shape.elts)} {name}() allocation inside "
+                        f"synth-path function {'.'.join(stack)} — the synth "
+                        "path must stay O(n_local_guests * k) per window"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# REPRO-L002: no string-if dispatch outside the registries
+# --------------------------------------------------------------------------
+_L002_SUBJECTS = ("policy", "backend", "workload", "collect")
+
+_L002_FIXTURE = '''\
+def tick(cfg, state, policy):
+    # BAD: PR 2 turned exactly this into tiering.register_policy
+    if policy == "memtierd":
+        return state
+    elif policy == "autonuma":
+        return state
+    raise ValueError(policy)
+'''
+
+
+@register_lint(
+    "REPRO-L002",
+    "no string-compare policy/telemetry/workload/collector dispatch "
+    "outside the registries: register and look up by name instead",
+    _L002_FIXTURE,
+    "src/repro/core/tiering.py",
+)
+def _lint_no_string_dispatch(tree, rel, lines) -> Iterable[Violation]:
+    if not rel.startswith("src/repro/"):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Compare):
+            continue
+        sides = [node.left] + list(node.comparators)
+        subj = [
+            s for s in sides
+            if isinstance(s, ast.Name)
+            and any(t in s.id.lower() for t in _L002_SUBJECTS)
+        ]
+        strs = [
+            s for s in sides
+            if (isinstance(s, ast.Constant) and isinstance(s.value, str))
+            or (isinstance(s, (ast.Tuple, ast.List, ast.Set)) and s.elts and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, str)
+                for e in s.elts))
+        ]
+        if subj and strs:
+            out.append(_v(
+                "REPRO-L002", rel, lines, node,
+                f"string comparison against {subj[0].id!r} looks like "
+                "name dispatch — use the registries (§8/§12)"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# REPRO-L003: no Python-level branching on traced values in scan bodies
+# --------------------------------------------------------------------------
+_L003_FIXTURE = '''\
+import jax
+
+
+def _run_chunk(spec, state, chunk):
+    def body(st, acc):
+        # BAD: `acc` is traced inside the scan; Python `if` can't see it
+        if acc.sum() > 0:
+            st = st + 1
+        return st, acc
+
+    return jax.lax.scan(body, state, chunk)
+'''
+
+
+@register_lint(
+    "REPRO-L003",
+    "no Python-level if/while/assert on a scan body's traced arguments "
+    "(carry/xs): use lax.cond/jnp.where — idle arithmetic must be the "
+    "same arithmetic",
+    _L003_FIXTURE,
+    "src/repro/core/engine.py",
+)
+def _lint_no_traced_branch_in_scan(tree, rel, lines) -> Iterable[Violation]:
+    if not rel.startswith("src/repro/"):
+        return []
+    # map function name -> def node per enclosing scope, then find scan calls
+    out = []
+    for fn, stack in _functions(tree):
+        local_defs = {
+            child.name: child
+            for child in ast.walk(fn)
+            if isinstance(child, ast.FunctionDef)
+        }
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if _call_name(node).rsplit(".", 1)[-1] != "scan":
+                continue
+            if not node.args or not isinstance(node.args[0], ast.Name):
+                continue
+            body_fn = local_defs.get(node.args[0].id)
+            if body_fn is None:
+                continue
+            params = {a.arg for a in body_fn.args.args}
+            for stmt in ast.walk(body_fn):
+                if not isinstance(stmt, (ast.If, ast.While, ast.Assert)):
+                    continue
+                used = _names_in(stmt.test) & params
+                if used:
+                    out.append(_v(
+                        "REPRO-L003", rel, lines, stmt,
+                        f"Python {type(stmt).__name__.lower()} on traced "
+                        f"scan-body argument(s) {sorted(used)} in "
+                        f"{'.'.join(stack + [body_fn.name])}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# REPRO-L004: no full-pool concatenate in core/
+# --------------------------------------------------------------------------
+_L004_FIXTURE = '''\
+import jax.numpy as jnp
+
+
+def consolidate(cfg, state, batch):
+    near = state.near_pool.reshape(-1, cfg.base_elems)
+    far = state.far_pool.reshape(-1, cfg.base_elems)
+    # BAD: the seed's O(n_slots) copy PR 1 removed
+    rows = jnp.concatenate([near, far], axis=0)
+    return rows
+'''
+
+
+@register_lint(
+    "REPRO-L004",
+    "no full-pool jnp.concatenate in core/ (O(n_slots * hp_ratio) "
+    "materialization every call): use the predicated dual-pool gather",
+    _L004_FIXTURE,
+    "src/repro/core/consolidator.py",
+)
+def _lint_no_full_pool_concat(tree, rel, lines) -> Iterable[Violation]:
+    if "src/repro/core/" not in rel:
+        return []
+    out = []
+    for fn, stack in _functions(tree):
+        # one-pass taint: names assigned from expressions touching *_pool
+        tainted: set[str] = set()
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign):
+                refs = _names_in(stmt.value) | _attrs_in(stmt.value)
+                if any("pool" in r for r in refs) or (refs & tainted):
+                    for tgt in stmt.targets:
+                        if isinstance(tgt, ast.Name):
+                            tainted.add(tgt.id)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if _call_name(node) not in ("jnp.concatenate", "jnp.concat"):
+                continue
+            refs = set()
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                refs |= _names_in(arg) | _attrs_in(arg)
+            if any("pool" in r for r in refs) or (refs & tainted):
+                out.append(_v(
+                    "REPRO-L004", rel, lines, node,
+                    f"pool concatenate in core function {'.'.join(stack)} "
+                    "materializes the full slot space"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# REPRO-L005: no direct numpy on the engine hot path
+# --------------------------------------------------------------------------
+_L005_FILES = ("src/repro/core/engine.py", "src/repro/core/sharding.py")
+_L005_HOT = ("_window", "_churn_window", "_step_impl")
+
+_L005_FIXTURE = '''\
+import numpy as np
+
+
+def _window(spec, state, accesses):
+    # BAD: numpy executes at trace time on host data, breaking the jit
+    hist = np.bincount(accesses, minlength=spec.cfg.n_logical)
+    return state, hist
+'''
+
+
+@register_lint(
+    "REPRO-L005",
+    "no direct numpy calls inside the engine hot-path functions (_window/"
+    "_churn_window/_step_impl and scan chunk bodies): traced code must "
+    "stay jnp/lax",
+    _L005_FIXTURE,
+    "src/repro/core/engine.py",
+)
+def _lint_no_numpy_hot_path(tree, rel, lines) -> Iterable[Violation]:
+    if rel not in _L005_FILES:
+        return []
+    out = []
+    for fn, stack in _functions(tree):
+        hot = (
+            stack[0] in _L005_HOT
+            or "_chunk" in stack[0]
+            or any(part == "body" for part in stack)
+        )
+        if not hot:
+            continue
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node)
+            if name.split(".")[0] in ("np", "numpy"):
+                out.append(_v(
+                    "REPRO-L005", rel, lines, node,
+                    f"numpy call {name}() inside hot-path function "
+                    f"{'.'.join(stack)}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+
+def lint_file(path: Path, root: Path, lints=None) -> list[Violation]:
+    rel = path.relative_to(root).as_posix()
+    source = path.read_text()
+    try:
+        tree = ast.parse(source, filename=str(path))
+    except SyntaxError as e:
+        return [Violation("SYNTAX", rel, e.lineno or 0, str(e))]
+    lines = source.splitlines()
+    out: list[Violation] = []
+    for lint in lints or all_lints():
+        out.extend(lint.fn(tree, rel, lines))
+    return out
+
+
+def default_targets(root: Path) -> list[Path]:
+    """The linted set: everything under src/repro/."""
+    return sorted((root / "src" / "repro").rglob("*.py"))
+
+
+def apply_allowlist(
+    violations: list[Violation],
+    allowlist: tuple[AllowlistEntry, ...] = ALLOWLIST,
+) -> tuple[list[Violation], list[AllowlistEntry]]:
+    """Returns (kept violations, UNUSED allowlist entries). Both must be
+    empty for a clean run: stale allowlist entries are drift too."""
+    used: set[int] = set()
+    kept = []
+    for v in violations:
+        hit = None
+        for i, e in enumerate(allowlist):
+            if e.lint == v.lint and e.path == v.path and e.match in v.source_line:
+                hit = i
+                break
+        if hit is None:
+            kept.append(v)
+        else:
+            used.add(hit)
+    unused = [e for i, e in enumerate(allowlist) if i not in used]
+    return kept, unused
+
+
+def run(root: Path, files: list[Path] | None = None):
+    """Lint ``files`` (default: src/repro/**) against the allowlist.
+
+    Returns ``(violations, unused_allowlist_entries)``.
+    """
+    files = files if files is not None else default_targets(root)
+    violations: list[Violation] = []
+    for f in files:
+        violations.extend(lint_file(f, root))
+    return apply_allowlist(violations)
+
+
+def self_test(tmp_root: Path) -> list[str]:
+    """Write every lint's seeded violation fixture under ``tmp_root`` and
+    verify the lint fires on it. Returns a list of failure messages."""
+    failures = []
+    for lint in all_lints():
+        target = tmp_root / lint.fixture_path
+        target.parent.mkdir(parents=True, exist_ok=True)
+        target.write_text(lint.fixture)
+        hits = [
+            v for v in lint_file(target, tmp_root, lints=[lint])
+            if v.lint == lint.name
+        ]
+        if not hits:
+            failures.append(
+                f"{lint.name}: seeded violation fixture at "
+                f"{lint.fixture_path} did not trip the lint")
+        target.unlink()
+    return failures

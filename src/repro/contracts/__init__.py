@@ -1,0 +1,26 @@
+"""Invariant contract registry (DESIGN.md §15).
+
+Importing this package registers the builtin contracts (mirroring how
+``repro.core.tiering`` registers its builtin policies): the ledger
+generator, the test harness, and user code all see the same live set.
+"""
+from repro.contracts.registry import (
+    Contract,
+    all_contracts,
+    contract_names,
+    get_contract,
+    register_contract,
+)
+from repro.contracts.draws import ContractDraw, GuestDraw, build_engine
+from repro.contracts import invariants as _invariants  # noqa: F401  (registers)
+
+__all__ = [
+    "Contract",
+    "ContractDraw",
+    "GuestDraw",
+    "all_contracts",
+    "build_engine",
+    "contract_names",
+    "get_contract",
+    "register_contract",
+]

@@ -1,0 +1,372 @@
+"""The registered invariant contracts (DESIGN.md §15, ledger in
+docs/contracts/INVARIANTS.md).
+
+Eight contracts distilled from five PRs of equivalence pins: the four the
+DESIGN.md §10 ledger already named (churn no-op, crash reclaim, 2-tier
+special case, pressure no-overcommit) plus the four that until now lived
+only as bespoke test files (ownership merge, chunking invariance, synth
+determinism, arbitration tie-break). Each ``check_fn`` takes one
+:class:`~repro.contracts.draws.ContractDraw` and raises ``AssertionError``
+on violation; the harness in ``tests/test_contracts.py`` drives them under
+hypothesis over the shared strategies.
+
+Engine-level contracts keep their drawn geometry small (each distinct
+geometry is a fresh XLA compile) and run fewer hypothesis examples
+(``max_examples``); tick-level contracts are cheap and run more.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.contracts.draws import ContractDraw, build_engine, trace_source
+from repro.contracts.registry import register_contract
+
+
+# --------------------------------------------------------------------------
+# shared assertion helpers
+# --------------------------------------------------------------------------
+def assert_states_equal(a, b, msg: str = ""):
+    """Bit-for-bit equality of two pytrees (the §10 exactness discipline)."""
+    import jax
+
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb), f"{msg}: leaf count {len(la)} != {len(lb)}"
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=msg)
+
+
+def assert_series_equal(a: dict, b: dict, msg: str = ""):
+    assert set(a) == set(b), f"{msg}: keys {sorted(a)} != {sorted(b)}"
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"{msg}:{k}")
+
+
+# --------------------------------------------------------------------------
+# §9/§11 — ownership merge
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-OWNERSHIP-MERGE-EXACT", "§9/§11",
+    drivers=("run", "run_sharded", "run_sharded(host_sharded=True)"),
+    pins=(
+        "tests/test_engine_sharded.py::TestShardedSingleDevice",
+        "tests/test_host_sharding.py",
+        "scripts/ci_smoke_sharded.py",
+    ),
+    max_examples=3,
+)
+def check_ownership_merge_exact(draw: ContractDraw):
+    """Segment/slot-ownership psums reconstruct every array exactly:
+    ``run_sharded`` (full shard_map path, both host paths) is bit-identical
+    to ``run`` for any geometry/policy/gpac draw."""
+    from repro.core import engine, sharding
+
+    spec, s0 = build_engine(draw)
+    source = trace_source(draw, spec)
+    mesh = sharding.guest_mesh(1)  # full shard_map path on one device
+    ref_state, ref = engine.run(
+        spec, s0, source, policy=draw.policy, use_gpac=draw.use_gpac)
+    sh_state, sh = engine.run_sharded(
+        spec, s0, source, mesh=mesh, policy=draw.policy,
+        use_gpac=draw.use_gpac, host_sharded=draw.host_sharded)
+    assert_states_equal(ref_state, sh_state, "run_sharded state diverged")
+    assert_series_equal(ref, sh, "run_sharded series diverged")
+
+
+# --------------------------------------------------------------------------
+# §7/§9 — chunking invariance (replay path)
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-CHUNKING-INVARIANT", "§7/§9",
+    drivers=("run", "run_sharded", "run_churn"),
+    pins=(
+        "tests/test_engine_api.py::TestEquivalence",
+        "tests/test_engine_equivalence.py",
+    ),
+    max_examples=3,
+)
+def check_chunking_invariant(draw: ContractDraw):
+    """``windows_per_step`` is a pure batching knob: any chunking of the
+    window scan — including non-dividing strict sizes with a shorter
+    trailing chunk — yields the bit-identical final state and series."""
+    from repro.core import engine
+
+    spec, s0 = build_engine(draw)
+    traces = engine.guest_traces(
+        spec, n_windows=draw.n_windows,
+        accesses_per_window=draw.accesses_per_window)
+    ref_state, ref = engine.run(
+        spec, s0, traces, policy=draw.policy, use_gpac=draw.use_gpac)
+    ch_state, ch = engine.run(
+        spec, s0, traces, policy=draw.policy, use_gpac=draw.use_gpac,
+        windows_per_step=draw.windows_per_step, strict_wps=True)
+    assert_states_equal(ref_state, ch_state, "chunked state diverged")
+    assert_series_equal(ref, ch, "chunked series diverged")
+
+
+# --------------------------------------------------------------------------
+# §12 — on-device synthesis determinism
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-SYNTH-DETERMINISM", "§12",
+    drivers=("run", "run_sharded", "run_churn"),
+    pins=(
+        "tests/test_trace_source.py::TestSynthEngine",
+        "tests/test_trace_source.py::TestSynthDistributionalEquivalence",
+    ),
+    max_examples=2,
+)
+def check_synth_determinism(draw: ContractDraw):
+    """Counter-based synthesis depends only on ``(workload, seed, gid, w)``:
+    re-running and re-chunking a SynthTrace run is bit-identical, and the
+    host-side materializer is deterministic per spec."""
+    from repro.core import engine
+    from repro.data import traces as tr
+
+    spec, s0 = build_engine(draw)
+    synth = engine.SynthTrace(
+        n_windows=draw.n_windows,
+        accesses_per_window=draw.accesses_per_window)
+    a_state, a = engine.run(
+        spec, s0, synth, policy=draw.policy, use_gpac=draw.use_gpac)
+    b_state, b = engine.run(  # identical second run
+        spec, s0, synth, policy=draw.policy, use_gpac=draw.use_gpac)
+    assert_states_equal(a_state, b_state, "synth rerun diverged")
+    assert_series_equal(a, b, "synth rerun series diverged")
+    c_state, c = engine.run(  # any chunking re-derives identical windows
+        spec, s0, synth, policy=draw.policy, use_gpac=draw.use_gpac,
+        windows_per_step=draw.windows_per_step, strict_wps=True)
+    assert_states_equal(a_state, c_state, "synth chunking diverged")
+    assert_series_equal(a, c, "synth chunking series diverged")
+    g = draw.guests[draw.seed % len(draw.guests)]
+    ts = tr.TraceSpec(
+        workload=g.workload, n_logical=g.n_logical, hp_ratio=draw.hp_ratio,
+        n_windows=2, accesses_per_window=draw.accesses_per_window,
+        seed=g.seed)
+    np.testing.assert_array_equal(
+        tr.synth_generate(ts, gid=3), tr.synth_generate(ts, gid=3),
+        err_msg="synth_generate not deterministic per (workload, seed, gid)")
+
+
+# --------------------------------------------------------------------------
+# §11 — arbitration tie-break
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-ARBITRATION-TIEBREAK", "§11",
+    drivers=("run_sharded(host_sharded=True)",),
+    pins=("tests/test_host_partition_edges.py::TestArbitrationTies",),
+    max_examples=30,
+)
+def check_arbitration_tiebreak(draw: ContractDraw):
+    """Per-partition ``nominate`` + replicated ``rank_select`` reproduces
+    ``jax.lax.top_k`` over the full per-block score array bit-for-bit —
+    ties resolve to the lowest block id — for any partition layout,
+    including empty ranges and mass-tie score fields."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import tiering
+
+    rng = np.random.default_rng(draw.seed)
+    n_blocks = int(rng.integers(6, 40))
+    b = min(draw.budget, n_blocks)
+    # small value range -> heavy cross-partition tie pressure
+    val = rng.integers(0, 4, n_blocks).astype(np.int32)
+    mask = rng.random(n_blocks) < 0.7
+    parts = min(draw.n_guests + 1, n_blocks)
+    cuts = np.linspace(0, n_blocks, parts + 1).astype(int)
+    h_loc = max(1, int(max(hi - lo for lo, hi in zip(cuts[:-1], cuts[1:]))))
+
+    noms = []
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        hp_ids = np.full(h_loc, -1, np.int32)
+        hp_ids[: hi - lo] = np.arange(lo, hi, dtype=np.int32)
+        take = np.clip(hp_ids, 0, None)
+        noms.append(tiering.nominate(
+            jnp.asarray(np.where(hp_ids >= 0, mask[take], False)),
+            jnp.asarray(np.where(hp_ids >= 0, val[take], 0).astype(np.int32)),
+            b,
+            hp_ids=jnp.asarray(hp_ids),
+            slot=jnp.asarray(take),
+            alloc=jnp.asarray(np.ones(h_loc, np.int32)),
+            cnt=jnp.asarray(np.where(hp_ids >= 0, val[take], 0).astype(np.int32)),
+        ))
+    merged = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *noms)
+    picked = tiering.rank_select(
+        {f: x.reshape(-1) for f, x in merged.items()}, b)
+
+    full = jnp.where(jnp.asarray(mask), jnp.asarray(val), tiering.NEG)
+    ref_v, ref_i = jax.lax.top_k(full, b)
+    ref_ids = np.where(np.asarray(ref_v) > int(tiering.NEG),
+                       np.asarray(ref_i), -1)
+    ref_vals = np.where(ref_ids >= 0, np.asarray(ref_v), int(tiering.NEG))
+    np.testing.assert_array_equal(
+        np.asarray(picked["id"]), ref_ids,
+        err_msg="rank_select ids diverge from full-array top_k tie-break")
+    np.testing.assert_array_equal(
+        np.asarray(picked["val"]), ref_vals,
+        err_msg="rank_select vals diverge from full-array top_k")
+
+
+# --------------------------------------------------------------------------
+# §13 — churn no-op exactness
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-CHURN-NOOP-EXACT", "§13",
+    drivers=("run", "run_churn"),
+    pins=(
+        "tests/test_churn.py::TestNoFaultExact",
+        "scripts/ci_smoke_churn.py",
+    ),
+    max_examples=3,
+)
+def check_churn_noop_exact(draw: ContractDraw):
+    """With no faults scheduled the §13 stepper is a provable no-op:
+    ``run_churn`` is bit-identical to ``run`` in the final state and every
+    collector series, with all lanes active and zero pressure."""
+    from repro.core import engine
+
+    spec, s0 = build_engine(draw)
+    source = trace_source(draw, spec)
+    ref_state, ref = engine.run(
+        spec, s0, source, policy=draw.policy, use_gpac=draw.use_gpac)
+    cs, se = engine.run_churn(
+        spec, engine.init_churn(spec), source, policy=draw.policy,
+        use_gpac=draw.use_gpac)
+    assert_states_equal(ref_state, cs.state, "idle churn state diverged")
+    assert_series_equal(
+        ref, {k: v for k, v in se.items() if k not in engine._CHURN_SERIES},
+        "idle churn series diverged")
+    assert np.asarray(se["active"]).all(), "idle churn deactivated a lane"
+    np.testing.assert_array_equal(
+        se["pressure"], 0, err_msg="idle churn reported pressure")
+
+
+# --------------------------------------------------------------------------
+# §13 — crash reclaim completeness
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-CRASH-RECLAIM-COMPLETE", "§13",
+    drivers=("run_churn",),
+    pins=(
+        "tests/test_churn.py::TestCrashReclaim",
+        "scripts/check_bench_regression.py",
+    ),
+    max_examples=3,
+)
+def check_crash_reclaim_complete(draw: ContractDraw):
+    """Within the window a guest crashes its whole GPA segment is FREE with
+    no allocated huge pages, its near blocks return to the pool (the crash
+    window already reports zero), and the block table stays a permutation
+    with ``slot_owner`` its inverse."""
+    from repro.core import engine, faults
+    from repro.core.types import FREE, allocated_hp_mask
+
+    spec, s0 = build_engine(draw)
+    victim = draw.seed % draw.n_guests
+    crash_w = draw.n_windows // 2
+    sched = faults.FaultSchedule(draw.n_guests).crash(crash_w, victim)
+    cs, se = engine.run_churn(
+        spec, engine.init_churn(spec), trace_source(draw, spec),
+        faults=sched, policy=draw.policy, use_gpac=draw.use_gpac)
+    blocks = np.asarray(se["near_blocks"])
+    assert (blocks[crash_w:, victim] == 0).all(), (
+        "crashed guest still holds near blocks after its crash window")
+    hp_lo, hp_hi = spec.hp_range(victim)
+    r = spec.cfg.hp_ratio
+    rmap = np.asarray(cs.state.rmap)
+    assert (rmap[hp_lo * r: hp_hi * r] == int(FREE)).all(), (
+        "crashed guest's GPA segment is not fully FREE")
+    alloc = np.asarray(allocated_hp_mask(spec.cfg, cs.state))
+    assert not alloc[hp_lo:hp_hi].any(), (
+        "allocated huge pages orphaned in the crashed guest's segment")
+    bt = np.asarray(cs.state.block_table)
+    assert len(np.unique(bt)) == bt.size, "block table lost permutation"
+    so = np.asarray(cs.state.slot_owner)
+    np.testing.assert_array_equal(
+        so[bt], np.arange(bt.size),
+        err_msg="slot_owner is no longer the block table's inverse")
+
+
+# --------------------------------------------------------------------------
+# §14 — 2-tier special case of the flow generalization
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-TIER-2SPECIALCASE-EXACT", "§14",
+    drivers=("run", "run_sharded", "run_sharded(host_sharded=True)",
+             "run_churn"),
+    pins=(
+        "tests/test_tiers.py::TestTwoTierSpecialCase",
+        "tests/test_tiers_properties.py::test_inv_tier_2specialcase_exact",
+        "scripts/ci_smoke_tiers.py",
+    ),
+    max_examples=20,
+)
+def check_tier_2specialcase_exact(draw: ContractDraw):
+    """Every legacy policy tick equals its ``two_tier`` flow
+    parameterization bit-for-bit for any config/telemetry: the extra
+    tier-range predicates are tautologies on ``(0, n_near, n_slots)``."""
+    import jax.numpy as jnp
+
+    from repro.core import address_space as asp
+    from repro.core import init_state, start_all_far, tiering, tiers
+
+    spec, _ = build_engine(draw)
+    cfg = spec.cfg
+    rng = np.random.default_rng(draw.seed)
+    state = start_all_far(cfg, init_state(cfg))
+    ids = jnp.asarray(rng.integers(0, cfg.n_logical, size=64), jnp.int32)
+    state = asp.record_accesses(cfg, state, ids)
+    legacy = tiering.tick(cfg, state, draw.policy, budget=draw.budget)
+    flow = tiering.tick(cfg, state, draw.policy, budget=draw.budget,
+                        tiers=tiers.two_tier(cfg))
+    assert_states_equal(legacy, flow, f"{draw.policy} two_tier flow diverged")
+
+
+# --------------------------------------------------------------------------
+# §13/§14 — pressure controller bounds
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-PRESSURE-NO-OVERCOMMIT", "§13/§14",
+    drivers=("run_churn",),
+    pins=("tests/test_tiers_properties.py::test_inv_pressure_no_overcommit",),
+    max_examples=20,
+)
+def check_pressure_no_overcommit(draw: ContractDraw):
+    """The pressure controller never promotes, demotes at most ``budget``
+    blocks, reports ``engaged == (usage > cap)``, and lands exactly on the
+    low watermark whenever enough cold candidates, free far slots and
+    budget exist."""
+    import jax.numpy as jnp
+
+    from repro.core import address_space as asp
+    from repro.core import init_state, start_all_far, tiering
+    from repro.core.types import allocated_hp_mask
+
+    spec, _ = build_engine(draw)
+    cfg = spec.cfg
+    rng = np.random.default_rng(draw.seed)
+    state = start_all_far(cfg, init_state(cfg))
+    ids = jnp.asarray(rng.integers(0, cfg.n_logical, size=64), jnp.int32)
+    state = asp.record_accesses(cfg, state, ids)
+    state = tiering.tick(cfg, state, "memtierd")  # promote some blocks near
+
+    def near_used(s):
+        alloc = np.asarray(allocated_hp_mask(cfg, s))
+        return int((alloc & (np.asarray(s.block_table) < cfg.n_near)).sum())
+
+    used = near_used(state)
+    out, engaged, _ = tiering.pressure_tick(
+        cfg, state, jnp.asarray(draw.cap, jnp.int32), jnp.zeros((), bool),
+        jnp.zeros((), jnp.int32), budget=draw.budget, slack=draw.slack)
+    used2 = near_used(out)
+    bt = np.asarray(out.block_table)
+    assert sorted(bt) == list(range(cfg.n_slots)), "lost slot permutation"
+    assert bool(engaged) == (used > draw.cap), "engaged != (usage > cap)"
+    assert used2 <= used, "pressure tick promoted"
+    assert used - used2 <= draw.budget, "demoted more than the budget"
+    target = max(draw.cap - draw.slack, 0)
+    free_far = (cfg.n_slots - cfg.n_near) - (
+        int(np.asarray(allocated_hp_mask(cfg, state)).sum()) - used)
+    if used > draw.cap and used - target <= draw.budget \
+            and free_far >= used - target:
+        assert used2 == target, "did not land on the low watermark"

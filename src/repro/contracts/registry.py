@@ -1,0 +1,122 @@
+"""Named invariant contracts (DESIGN.md §15).
+
+A *contract* is one of the repo's bit-for-bit / safety invariants as a
+first-class registered object: a stable ``INV-*`` name, the DESIGN.md
+section that states it, the drivers it covers, and an executable
+``check_fn`` that raises ``AssertionError`` on violation for any concrete
+parameter draw. The registry mirrors the PR-2 policy/telemetry/collector
+registries: duplicates raise, unknown names raise listing the live set.
+
+The generic harness in ``tests/test_contracts.py`` runs every registered
+contract's ``check_fn`` under hypothesis over the shared strategies in
+``tests/strategies.py`` (``pytest -m contracts``), and
+``scripts/gen_invariant_ledger.py`` renders the registry into the
+drift-checked ledger ``docs/contracts/INVARIANTS.md`` — so a new
+equivalence pin is one ``register_contract`` call, not a bespoke test
+file.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable
+
+_NAME_RE = re.compile(r"^INV-[A-Z0-9]+(?:-[A-Z0-9]+)+$")
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """One named invariant: where it is stated, what it covers, how it is
+    checked.
+
+    ``check_fn(draw)`` takes a :class:`repro.contracts.draws.ContractDraw`
+    (concrete geometry/policy/seed parameters — hypothesis draws them in
+    the test harness) and raises ``AssertionError`` on violation.
+    ``pins`` are the bespoke tier-1 tests/smokes that also enforce the
+    invariant (the ledger lists them next to the property harness).
+    ``max_examples`` is the per-contract hypothesis budget: engine-level
+    contracts recompile per drawn geometry, so they run fewer examples
+    than tick-level ones.
+    """
+
+    name: str
+    design_section: str
+    drivers: tuple[str, ...]
+    check_fn: Callable
+    description: str
+    pins: tuple[str, ...] = ()
+    max_examples: int = 10
+
+    @property
+    def harness_id(self) -> str:
+        """The generated property-test node for this contract."""
+        return f"tests/test_contracts.py::test_contract_property[{self.name}]"
+
+
+_CONTRACTS: dict[str, Contract] = {}
+
+
+def register_contract(
+    name: str,
+    design_section: str,
+    drivers: tuple[str, ...],
+    check_fn: Callable | None = None,
+    *,
+    description: str = "",
+    pins: tuple[str, ...] = (),
+    max_examples: int = 10,
+):
+    """Register an invariant contract; usable as a decorator::
+
+        @register_contract("INV-MY-PIN", "§9", drivers=("run",))
+        def check_my_pin(draw): ...
+
+    Names must match ``INV-[A-Z0-9-]+`` (they are cross-checked against
+    DESIGN.md by the ledger generator). Duplicates raise. The description
+    defaults to the check_fn's first docstring line.
+    """
+    if check_fn is None:
+        return lambda f: register_contract(
+            name, design_section, drivers, f,
+            description=description, pins=pins, max_examples=max_examples,
+        )
+    if not _NAME_RE.match(name):
+        raise ValueError(
+            f"contract name {name!r} must match {_NAME_RE.pattern}"
+        )
+    if name in _CONTRACTS:
+        raise ValueError(f"contract {name!r} already registered")
+    if not drivers:
+        raise ValueError(f"contract {name!r} must name the drivers it covers")
+    doc_lines = (check_fn.__doc__ or "").strip().splitlines()
+    desc = description or (doc_lines[0] if doc_lines else "")
+    if not desc:
+        raise ValueError(f"contract {name!r} needs a description or docstring")
+    _CONTRACTS[name] = Contract(
+        name=name,
+        design_section=design_section,
+        drivers=tuple(drivers),
+        check_fn=check_fn,
+        description=desc,
+        pins=tuple(pins),
+        max_examples=max_examples,
+    )
+    return check_fn
+
+
+def get_contract(name: str) -> Contract:
+    try:
+        return _CONTRACTS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown contract {name!r} (have {contract_names()})"
+        ) from None
+
+
+def contract_names() -> tuple[str, ...]:
+    """Names of all registered contracts, sorted for stable ledgers."""
+    return tuple(sorted(_CONTRACTS))
+
+
+def all_contracts() -> tuple[Contract, ...]:
+    return tuple(_CONTRACTS[n] for n in contract_names())

@@ -1,0 +1,98 @@
+"""Shared hypothesis strategies for the property suites (DESIGN.md §15).
+
+One canonical definition of "random GPAC geometry" serves three suites:
+``tests/test_core_invariants.py`` (op sequences over a raw GpacConfig),
+``tests/test_tiers_properties.py`` (tick-level tier invariants) and the
+contract harness ``tests/test_contracts.py`` (full ContractDraw bundles).
+Before this module each suite drew its own slightly different geometry, so
+a pin could pass in one suite's corner of the space and fail in another's.
+
+hypothesis is a hard CI dependency (requirements-ci.txt). The ONE gate
+below replaces the per-suite ``importorskip`` guards the property modules
+used to carry: containers without hypothesis skip every suite that imports
+this module (the contract harness separately falls back to the fixed
+smoke draws in ``repro.contracts.draws.fallback_draws`` so each contract
+still runs once in tier-1 there).
+"""
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+from hypothesis import strategies as st
+
+from repro.core import GpacConfig, tiering
+from repro.contracts.draws import ContractDraw, GuestDraw
+
+WORKLOADS = ("redis", "masim", "liblinear", "hash")
+
+
+def policies():
+    """Every registered tier policy (registry-driven, never hand-listed)."""
+    return st.sampled_from(tuple(tiering.POLICIES))
+
+
+@st.composite
+def gpac_cfg(draw, min_hp=4, max_hp=12, near_slack=1):
+    """A random small GpacConfig: ragged logical sizes, any CL, any split.
+
+    ``near_slack`` keeps at least that many huge-page slots in the far tier
+    (the tier suites need a non-empty far pool to demote into).
+    """
+    hp_ratio = draw(st.sampled_from([4, 8, 16]))
+    n_hp = draw(st.integers(min_hp, max_hp))
+    n_logical = draw(st.integers(hp_ratio, (n_hp - 2) * hp_ratio))
+    n_near = draw(st.integers(1, n_hp - near_slack))
+    cl = draw(st.integers(1, hp_ratio))
+    return GpacConfig(
+        n_logical=n_logical, hp_ratio=hp_ratio, n_gpa_hp=n_hp, n_near=n_near,
+        base_elems=2, cl=cl,
+    )
+
+
+@st.composite
+def tier_cfg(draw):
+    """(cfg, seed, policy) for the tick-level tier properties."""
+    cfg = draw(gpac_cfg(min_hp=6, max_hp=14, near_slack=2))
+    seed = draw(st.integers(0, 7))
+    policy = draw(policies())
+    return cfg, seed, policy
+
+
+@st.composite
+def guest_draws(draw, hp_ratio):
+    """One guest's geometry: ragged size, optional per-guest CL override."""
+    n_logical = draw(st.integers(hp_ratio, 4 * hp_ratio))
+    cl = draw(st.one_of(st.none(), st.integers(1, hp_ratio)))
+    gpa_slack = draw(st.sampled_from([0.25, 0.5]))
+    workload = draw(st.sampled_from(WORKLOADS))
+    seed = draw(st.integers(0, 5))
+    return GuestDraw(
+        n_logical=n_logical, cl=cl, gpa_slack=gpa_slack,
+        workload=workload, seed=seed,
+    )
+
+
+@st.composite
+def contract_draws(draw):
+    """The full contract parameter space (kept small: every distinct
+    geometry is a fresh XLA compile for the engine-level contracts)."""
+    hp_ratio = draw(st.sampled_from([4, 8]))
+    n_guests = draw(st.integers(1, 3))
+    guests = tuple(draw(guest_draws(hp_ratio)) for _ in range(n_guests))
+    n_windows = draw(st.integers(3, 5))
+    return ContractDraw(
+        guests=guests,
+        hp_ratio=hp_ratio,
+        near_fraction=draw(st.sampled_from([0.25, 0.5])),
+        host_cl=draw(st.integers(1, hp_ratio)),
+        policy=draw(policies()),
+        use_gpac=draw(st.booleans()),
+        synth=draw(st.booleans()),
+        n_windows=n_windows,
+        accesses_per_window=draw(st.integers(8, 32)),
+        windows_per_step=draw(st.integers(2, n_windows)),  # incl. non-dividing
+        host_sharded=draw(st.booleans()),
+        cap=draw(st.integers(0, 6)),
+        budget=draw(st.integers(1, 8)),
+        slack=draw(st.integers(0, 2)),
+        seed=draw(st.integers(0, 1023)),
+    )

@@ -1,0 +1,127 @@
+"""Generic harness for the invariant-contract registry (DESIGN.md §15).
+
+Every contract registered in ``repro.contracts`` gets one parametrized
+hypothesis property test over the shared :mod:`strategies` draws — adding
+a contract to the registry adds its test here with zero new test code.
+The registry self-tests pin the PR-2 idiom (duplicates raise, unknown
+names list the live set) and the ledger wiring (harness ids resolve to
+these very nodes, pins point at files that exist).
+
+Run with ``pytest -m contracts`` — also part of plain tier-1 collection.
+hypothesis is a hard CI dep; without it (minimal local containers) every
+contract still runs once per fixed smoke draw instead of skipping.
+"""
+import pytest
+
+try:  # central gate lives in strategies.py; see fallback_draws below
+    from hypothesis import HealthCheck, given, settings
+    import strategies
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    strategies = None
+
+from repro.contracts import (
+    all_contracts,
+    contract_names,
+    get_contract,
+)
+from repro.contracts import registry as creg
+from repro.contracts.draws import fallback_draws
+
+pytestmark = pytest.mark.contracts
+
+EXPECTED = (
+    "INV-ARBITRATION-TIEBREAK",
+    "INV-CHUNKING-INVARIANT",
+    "INV-CHURN-NOOP-EXACT",
+    "INV-CRASH-RECLAIM-COMPLETE",
+    "INV-OWNERSHIP-MERGE-EXACT",
+    "INV-PRESSURE-NO-OVERCOMMIT",
+    "INV-SYNTH-DETERMINISM",
+    "INV-TIER-2SPECIALCASE-EXACT",
+)
+
+
+# --------------------------------------------------------------------------
+# the generic property harness: one node per registered contract
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", contract_names())
+def test_contract_property(name, request):
+    c = get_contract(name)
+    # the ledger's harness_id must resolve to this very node
+    assert request.node.nodeid.endswith(f"test_contract_property[{name}]")
+
+    if strategies is None:  # no hypothesis: run the fixed smoke draws
+        for draw in fallback_draws():
+            c.check_fn(draw)
+        return
+
+    @given(strategies.contract_draws())
+    @settings(
+        max_examples=c.max_examples,
+        deadline=None,
+        derandomize=True,  # CI-stable: same draws every run
+        suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    )
+    def run_property(draw):
+        c.check_fn(draw)
+
+    run_property()
+
+
+# --------------------------------------------------------------------------
+# registry self-tests (the PR-2 idiom, §8)
+# --------------------------------------------------------------------------
+class TestRegistry:
+    def test_expected_contracts_registered(self):
+        assert contract_names() == EXPECTED
+
+    def test_duplicate_registration_raises(self, monkeypatch):
+        monkeypatch.setattr(creg, "_CONTRACTS", dict(creg._CONTRACTS))
+        creg.register_contract(
+            "INV-TEST-DUP", "§0", ("run",), lambda d: None, description="x")
+        with pytest.raises(ValueError, match="already registered"):
+            creg.register_contract(
+                "INV-TEST-DUP", "§0", ("run",), lambda d: None, description="x")
+
+    def test_unknown_contract_lists_live_set(self):
+        with pytest.raises(ValueError, match="INV-CHURN-NOOP-EXACT"):
+            get_contract("INV-NO-SUCH-THING")
+
+    def test_malformed_name_raises(self, monkeypatch):
+        monkeypatch.setattr(creg, "_CONTRACTS", dict(creg._CONTRACTS))
+        for bad in ("inv-lower-case", "INV-", "CHURN-NOOP", "INV-ONEPART"):
+            with pytest.raises(ValueError, match="must match"):
+                creg.register_contract(
+                    bad, "§0", ("run",), lambda d: None, description="x")
+
+    def test_empty_drivers_raise(self, monkeypatch):
+        monkeypatch.setattr(creg, "_CONTRACTS", dict(creg._CONTRACTS))
+        with pytest.raises(ValueError, match="drivers"):
+            creg.register_contract(
+                "INV-TEST-NODRIVER", "§0", (), lambda d: None, description="x")
+
+    def test_description_required(self, monkeypatch):
+        monkeypatch.setattr(creg, "_CONTRACTS", dict(creg._CONTRACTS))
+        def undocumented(d):
+            pass
+        with pytest.raises(ValueError, match="description"):
+            creg.register_contract(
+                "INV-TEST-NODESC", "§0", ("run",), undocumented)
+
+    def test_decorator_form_registers_and_returns_fn(self, monkeypatch):
+        monkeypatch.setattr(creg, "_CONTRACTS", dict(creg._CONTRACTS))
+
+        @creg.register_contract("INV-TEST-DECOR", "§0", ("run",))
+        def check_something(draw):
+            """A docstring description."""
+
+        assert creg.get_contract("INV-TEST-DECOR").check_fn is check_something
+        assert (creg.get_contract("INV-TEST-DECOR").description
+                == "A docstring description.")
+
+    def test_ledger_references_exist(self, request):
+        root = request.config.rootpath
+        for c in all_contracts():
+            for node in (c.harness_id, *c.pins):
+                rel = node.split("::", 1)[0]
+                assert (root / rel).exists(), f"{c.name}: {node} dangling"

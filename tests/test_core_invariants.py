@@ -13,9 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-# Gate the optional property-testing dep: containers without hypothesis skip
-# this module instead of failing tier-1 at collection time.
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import strategies  # central hypothesis gate + shared geometry draws
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -269,36 +267,30 @@ class TestGpacEndToEnd:
 # ---------------------------------------------------------------------------
 @st.composite
 def cfg_and_ops(draw):
-    hp_ratio = draw(st.sampled_from([4, 8, 16]))
-    n_hp = draw(st.integers(4, 12))
-    n_logical = draw(st.integers(hp_ratio, (n_hp - 2) * hp_ratio))
-    n_near = draw(st.integers(1, n_hp - 1))
-    cl = draw(st.integers(1, hp_ratio))
-    cfg = GpacConfig(
-        n_logical=n_logical, hp_ratio=hp_ratio, n_gpa_hp=n_hp, n_near=n_near,
-        base_elems=2, cl=cl,
-    )
+    cfg = draw(strategies.gpac_cfg())  # shared geometry (DESIGN.md §15)
     n_ops = draw(st.integers(1, 5))
     ops = []
     for _ in range(n_ops):
         kind = draw(st.sampled_from(["access", "consolidate", "tier", "window"]))
         if kind == "access":
             ids = draw(
-                st.lists(st.integers(-2, n_logical + 2), min_size=1, max_size=16)
+                st.lists(
+                    st.integers(-2, cfg.n_logical + 2), min_size=1, max_size=16
+                )
             )
             ops.append(("access", ids))
         elif kind == "consolidate":
             ids = draw(
                 st.lists(
-                    st.integers(0, n_logical - 1),
+                    st.integers(0, cfg.n_logical - 1),
                     min_size=1,
-                    max_size=hp_ratio,
+                    max_size=cfg.hp_ratio,
                     unique=True,
                 )
             )
             ops.append(("consolidate", ids))
         elif kind == "tier":
-            ops.append(("tier", draw(st.sampled_from(tiering.POLICIES))))
+            ops.append(("tier", draw(strategies.policies())))
         else:
             ops.append(("window", None))
     return cfg, ops

@@ -1,0 +1,87 @@
+"""Self-tests for the repo-specific AST lints (DESIGN.md §15).
+
+Two halves: (1) every registered lint must fire on its seeded violation
+fixture — a lint that silently stops matching is dead weight; (2) the real
+repo must be clean under the full lint set with no stale allowlist
+entries, which is the same gate ``scripts/lint_repro.py`` gives CI.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+
+# --------------------------------------------------------------------------
+# each lint catches its seeded fixture
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("name", lint.lint_names())
+def test_lint_fires_on_its_fixture(name, tmp_path):
+    entry = lint.get_lint(name)
+    target = tmp_path / entry.fixture_path
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(entry.fixture)
+    violations = lint.lint_file(target, tmp_path, lints=[entry])
+    assert any(v.lint == name for v in violations), (
+        f"{name} went silent on its own fixture")
+    # and every violation self-locates: real line, real source text
+    for v in violations:
+        assert v.line > 0 and v.source_line.strip()
+        assert name in v.format()
+
+
+def test_self_test_driver_passes(tmp_path):
+    assert lint.self_test(tmp_path) == []
+
+
+# --------------------------------------------------------------------------
+# the repo itself is clean (the day-one sweep stays done)
+# --------------------------------------------------------------------------
+def test_repo_is_lint_clean():
+    violations, unused = lint.run(REPO_ROOT)
+    assert violations == [], "\n".join(v.format() for v in violations)
+    assert unused == [], (
+        "stale allowlist entries: "
+        + ", ".join(f"({e.lint}, {e.path}, {e.match!r})" for e in unused))
+
+
+def test_allowlist_entries_all_have_reasons():
+    for e in lint.ALLOWLIST:
+        assert e.reason.strip(), f"({e.lint}, {e.path}) missing reason"
+    with pytest.raises(ValueError, match="reason"):
+        lint.AllowlistEntry(lint="REPRO-L001", path="x.py", match="y", reason=" ")
+
+
+# --------------------------------------------------------------------------
+# lint registry follows the PR-2 idiom
+# --------------------------------------------------------------------------
+class TestLintRegistry:
+    def test_catalogue(self):
+        assert lint.lint_names() == (
+            "REPRO-L001", "REPRO-L002", "REPRO-L003", "REPRO-L004",
+            "REPRO-L005",
+        )
+
+    def test_duplicate_registration_raises(self, monkeypatch):
+        monkeypatch.setattr(lint, "_LINTS", dict(lint._LINTS))
+        with pytest.raises(ValueError, match="already registered"):
+            @lint.register_lint(
+                "REPRO-L001", "dup", fixture="x = 1\n",
+                fixture_path="src/repro/data/f.py")
+            def fn(tree, rel, lines):
+                return []
+
+    def test_unknown_lint_lists_live_set(self):
+        with pytest.raises(ValueError, match="REPRO-L001"):
+            lint.get_lint("REPRO-L999")
+
+    def test_fixture_required(self, monkeypatch):
+        monkeypatch.setattr(lint, "_LINTS", dict(lint._LINTS))
+        with pytest.raises(ValueError, match="fixture"):
+            @lint.register_lint(
+                "REPRO-L900", "no fixture", fixture="",
+                fixture_path="src/repro/data/f.py")
+            def fn(tree, rel, lines):
+                return []

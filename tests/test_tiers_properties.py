@@ -6,19 +6,21 @@
     its budget, never promotes, and lands exactly on the low watermark when
     candidates and budget allow.
 
-Split from test_tiers.py so containers without hypothesis skip only these
-(same gate as test_core_invariants.py).
+Split from test_tiers.py so containers without hypothesis skip only these.
+Geometry comes from the shared draws in tests/strategies.py, which also
+carries the single hypothesis gate (hard dep in CI); both invariants are
+additionally registered contracts (docs/contracts/INVARIANTS.md).
 """
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+import strategies  # central hypothesis gate + shared geometry draws
 from hypothesis import given, settings, strategies as st
+from strategies import tier_cfg
 
 from repro.core import (
-    GpacConfig,
     address_space as asp,
     init_state,
     start_all_far,
@@ -45,21 +47,6 @@ def check_permutation(cfg, state):
     so = np.asarray(state.slot_owner)
     assert sorted(bt) == list(range(cfg.n_slots)), "block_table not a permutation"
     assert (so[bt] == np.arange(cfg.n_gpa_hp)).all(), "slot_owner∘block_table != id"
-
-
-@st.composite
-def tier_cfg(draw):
-    hp_ratio = draw(st.sampled_from([4, 8, 16]))
-    n_hp = draw(st.integers(6, 14))
-    n_logical = draw(st.integers(hp_ratio, (n_hp - 2) * hp_ratio))
-    n_near = draw(st.integers(1, n_hp - 2))
-    cfg = GpacConfig(
-        n_logical=n_logical, hp_ratio=hp_ratio, n_gpa_hp=n_hp, n_near=n_near,
-        base_elems=2, cl=draw(st.integers(1, hp_ratio)),
-    )
-    seed = draw(st.integers(0, 7))
-    policy = draw(st.sampled_from(tuple(tiering.POLICIES)))
-    return cfg, seed, policy
 
 
 @given(tier_cfg())
