@@ -143,6 +143,13 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
     def run_synth(mg, state, t):
         return engine.run_series(spec, state, synth)
 
+    # Pallas hot-path kernels (DESIGN.md §16), interpret mode on CPU: timed
+    # on the smallest grid row only (interpretation is orders of magnitude
+    # slower than compiled XLA and the ratio is informational -- the
+    # bit-exactness pin lives in INV-KERNEL-BACKEND-EXACT, not here)
+    def run_pallas(mg, state, t):
+        return engine.run_series(spec, state, t, kernel_backend="pallas")
+
     case = dict(
         n_guests=n_guests, logical_per_guest=logical_per_guest,
         n_logical=n_guests * logical_per_guest, n_windows=n_windows,
@@ -157,6 +164,7 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
         ("reference", simulate.run_multi_guest_reference),
         ("engine", run_engine),
         ("synth", run_synth),
+        ("pallas", run_pallas),
     ]
     if mesh is not None:
         runners.append(("engine_sharded", run_sharded))
@@ -177,6 +185,10 @@ def _finalize_case(case: dict) -> None:
     (in one process, or merged from the per-runner worker subprocesses)."""
     case["speedup"] = case["reference_s"] / case["engine_s"]
     case["synth_vs_engine"] = case["engine_s"] / case["synth_s"]
+    if "pallas_s" in case:
+        # > 1 means the pallas-interpret path cost that much more than the
+        # compiled XLA engine (expected on CPU; informational, never gated)
+        case["pallas_vs_engine"] = case["pallas_s"] / case["engine_s"]
     if "engine_sharded_s" in case:
         # > 1 means the sharded driver beat the single-device engine
         case["sharded_speedup"] = case["engine_s"] / case["engine_sharded_s"]
@@ -338,7 +350,11 @@ def run() -> dict:
     cases = []
     for i, (n_guests, logical_per_guest, n_windows) in enumerate(GRID):
         case: dict = {}
-        for runner in runner_names:
+        # pallas-interpret is timed on the smallest row only (§16): the
+        # interpreter's constant factor would dominate every larger row
+        # without adding information
+        row_runners = runner_names + (["pallas"] if i == 0 else [])
+        for runner in row_runners:
             case.update(_run_worker(dict(kind="grid", index=i, runner=runner)))
         _finalize_case(case)
         cases.append(case)
@@ -347,11 +363,14 @@ def run() -> dict:
         host = (f" host_sharded {case['host_sharded_s']*1e3:8.1f} ms"
                 f" (state/dev {case['host_state_scaling']:.2f}x)"
                 if "host_sharded_s" in case else "")
+        pallas = (f" pallas {case['pallas_s']*1e3:8.1f} ms"
+                  f" ({case['pallas_vs_engine']:.0f}x engine, interpret)"
+                  if "pallas_s" in case else "")
         print(f"  n_guests={n_guests:3d} n_logical={case['n_logical']:6d} "
               f"windows={n_windows:3d}: reference {case['reference_s']*1e3:8.1f} ms"
               f" engine {case['engine_s']*1e3:8.1f} ms"
               f" synth {case['synth_s']*1e3:8.1f} ms"
-              f" speedup {case['speedup']:5.2f}x{sharded}{host}")
+              f" speedup {case['speedup']:5.2f}x{sharded}{host}{pallas}")
     pod = _run_worker(dict(kind="pod"))
     cases.append(pod)
     print(f"  n_guests={pod['n_guests']:3d} n_logical={pod['n_logical']:6d} "
@@ -390,6 +409,10 @@ def run() -> dict:
         tco=churn["tco"],
         amat_ns=churn["amat_ns"],
     )
+    pallas_rows = [c for c in cases if "pallas_vs_engine" in c]
+    if pallas_rows:
+        # §16 informational column: pallas-interpret cost on the smallest row
+        payload["pallas_vs_engine"] = pallas_rows[0]["pallas_vs_engine"]
     if sharded_at_scale:
         # acceptance: the sharded path is no slower than the single-device
         # engine at n_guests >= 8 (wall clock is noisy on shared CPU

@@ -1,0 +1,85 @@
+"""Registry-driven kernel micro-benchmark (DESIGN.md §4, §16).
+
+Walks every :class:`repro.kernels.registry.KernelSpec` that carries an
+``example()`` thunk and times its two backends on that exact input: the
+jitted jnp reference (the engine's production path off-TPU) and the Pallas
+kernel in ``interpret=True`` mode (what CI correctness-tests; native
+lowering needs real TPU hardware). The interpret ratio is **informational**
+-- it bounds nothing about TPU performance -- but it catches two real
+regressions: a kernel whose example stops running at all, and a reference
+whose compiled wall clock drifts by orders of magnitude.
+
+One warmup call per backend (compile/trace), then best-of-``REPEATS`` wall
+clock, same discipline as ``bench_engine``. Writes
+``experiments/benchmarks/bench_kernels.json``.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks import common, registry as suites
+from repro.kernels import registry
+
+NAME = "bench_kernels"
+REPEATS = 5
+
+
+def _time_call(fn, args, kwargs) -> float:
+    jax.block_until_ready(fn(*args, **kwargs))  # warmup (compile/trace)
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> dict:
+    rows = []
+    skipped = []
+    for spec in registry.all_kernels():
+        if spec.example is None:
+            skipped.append(spec.name)
+            continue
+        args, kwargs = spec.example()
+
+        def ref_call(*a, **kw):
+            return registry.dispatch(spec.name, "xla", *a, **kw)
+
+        def pallas_call(*a, **kw):
+            return registry.dispatch(spec.name, "pallas", *a, **kw)
+
+        # both timed through the one dispatch site, eagerly: the examples
+        # carry static Python ints (n_bins, k) a bare jit would trace
+        ref_s = _time_call(ref_call, args, kwargs)
+        pallas_s = _time_call(pallas_call, args, kwargs)
+        row = dict(
+            kernel=spec.name,
+            description=spec.description,
+            ref_s=ref_s,
+            pallas_interpret_s=pallas_s,
+            interpret_ratio=pallas_s / ref_s,
+        )
+        rows.append(row)
+        print(f"  {spec.name:<20} ref {ref_s*1e3:8.2f} ms  "
+              f"pallas(interpret) {pallas_s*1e3:8.2f} ms  "
+              f"ratio {row['interpret_ratio']:8.1f}x")
+    for name in skipped:
+        print(f"  {name:<20} skipped: no example() registered")
+    payload = dict(
+        suite=NAME,
+        description=suites.describe(NAME),
+        backend=jax.default_backend(),
+        repeats=REPEATS,
+        interpret_mode=True,
+        kernels=rows,
+        skipped=skipped,
+    )
+    common.save(NAME, payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -27,6 +27,8 @@ SUITES: dict[str, str] = {
     "fig_tco_curve": "TCO/performance frontier: 2-tier vs compressed 3-tier "
                      "hierarchies under the $/GB objective (ISSUE 7)",
     "bench_engine": "engine vs seed-reference wall-clock (BENCH_engine.json)",
+    "bench_kernels": "registered kernel pairs, jnp ref vs Pallas interpret "
+                     "(DESIGN.md §16, registry-driven)",
     "bench_churn": "steady-state churn: Poisson guest arrival/departure with "
                    "faults and pressure-aware degradation (ISSUE 6 headline)",
 }

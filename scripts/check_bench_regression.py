@@ -75,6 +75,19 @@ def main(baseline_path: str, fresh_path: str) -> int:
         else:
             print(f"churn fleet TCO: fresh {fresh['tco']:.4g} "
                   f"(baseline predates the tco column)")
+    if "pallas_vs_engine" in fresh:
+        # informational only: the pallas-interpret cost ratio (DESIGN.md
+        # §16) on the smallest grid row; interpret-mode wall clock says
+        # nothing about TPU lowering, and baselines from before the kernel
+        # registry have no such column, so never gate on it
+        if "pallas_vs_engine" in baseline:
+            print(f"pallas-vs-engine interpret ratio: baseline "
+                  f"{baseline['pallas_vs_engine']:.1f}x, fresh "
+                  f"{fresh['pallas_vs_engine']:.1f}x (informational)")
+        else:
+            print(f"pallas-vs-engine interpret ratio: fresh "
+                  f"{fresh['pallas_vs_engine']:.1f}x "
+                  f"(baseline predates the pallas column)")
     if failed:
         return 1
     print("OK: no bench regression")

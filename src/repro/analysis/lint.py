@@ -13,7 +13,10 @@ PRs could silently regress:
 * ``REPRO-L004`` — no full-pool ``jnp.concatenate`` in ``core/`` (PR 1
   replaced it with the predicated dual-pool gather);
 * ``REPRO-L005`` — no direct numpy calls on the engine hot path (scan
-  bodies and window functions must stay traceable).
+  bodies and window functions must stay traceable);
+* ``REPRO-L006`` — no direct ``kernel.py`` imports outside the kernels
+  subpackage (PR 9: the registry in ``repro.kernels.registry`` is the only
+  sanctioned dispatch surface; ``ops.py`` wraps each raw kernel).
 
 The lint registry mirrors the PR-2 registries (duplicates raise, unknown
 names raise listing the live set). Every lint carries a seeded violation
@@ -495,6 +498,56 @@ def _lint_no_numpy_hot_path(tree, rel, lines) -> Iterable[Violation]:
                     "REPRO-L005", rel, lines, node,
                     f"numpy call {name}() inside hot-path function "
                     f"{'.'.join(stack)}"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# REPRO-L006: no raw kernel.py imports outside the kernels subpackage
+# --------------------------------------------------------------------------
+_L006_FIXTURE = '''\
+from repro.kernels.hotness_scan import kernel as _k
+
+
+def hot_subpages_per_hp(cfg, state, hot):
+    # BAD: core code must dispatch through repro.kernels.registry, never
+    # import a raw Pallas kernel module directly
+    return _k.hot_count(hot, cfg.hp_ratio, interpret=True)
+'''
+
+
+@register_lint(
+    "REPRO-L006",
+    "no direct repro.kernels.*.kernel imports outside the kernels "
+    "subpackage: core code dispatches through repro.kernels.registry "
+    "(the ops.py wrappers own the raw kernels)",
+    _L006_FIXTURE,
+    "src/repro/core/telemetry.py",
+)
+def _lint_no_raw_kernel_import(tree, rel, lines) -> Iterable[Violation]:
+    if not rel.startswith("src/repro/") or rel.startswith("src/repro/kernels/"):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom):
+            mod = node.module or ""
+            bad = (
+                mod.startswith("repro.kernels.") and (
+                    mod.endswith(".kernel")
+                    or any(a.name == "kernel" for a in node.names)
+                )
+            )
+        elif isinstance(node, ast.Import):
+            bad = any(
+                a.name.startswith("repro.kernels.") and a.name.endswith(".kernel")
+                for a in node.names
+            )
+        else:
+            continue
+        if bad:
+            out.append(_v(
+                "REPRO-L006", rel, lines, node,
+                "raw Pallas kernel module imported outside repro.kernels — "
+                "dispatch through repro.kernels.registry instead"))
     return out
 
 

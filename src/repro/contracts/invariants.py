@@ -1,11 +1,12 @@
 """The registered invariant contracts (DESIGN.md §15, ledger in
 docs/contracts/INVARIANTS.md).
 
-Eight contracts distilled from five PRs of equivalence pins: the four the
+Nine contracts distilled from six PRs of equivalence pins: the four the
 DESIGN.md §10 ledger already named (churn no-op, crash reclaim, 2-tier
-special case, pressure no-overcommit) plus the four that until now lived
+special case, pressure no-overcommit), the four that until now lived
 only as bespoke test files (ownership merge, chunking invariance, synth
-determinism, arbitration tie-break). Each ``check_fn`` takes one
+determinism, arbitration tie-break), plus the kernel-backend exactness
+pin of the Pallas hot path (DESIGN.md §16). Each ``check_fn`` takes one
 :class:`~repro.contracts.draws.ContractDraw` and raises ``AssertionError``
 on violation; the harness in ``tests/test_contracts.py`` drives them under
 hypothesis over the shared strategies.
@@ -370,3 +371,49 @@ def check_pressure_no_overcommit(draw: ContractDraw):
     if used > draw.cap and used - target <= draw.budget \
             and free_far >= used - target:
         assert used2 == target, "did not land on the low watermark"
+
+
+# --------------------------------------------------------------------------
+# §16 — kernel backend exactness
+# --------------------------------------------------------------------------
+@register_contract(
+    "INV-KERNEL-BACKEND-EXACT", "§16",
+    drivers=("run", "run_sharded", "run_sharded(host_sharded=True)",
+             "run_churn"),
+    pins=(
+        "tests/test_kernels.py::TestEngineBackendEquivalence",
+        "tests/test_kernels.py::TestRegisteredKernelEquivalence",
+    ),
+    max_examples=2,
+)
+def check_kernel_backend_exact(draw: ContractDraw):
+    """The engine's hot-path kernels are backend-transparent: running any
+    driver with ``kernel_backend="pallas"`` (interpret mode on CPU) is
+    bit-identical to ``kernel_backend="xla"`` in the final state and every
+    collector series, for any geometry/policy/gpac draw."""
+    from repro.core import engine, sharding
+
+    spec, s0 = build_engine(draw)
+    source = trace_source(draw, spec)
+    ref_state, ref = engine.run(
+        spec, s0, source, policy=draw.policy, use_gpac=draw.use_gpac,
+        kernel_backend="xla")
+    pl_state, pl = engine.run(
+        spec, s0, source, policy=draw.policy, use_gpac=draw.use_gpac,
+        kernel_backend="pallas")
+    assert_states_equal(ref_state, pl_state, "pallas run state diverged")
+    assert_series_equal(ref, pl, "pallas run series diverged")
+    mesh = sharding.guest_mesh(1)  # full shard_map path on one device
+    sh_state, sh = engine.run_sharded(
+        spec, s0, source, mesh=mesh, policy=draw.policy,
+        use_gpac=draw.use_gpac, host_sharded=draw.host_sharded,
+        kernel_backend="pallas")
+    assert_states_equal(ref_state, sh_state, "pallas run_sharded diverged")
+    assert_series_equal(ref, sh, "pallas run_sharded series diverged")
+    cs, se = engine.run_churn(
+        spec, engine.init_churn(spec), source, policy=draw.policy,
+        use_gpac=draw.use_gpac, kernel_backend="pallas")
+    assert_states_equal(ref_state, cs.state, "pallas run_churn diverged")
+    assert_series_equal(
+        ref, {k: v for k, v in se.items() if k not in engine._CHURN_SERIES},
+        "pallas run_churn series diverged")

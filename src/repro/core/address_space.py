@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.types import FREE, GpacConfig, TieredState
+from repro.kernels import registry as kernels
 
 
 # --------------------------------------------------------------------------
@@ -81,13 +82,16 @@ def write_logical(
 
 
 def record_accesses(
-    cfg: GpacConfig, state: TieredState, logical: jax.Array, counts: jax.Array | None = None
+    cfg: GpacConfig, state: TieredState, logical: jax.Array,
+    counts: jax.Array | None = None, kernel_backend: str = "auto",
 ) -> TieredState:
     """Charge accesses to guest (base-page) and host (huge-page) telemetry.
 
     ``logical`` int32[k] page ids (pad with -1), ``counts`` optional weights.
     The host side only ever sees the huge-page aggregate -- this is the
-    information asymmetry the paper exploits.
+    information asymmetry the paper exploits. The histogram path dispatches
+    through the kernel registry (``kernel_backend``, DESIGN.md §16); the
+    small-batch per-access scatter stays XLA.
     """
     valid = (logical >= 0) & (logical < cfg.n_logical)
     if counts is None and logical.size * 2 >= cfg.n_logical:
@@ -96,7 +100,9 @@ def record_accesses(
         # per logical page instead of per access -- bit-identical integer
         # sums, ~3x fewer scattered elements
         return apply_access_histogram(
-            cfg, state, access_histogram(cfg, logical, valid)
+            cfg, state,
+            access_histogram(cfg, logical, valid, kernel_backend),
+            kernel_backend,
         )
     if counts is None:
         counts = jnp.ones(logical.shape, jnp.int32)
@@ -128,7 +134,8 @@ def record_accesses(
 
 
 def access_histogram(
-    cfg: GpacConfig, logical: jax.Array, valid: jax.Array | None = None
+    cfg: GpacConfig, logical: jax.Array, valid: jax.Array | None = None,
+    kernel_backend: str = "auto",
 ) -> jax.Array:
     """int32[n_logical] per-page access counts of an unweighted id batch
     (invalid / padded ids fall off the end of the scatter). The sharded
@@ -137,28 +144,36 @@ def access_histogram(
     if valid is None:
         valid = (logical >= 0) & (logical < cfg.n_logical)
     flat = jnp.where(valid, logical, cfg.n_logical).reshape(-1).astype(jnp.int32)
-    return jnp.zeros((cfg.n_logical + 1,), jnp.int32).at[flat].add(1)[: cfg.n_logical]
+    ones = jnp.ones(flat.shape, jnp.int32)
+    return kernels.dispatch(
+        "bincount", kernel_backend, flat, ones, cfg.n_logical + 1
+    )[: cfg.n_logical]
 
 
-def host_histogram(cfg: GpacConfig, gpt: jax.Array, h: jax.Array) -> jax.Array:
+def host_histogram(
+    cfg: GpacConfig, gpt: jax.Array, h: jax.Array,
+    kernel_backend: str = "auto",
+) -> jax.Array:
     """int32[n_gpa_hp]: the huge-page access counts a per-logical-page
     histogram ``h`` induces under the mapping ``gpt``. Shared by the
     replicated :func:`apply_access_histogram` and the host-partitioned engine
     (which gathers only its own block range from the result -- a device's
     histogram is nonzero only inside its own guests' segments)."""
     hp_of = gpt // cfg.hp_ratio
-    return jnp.zeros((cfg.n_gpa_hp,), jnp.int32).at[hp_of].add(h)
+    return kernels.dispatch(
+        "bincount", kernel_backend, hp_of, h, cfg.n_gpa_hp)
 
 
 def apply_access_histogram(
-    cfg: GpacConfig, state: TieredState, h: jax.Array
+    cfg: GpacConfig, state: TieredState, h: jax.Array,
+    kernel_backend: str = "auto",
 ) -> TieredState:
     """Charge a full per-logical-page access histogram ``h`` to guest and host
     telemetry: every host-side quantity (huge-page counts, touch epochs, hit
     tiers) derives from ``h`` with per-logical-page work. All sums are exact
     int32, so the result is bit-identical to the per-access scatter path."""
     hp_of = state.gpt // cfg.hp_ratio
-    host_inc = host_histogram(cfg, state.gpt, h)
+    host_inc = host_histogram(cfg, state.gpt, h, kernel_backend)
     touch = jnp.where(
         host_inc > 0,
         jnp.maximum(state.last_touch_epoch, state.epoch),

@@ -78,6 +78,7 @@ def _apply_consolidation(
     state: TieredState,
     pages: jax.Array,  # int32[n, hp_ratio] logical ids, -1 padded
     region: jax.Array,  # int32[n] fresh region per row, -1 = -ENOMEM
+    kernel_backend: str = "auto",
 ) -> TieredState:
     """Shared core of Algorithm 1: execute ``n`` independent invocations at
     once (rows must touch disjoint pages/regions -- one row, or one row per
@@ -105,7 +106,11 @@ def _apply_consolidation(
     # Gather hp_ratio rows straight out of whichever pool holds each source
     # page -- no [near_pool; far_pool] concatenation, which would materialize
     # every slot's payload inside each lax.scan invocation (the same idiom
-    # tiering.swap_blocks uses).
+    # tiering.swap_blocks uses). The per-pool row gathers dispatch to the
+    # scalar-prefetched gather_rows kernel (DESIGN.md §16) -- gathers are
+    # pure copies, so both backends are bitwise identical for any dtype.
+    from repro.kernels import registry as kernels
+
     src_slot = state.block_table[old_gpa // cfg.hp_ratio]
     src_off = old_gpa % cfg.hp_ratio
     src_flat = jnp.where(do_move, src_slot * cfg.hp_ratio + src_off, 0)
@@ -114,8 +119,11 @@ def _apply_consolidation(
     far_rows = state.far_pool.reshape(-1, cfg.base_elems)
     payload = jnp.where(
         src_is_near[..., None],
-        near_rows[jnp.where(src_is_near, src_flat, 0)],
-        far_rows[jnp.where(src_is_near, 0, src_flat - cfg.n_near * cfg.hp_ratio)],
+        kernels.dispatch("gather_rows", kernel_backend, near_rows,
+                         jnp.where(src_is_near, src_flat, 0)),
+        kernels.dispatch(
+            "gather_rows", kernel_backend, far_rows,
+            jnp.where(src_is_near, 0, src_flat - cfg.n_near * cfg.hp_ratio)),
     )  # [n, hp_ratio, base_elems]
 
     dst_slot = state.block_table[jnp.maximum(region, 0)][:, None]  # [n, 1]
@@ -221,7 +229,8 @@ def consolidate_pages_ragged(
     region = _alloc_regions_ragged(
         cfg, state.rmap, jnp.asarray(spec.hp_pad_index())
     )
-    return _apply_consolidation(cfg, state, pages, region)
+    return _apply_consolidation(cfg, state, pages, region,
+                                spec.kernel_backend)
 
 
 def consolidate_rounds(
@@ -229,6 +238,7 @@ def consolidate_rounds(
     state: TieredState,
     batches: jax.Array,  # int32[n_rows, max_batches, hp_ratio]
     hp_pad_idx: jax.Array,  # int32[n_rows, max_hp] GPA segment table rows
+    kernel_backend: str = "auto",
 ) -> TieredState:
     """Round-major consolidation over any slice of guest segment rows:
     round b allocates each row's fresh region from its own GPA segment
@@ -239,7 +249,9 @@ def consolidate_rounds(
 
     def body(st, round_pages):
         region = _alloc_regions_ragged(cfg, st.rmap, hp_pad_idx)
-        return _apply_consolidation(cfg, st, round_pages.astype(jnp.int32), region), None
+        return _apply_consolidation(
+            cfg, st, round_pages.astype(jnp.int32), region, kernel_backend
+        ), None
 
     state, _ = jax.lax.scan(body, state, jnp.swapaxes(batches, 0, 1))
     return state
@@ -256,7 +268,8 @@ def consolidate_batches_ragged(
     guest-major sequential result while shortening the scan from
     ``n_guests * max_batches`` steps to ``max_batches``."""
     return consolidate_rounds(
-        spec.cfg, state, batches, jnp.asarray(spec.hp_pad_index())
+        spec.cfg, state, batches, jnp.asarray(spec.hp_pad_index()),
+        spec.kernel_backend,
     )
 
 
@@ -310,6 +323,7 @@ def _apply_consolidation_local(
     pages: jax.Array,  # int32[n, hp_ratio] logical ids, -1 padded
     region: jax.Array,  # int32[n] fresh region per row, -1 = -ENOMEM
     hp_lo: jax.Array,  # first huge page of this device's block range
+    kernel_backend: str = "auto",
 ):
     """:func:`_apply_consolidation` on the host-partitioned layout.
 
@@ -335,7 +349,17 @@ def _apply_consolidation_local(
     src_row = jnp.clip(
         jnp.where(do_move, old_gpa // cfg.hp_ratio - hp_lo, 0), 0, h_loc - 1
     )
-    payload = data[src_row, old_gpa % cfg.hp_ratio]  # [n, hp_ratio, elems]
+    # the 2-D fancy index data[src_row, off] as a flat row gather so it can
+    # dispatch to the gather_rows kernel (a gather is a pure copy -- both
+    # backends are bitwise identical); src_row is clipped and the offset is
+    # jnp's python-style modulo, so every flat id is in range
+    from repro.kernels import registry as kernels
+
+    flat_rows = data.reshape(h_loc * cfg.hp_ratio, cfg.base_elems)
+    flat_src = src_row * cfg.hp_ratio + old_gpa % cfg.hp_ratio
+    payload = kernels.dispatch(
+        "gather_rows", kernel_backend, flat_rows, flat_src
+    )  # [n, hp_ratio, elems]
     dst_row = jnp.where(do_move, region[:, None] - hp_lo, h_loc)
     data = data.at[dst_row, jnp.broadcast_to(off, pages.shape)].set(
         payload, mode="drop"
@@ -361,6 +385,7 @@ def consolidate_rounds_local(
     batches: jax.Array,  # int32[n_rows, max_batches, hp_ratio]
     hp_pad_idx: jax.Array,  # int32[n_rows, max_hp] this device's GPA rows
     hp_lo: jax.Array,
+    kernel_backend: str = "auto",
 ):
     """:func:`consolidate_rounds` for the host-partitioned engine: round-major
     Algorithm-1 invocations over this device's own guest rows, with the data
@@ -371,7 +396,7 @@ def consolidate_rounds_local(
         region = _alloc_regions_ragged(cfg, rmap, hp_pad_idx)
         return _apply_consolidation_local(
             cfg, gpt, rmap, data, re_loc, epoch, stats,
-            round_pages.astype(jnp.int32), region, hp_lo,
+            round_pages.astype(jnp.int32), region, hp_lo, kernel_backend,
         ), None
 
     carry, _ = jax.lax.scan(

@@ -42,6 +42,7 @@ from repro.core import faults as faults_mod
 from repro.core import gpac, metrics, telemetry, tiering
 from repro.core import tiers as tiers_mod
 from repro.core.types import GpacConfig, TieredState, allocated_hp_mask, init_state
+from repro.kernels import registry as kernels_registry
 
 
 # --------------------------------------------------------------------------
@@ -154,6 +155,9 @@ class EngineSpec:
     # resolved core.tiers.TierVector when built from HostSpec.tiers; None
     # keeps every legacy path on the 2-tier near/far special case
     tiers: Any = None
+    # hot-path kernel dispatch ("xla" | "pallas" | "auto", DESIGN.md §16);
+    # static, so it rides every jit cache key with the rest of the spec
+    kernel_backend: str = "auto"
 
     @property
     def n_guests(self) -> int:
@@ -647,7 +651,8 @@ def _window(
     if "tco" in collect:
         window["tier_hits"] = tiers_mod.tier_hit_counts(
             spec.tier_vector, slot, valid)
-    state = asp.record_accesses(cfg, state, ids.reshape(-1))
+    state = asp.record_accesses(
+        cfg, state, ids.reshape(-1), kernel_backend=spec.kernel_backend)
     if use_gpac:
         # all N guest daemons in one batched pass over the segment-offset
         # tables; disjoint segments make this bit-equal to N sequential
@@ -842,6 +847,16 @@ def _drive_chunks(
     return state, series
 
 
+def _with_kernel_backend(spec: EngineSpec, kernel_backend: str | None) -> EngineSpec:
+    """Fold a driver-level ``kernel_backend=`` override into the spec (the
+    field is static, so the override keys its own jit cache entries).
+    ``None`` keeps the spec's own choice; names validate eagerly."""
+    if kernel_backend is None:
+        return spec
+    kernels_registry.resolve_backend(kernel_backend)  # fail fast on typos
+    return dataclasses.replace(spec, kernel_backend=kernel_backend)
+
+
 def run(
     spec: EngineSpec,
     state: TieredState,
@@ -856,6 +871,7 @@ def run(
     windows_per_step: int = 0,
     strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
+    kernel_backend: str | None = None,
 ) -> tuple[TieredState, dict]:
     """Drive every window through the scan-fused engine.
 
@@ -881,6 +897,7 @@ def run(
     source has no windows or ``collect`` is empty.
     """
     source = _coerce_source(source, traces)
+    spec = _with_kernel_backend(spec, kernel_backend)
     collect = _validate_run_args(spec, source, collect)
     n_w = source.n_windows
     if n_w == 0:
@@ -933,6 +950,7 @@ def run_sharded(
     windows_per_step: int = 0,
     strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
+    kernel_backend: str | None = None,
 ) -> tuple[TieredState, dict]:
     """:func:`run`, device-sharded over the guest axis (DESIGN.md §9, §11).
 
@@ -967,6 +985,7 @@ def run_sharded(
     from repro.core import sharding
 
     source = _coerce_source(source, traces)
+    spec = _with_kernel_backend(spec, kernel_backend)
     if mesh is None:
         mesh = sharding.guest_mesh()
     if mesh is None:
@@ -1187,8 +1206,9 @@ def _churn_window(
         window["tier_hits"] = tiers_mod.tier_hit_counts(
             spec.tier_vector, slot, valid)
     keep = jnp.where(frow["drop"], 0, 1).astype(jnp.int32)
+    kb = spec.kernel_backend
     state = asp.apply_access_histogram(
-        cfg, state, asp.access_histogram(cfg, ids, valid) * keep
+        cfg, state, asp.access_histogram(cfg, ids, valid, kb) * keep, kb
     )
     if use_gpac:
         state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
@@ -1344,6 +1364,7 @@ def run_churn(
     windows_per_step: int = 0,
     strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
+    kernel_backend: str | None = None,
 ) -> tuple[ChurnState, dict]:
     """Drive ``source.n_windows`` windows of the steady-state churn engine.
 
@@ -1375,6 +1396,7 @@ def run_churn(
             f"{type(cs).__name__}"
         )
     source = _coerce_source(source, None)
+    spec = _with_kernel_backend(spec, kernel_backend)
     collect = _validate_run_args(spec, source, collect)
     n_w = source.n_windows
     if n_w == 0:

@@ -31,12 +31,13 @@ def candidate_mask(
     hot: jax.Array,
     cl: int | jax.Array | None = None,
     allow: jax.Array | None = None,
+    kernel_backend: str = "auto",
 ) -> jax.Array:
     """bool[n_logical]: hot pages living in skewed (< CL hot subpages) huge
     pages that are not inside a cooldown region. ``allow`` optionally
     restricts candidates to one guest's logical pages (multi-tenant)."""
     cl = cfg.cl if cl is None else cl
-    per_hp = telemetry.hot_subpages_per_hp(cfg, state, hot)
+    per_hp = telemetry.hot_subpages_per_hp(cfg, state, hot, kernel_backend)
     hp_of = state.gpt // cfg.hp_ratio
     skewed = (per_hp[hp_of] > 0) & (per_hp[hp_of] < cl)
     cooling = (state.region_epoch[hp_of] >= 0) & (
@@ -92,6 +93,7 @@ def select_batches_from_rows(
     score: jax.Array,  # int32[n_logical] candidate score, -1 = not a candidate
     pad_idx: jax.Array,  # int32[n_rows, max_logical] segment table rows, -1 padded
     max_batches: int,
+    kernel_backend: str = "auto",
 ) -> jax.Array:
     """Row-wise batch selection over any slice of segment-table rows: one
     ``top_k`` per row of the padded score matrix gathered from the global
@@ -99,9 +101,13 @@ def select_batches_from_rows(
     (all guests at once) and the device-sharded engine (each device passes
     only its own guests' rows). Returns ``int32[n_rows, max_batches,
     hp_ratio]`` logical-id batches, -1 padded."""
+    from repro.kernels import registry as kernels
+
     mat = jnp.where(pad_idx >= 0, score[jnp.maximum(pad_idx, 0)], -1)
     k = min(max_batches * cfg.hp_ratio, mat.shape[1])
-    vals, col = jax.lax.top_k(mat, k)  # row-wise, ties -> lowest column
+    # row-wise, ties -> lowest column (lax.top_k semantics on both backends;
+    # scores are >= -1, safely above the kernel's INT32_MIN mask value)
+    vals, col = kernels.dispatch("topk_rows", kernel_backend, mat, k)
     ids = jnp.where(vals >= 0, jnp.take_along_axis(pad_idx, col, axis=1), -1)
     pad = max_batches * cfg.hp_ratio - k
     if pad:
@@ -116,11 +122,13 @@ def candidate_score(
     state: TieredState,
     hot: jax.Array,
     cl_per_logical: jax.Array,
+    kernel_backend: str = "auto",
 ) -> jax.Array:
     """int32[n_logical] filter ranking: the hotness score where
     :func:`candidate_mask` holds (per-guest CLs via ``cl_per_logical``),
     -1 elsewhere."""
-    cand = candidate_mask(cfg, state, hot, cl_per_logical)
+    cand = candidate_mask(
+        cfg, state, hot, cl_per_logical, kernel_backend=kernel_backend)
     return jnp.where(cand, _hotness_score(state), -1)
 
 
@@ -145,11 +153,12 @@ def select_batches_ragged(
     column index preserves the global id order inside each segment.
     """
     cfg = spec.cfg
+    kb = spec.kernel_backend
     score = candidate_score(
-        cfg, state, hot, jnp.asarray(spec.cl_per_logical())
+        cfg, state, hot, jnp.asarray(spec.cl_per_logical()), kb
     )
     pad_idx = jnp.asarray(spec.logical_pad_index())  # [n_guests, max_logical]
-    return select_batches_from_rows(cfg, score, pad_idx, max_batches)
+    return select_batches_from_rows(cfg, score, pad_idx, max_batches, kb)
 
 
 def select_batches_per_guest(

@@ -71,6 +71,7 @@ def gpac_maintenance_ragged(
         jnp.asarray(spec.cl_per_logical()),
         jnp.asarray(spec.logical_pad_index()),
         jnp.asarray(spec.hp_pad_index()),
+        spec.kernel_backend,
     )
 
 
@@ -82,6 +83,7 @@ def gpac_maintenance_rows(
     cl_per_logical: jax.Array,  # int32[n_logical]
     pad_idx: jax.Array,  # int32[n_rows, max_logical] logical segment rows
     hp_pad_idx: jax.Array,  # int32[n_rows, max_hp] GPA segment rows
+    kernel_backend: str = "auto",
 ) -> TieredState:
     """GPAC passes for an arbitrary slice of guest segment rows.
 
@@ -96,9 +98,11 @@ def gpac_maintenance_rows(
     disjoint, so each device's pass *writes* disjoint state and the shard
     merge is exact."""
     hot = telemetry.hot_mask(cfg, state, backend)
-    score = pfilter.candidate_score(cfg, state, hot, cl_per_logical)
-    batches = pfilter.select_batches_from_rows(cfg, score, pad_idx, max_batches)
-    return consolidator.consolidate_rounds(cfg, state, batches, hp_pad_idx)
+    score = pfilter.candidate_score(cfg, state, hot, cl_per_logical, kernel_backend)
+    batches = pfilter.select_batches_from_rows(
+        cfg, score, pad_idx, max_batches, kernel_backend)
+    return consolidator.consolidate_rounds(
+        cfg, state, batches, hp_pad_idx, kernel_backend)
 
 
 def gpac_maintenance_batched(

@@ -271,14 +271,15 @@ def _sharded_window(
     slot, _, valid = asp.translate(cfg, state, ids)
     near_loc = (valid & (slot < cfg.n_near)).sum(axis=1)
     far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1)
+    kb = spec.kernel_backend
     local = asp.apply_access_histogram(
-        cfg, state, asp.access_histogram(cfg, ids, valid)
+        cfg, state, asp.access_histogram(cfg, ids, valid, kb), kb
     )
     # ---- 2. GPAC phase (sharded: this device's segment rows only) --------
     if use_gpac:
         local = gpac.gpac_maintenance_rows(
             cfg, local, backend, max_batches,
-            jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad,
+            jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad, kb,
         )
     # ---- 3. one-collective ownership merge -------------------------------
     extras = [
@@ -468,14 +469,15 @@ def _churn_sharded_window(
     near_loc = (valid & (slot < cfg.n_near)).sum(axis=1)
     far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1)
     keep = jnp.where(frow["drop"], 0, 1).astype(jnp.int32)
+    kb = spec.kernel_backend
     local = asp.apply_access_histogram(
-        cfg, state, asp.access_histogram(cfg, ids, valid) * keep
+        cfg, state, asp.access_histogram(cfg, ids, valid, kb) * keep, kb
     )
     # ---- 2. GPAC phase (sharded: this device's segment rows only) --------
     if use_gpac:
         local = gpac.gpac_maintenance_rows(
             cfg, local, backend, max_batches,
-            jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad,
+            jnp.asarray(spec.cl_per_logical()), logical_pad, hp_pad, kb,
         )
     # ---- 3. one-collective ownership merge -------------------------------
     extras = [
@@ -915,9 +917,10 @@ def _host_sharded_window(
     slot = bt_view[hp]
     near_loc = (valid & (slot < cfg.n_near)).sum(axis=1).astype(jnp.int32)
     far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1).astype(jnp.int32)
-    h = asp.access_histogram(cfg, ids, valid)
+    kb = spec.kernel_backend
+    h = asp.access_histogram(cfg, ids, valid, kb)
     gc = gc + h
-    inc_full = asp.host_histogram(cfg, gpt, h)
+    inc_full = asp.host_histogram(cfg, gpt, h, kb)
     inc_loc = jnp.where(hp_ids >= 0, inc_full[jnp.maximum(hp_ids, 0)], 0)
     loc["hc"] = loc["hc"] + inc_loc
     loc["lt"] = jnp.where(inc_loc > 0, jnp.maximum(loc["lt"], epoch), loc["lt"])
@@ -930,15 +933,15 @@ def _host_sharded_window(
         view = _view_state(cfg, gpt, rmap, gc, ih, re_view, epoch, stats)
         hot = telemetry.hot_mask(cfg, view, backend)
         score = pfilter.candidate_score(
-            cfg, view, hot, jnp.asarray(spec.cl_per_logical())
+            cfg, view, hot, jnp.asarray(spec.cl_per_logical()), kb
         )
         batches = pfilter.select_batches_from_rows(
-            cfg, score, logical_pad, max_batches
+            cfg, score, logical_pad, max_batches, kb
         )
         gpt, rmap, loc["data"], loc["re"], stats = (
             consolidator.consolidate_rounds_local(
                 cfg, gpt, rmap, loc["data"], loc["re"], epoch, stats,
-                batches, hp_pad, hp_lo,
+                batches, hp_pad, hp_lo, kb,
             )
         )
 

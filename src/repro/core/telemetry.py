@@ -131,27 +131,34 @@ def hot_mask(cfg: GpacConfig, state: TieredState, backend: str = "ipt", **kw) ->
 # --------------------------------------------------------------------------
 # skew statistics (paper Fig. 2 / Fig. 16) -- guest-side views
 # --------------------------------------------------------------------------
-def hot_subpages_per_hp(cfg: GpacConfig, state: TieredState, hot: jax.Array) -> jax.Array:
+def hot_subpages_per_hp(
+    cfg: GpacConfig, state: TieredState, hot: jax.Array,
+    kernel_backend: str = "auto",
+) -> jax.Array:
     """int32[n_gpa_hp]: number of hot base pages inside each huge page.
 
     This is the quantity the Scattered Page Filter compares against CL, and
     the x-axis of the paper's skew CDFs. Computed via rmap so unallocated gpa
     pages never count. The strided reduction dispatches to the hotness_scan
-    Pallas kernel on TPU (tests pin kernel == this jnp path bit-for-bit).
+    kernel through the registry (``kernel_backend``, DESIGN.md §16); tests
+    pin kernel == jnp path bit-for-bit.
     """
-    from repro.kernels.hotness_scan import hot_count
+    from repro.kernels import registry as kernels
 
     hot_gpa = jnp.where(state.rmap >= 0, hot[jnp.maximum(state.rmap, 0)], False)
-    return hot_count(hot_gpa, cfg.hp_ratio)
+    return kernels.dispatch(
+        "hot_count", kernel_backend, hot_gpa, cfg.hp_ratio)
 
 
-def accessed_subpages_per_hp(cfg: GpacConfig, state: TieredState) -> jax.Array:
+def accessed_subpages_per_hp(
+    cfg: GpacConfig, state: TieredState, kernel_backend: str = "auto",
+) -> jax.Array:
     """int32[n_gpa_hp]: accessed (count>0) base pages per huge page -- the
     exact statistic of paper Fig. 2. Dispatches through the same
-    ``hotness_scan.hot_count`` wrapper (Pallas on TPU) as
-    :func:`hot_subpages_per_hp`."""
-    from repro.kernels.hotness_scan import hot_count
+    ``hot_count`` registry entry as :func:`hot_subpages_per_hp`."""
+    from repro.kernels import registry as kernels
 
     acc = state.guest_counts > 0
     acc_gpa = jnp.where(state.rmap >= 0, acc[jnp.maximum(state.rmap, 0)], False)
-    return hot_count(acc_gpa, cfg.hp_ratio)
+    return kernels.dispatch(
+        "hot_count", kernel_backend, acc_gpa, cfg.hp_ratio)

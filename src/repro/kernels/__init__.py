@@ -1,7 +1,23 @@
-"""Pallas TPU kernels for the compute hot spots (DESIGN.md §4).
+"""Pallas TPU kernels for the compute hot spots (DESIGN.md §4/§16).
 
 Each subpackage ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
-wrapper with backend dispatch) and ref.py (pure-jnp oracle); tests sweep
-shapes/dtypes in interpret mode against the oracle.
+wrapper + ``registry.register_kernel`` entry) and ref.py (the pure-jnp
+reference the ``"xla"`` backend runs); tests sweep shapes/dtypes in
+interpret mode against the oracle. Importing this package populates the
+kernel registry — core modules dispatch by name through
+``repro.kernels.registry`` and never import a ``kernel.py`` directly
+(lint REPRO-L006).
 """
+# runtime/registry first: the subpackage ops modules import them while this
+# package is still initializing
 from repro.kernels import runtime  # noqa: F401
+from repro.kernels import registry  # noqa: F401
+from repro.kernels import (  # noqa: F401  (registration side effects)
+    consolidate,
+    flash_attention,
+    histogram,
+    hotness_scan,
+    paged_attention,
+    tiered_lookup,
+    topk,
+)

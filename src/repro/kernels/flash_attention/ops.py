@@ -1,4 +1,4 @@
-"""Jitted wrapper: standard GQA (B, H, S, hd) -> folded flash attention.
+"""Jitted wrapper + registry entry: standard GQA -> folded flash attention.
 
 The GQA fold maps query head ``kvh*G+g`` at position ``s`` to folded row
 ``s*G+g`` of batch-slab ``b*KVH+kvh`` -- K/V stay one copy per kv head (no
@@ -9,24 +9,14 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 from einops import rearrange
 
-from repro.kernels import runtime
+from repro.kernels import registry
 from repro.kernels.flash_attention import kernel as _k
 from repro.kernels.flash_attention import ref as _ref
 
 
-@partial(jax.jit, static_argnames=("causal", "use_pallas", "block_q", "block_k"))
-def gqa_attention(
-    q: jax.Array,  # (B, H, S, hd)
-    k: jax.Array,  # (B, KVH, S, hd)
-    v: jax.Array,
-    causal: bool = True,
-    use_pallas: bool | None = None,
-    block_q: int = 128,
-    block_k: int = 128,
-) -> jax.Array:
+def _fold(q, k, v):
     B, H, S, hd = q.shape
     KVH = k.shape[1]
     assert H % KVH == 0
@@ -34,11 +24,64 @@ def gqa_attention(
     qf = rearrange(q, "b (kv g) s d -> (b kv) (s g) d", g=G)
     kf = rearrange(k, "b kv s d -> (b kv) s d")
     vf = rearrange(v, "b kv s d -> (b kv) s d")
-    if runtime.pick(use_pallas):
-        of = _k.flash_attention(
-            qf, kf, vf, causal=causal, group=G,
-            block_q=block_q, block_k=block_k, interpret=runtime.interpret(),
-        )
-    else:
-        of = _ref.flash_attention_ref(qf, kf, vf, causal=causal, group=G)
+    return qf, kf, vf, B, G
+
+
+def _gqa_pallas(q, k, v, *, causal=True, block_q=128, block_k=128,
+                interpret=False):
+    qf, kf, vf, B, G = _fold(q, k, v)
+    of = _k.flash_attention(
+        qf, kf, vf, causal=causal, group=G,
+        block_q=block_q, block_k=block_k, interpret=interpret)
     return rearrange(of, "(b kv) (s g) d -> b (kv g) s d", b=B, g=G)
+
+
+def _gqa_ref(q, k, v, *, causal=True, block_q=128, block_k=128):
+    # block sizes are a pallas tiling detail; the reference ignores them
+    qf, kf, vf, B, G = _fold(q, k, v)
+    of = _ref.flash_attention_ref(qf, kf, vf, causal=causal, group=G)
+    return rearrange(of, "(b kv) (s g) d -> b (kv g) s d", b=B, g=G)
+
+
+def _example():
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    B, H, KVH, S, hd = 2, 8, 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((B, H, S, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KVH, S, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, KVH, S, hd)), jnp.float32)
+    return (q, k, v), dict(causal=True)
+
+
+registry.register_kernel(
+    "gqa_attention", pallas=_gqa_pallas, ref=_gqa_ref,
+    example=_example,
+    description="GQA flash attention (folded heads, one K/V copy per kv head)",
+)
+
+
+def gqa_attention(
+    q: jax.Array,  # (B, H, S, hd)
+    k: jax.Array,  # (B, KVH, S, hd)
+    v: jax.Array,
+    causal: bool = True,
+    use_pallas=registry._UNSET,
+    block_q: int = 128,
+    block_k: int = 128,
+    *,
+    kernel_backend: str = "auto",
+) -> jax.Array:
+    if use_pallas is not registry._UNSET:
+        kernel_backend = registry.backend_from_use_pallas(use_pallas)
+    return _gqa_attention(q, k, v, causal, block_q, block_k, kernel_backend)
+
+
+@partial(jax.jit,
+         static_argnames=("causal", "block_q", "block_k", "kernel_backend"))
+def _gqa_attention(q, k, v, causal, block_q, block_k, kernel_backend):
+    return registry.dispatch(
+        "gqa_attention", kernel_backend, q, k, v,
+        causal=causal, block_q=block_q, block_k=block_k)

@@ -1,0 +1,1 @@
+from repro.kernels.histogram.ops import bincount  # noqa: F401

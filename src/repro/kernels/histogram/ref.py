@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the weighted bincount: XLA's scatter-add.
+
+This is verbatim what ``address_space.access_histogram`` /
+``host_histogram`` lowered to before the kernel registry, so the ``"xla"``
+backend stays the pre-registry engine path bit-for-bit: negative ids wrap
+numpy-style (``.at[]`` semantics), ids ``>= n_bins`` are dropped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bincount_ref(ids: jax.Array, weights: jax.Array, n_bins: int) -> jax.Array:
+    return jnp.zeros((n_bins,), jnp.int32).at[ids].add(
+        weights.astype(jnp.int32))

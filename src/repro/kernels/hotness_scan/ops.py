@@ -1,20 +1,60 @@
-"""Jitted wrapper for the hotness scan kernel."""
+"""Jitted wrapper + registry entry for the hotness scan kernel."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels import runtime
+from repro.kernels import registry
 from repro.kernels.hotness_scan import kernel as _k
 from repro.kernels.hotness_scan import ref as _ref
 
 
-@partial(jax.jit, static_argnames=("hp_ratio", "use_pallas"))
-def hot_count(
-    hot_gpa: jax.Array, hp_ratio: int, use_pallas: bool | None = None
+def _hot_count_pallas(
+    hot_gpa: jax.Array, hp_ratio: int, *, interpret: bool = False
 ) -> jax.Array:
-    """int32[n_hp] hot-subpage count per huge page."""
-    if runtime.pick(use_pallas):
-        return _k.hot_count(hot_gpa, hp_ratio, interpret=runtime.interpret())
-    return _ref.hot_count_ref(hot_gpa, hp_ratio)
+    return _k.hot_count(hot_gpa, hp_ratio, interpret=interpret)
+
+
+def _oracle(hot_gpa, hp_ratio):
+    import numpy as np
+
+    x = np.asarray(hot_gpa).astype(np.int32)
+    return x.reshape(-1, hp_ratio).sum(axis=1).astype(np.int32)
+
+
+def _example():
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    hot = rng.random(4096 * 32) < 0.1
+    return (jnp.asarray(hot), 32), {}
+
+
+registry.register_kernel(
+    "hot_count", pallas=_hot_count_pallas, ref=_ref.hot_count_ref,
+    oracle=_oracle, example=_example,
+    description="per-huge-page hot-subpage count (scattered page filter)",
+)
+
+
+def hot_count(
+    hot_gpa: jax.Array,
+    hp_ratio: int,
+    use_pallas=registry._UNSET,
+    *,
+    kernel_backend: str = "auto",
+) -> jax.Array:
+    """int32[n_hp] hot-subpage count per huge page.
+
+    ``use_pallas=`` is a deprecated shim over ``kernel_backend=``.
+    """
+    if use_pallas is not registry._UNSET:
+        kernel_backend = registry.backend_from_use_pallas(use_pallas)
+    return _hot_count(hot_gpa, hp_ratio, kernel_backend)
+
+
+@partial(jax.jit, static_argnames=("hp_ratio", "kernel_backend"))
+def _hot_count(hot_gpa, hp_ratio, kernel_backend):
+    return registry.dispatch("hot_count", kernel_backend, hot_gpa, hp_ratio)

@@ -1,4 +1,4 @@
-"""Jitted wrapper for paged decode attention (clamps the block table)."""
+"""Jitted wrapper + registry entry for paged decode attention."""
 from __future__ import annotations
 
 from functools import partial
@@ -6,26 +6,69 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import runtime
+from repro.kernels import registry
 from repro.kernels.paged_attention import kernel as _k
 from repro.kernels.paged_attention import ref as _ref
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
+def _clamp(k_pages, btab, lens):
+    n_pages = k_pages.shape[1]
+    return jnp.clip(btab, 0, n_pages - 1).astype(jnp.int32), \
+        lens.astype(jnp.int32)
+
+
+def _paged_pallas(q, k_pages, v_pages, btab, lens, *, interpret=False):
+    safe_btab, lens = _clamp(k_pages, btab, lens)
+    return _k.paged_attention(q, k_pages, v_pages, safe_btab, lens,
+                              interpret=interpret)
+
+
+def _paged_ref(q, k_pages, v_pages, btab, lens):
+    safe_btab, lens = _clamp(k_pages, btab, lens)
+    return _ref.paged_attention_ref(q, k_pages, v_pages, safe_btab, lens)
+
+
+def _example():
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    B, KVH, G, n_pages, page, hd, pages_per_seq = 4, 2, 4, 64, 16, 64, 8
+    q = jnp.asarray(rng.standard_normal((B, KVH, G, hd)), jnp.float32)
+    kp = jnp.asarray(
+        rng.standard_normal((KVH, n_pages, page, hd)), jnp.float32)
+    vp = jnp.asarray(
+        rng.standard_normal((KVH, n_pages, page, hd)), jnp.float32)
+    btab = jnp.asarray(
+        rng.integers(0, n_pages, size=(B, pages_per_seq)), jnp.int32)
+    lens = jnp.asarray(
+        rng.integers(1, pages_per_seq * page, size=(B,)), jnp.int32)
+    return (q, kp, vp, btab, lens), {}
+
+
+registry.register_kernel(
+    "paged_attention", pallas=_paged_pallas, ref=_paged_ref,
+    example=_example,
+    description="GQA decode attention over paged KV (clamped block table)",
+)
+
+
 def paged_attention(
     q: jax.Array,
     k_pages: jax.Array,
     v_pages: jax.Array,
     btab: jax.Array,
     lens: jax.Array,
-    use_pallas: bool | None = None,
+    use_pallas=registry._UNSET,
+    *,
+    kernel_backend: str = "auto",
 ) -> jax.Array:
     """GQA decode attention over paged KV; see kernel.py for layouts."""
-    n_pages = k_pages.shape[1]
-    safe_btab = jnp.clip(btab, 0, n_pages - 1).astype(jnp.int32)
-    if runtime.pick(use_pallas):
-        return _k.paged_attention(
-            q, k_pages, v_pages, safe_btab, lens.astype(jnp.int32),
-            interpret=runtime.interpret(),
-        )
-    return _ref.paged_attention_ref(q, k_pages, v_pages, safe_btab, lens)
+    if use_pallas is not registry._UNSET:
+        kernel_backend = registry.backend_from_use_pallas(use_pallas)
+    return _paged_attention(q, k_pages, v_pages, btab, lens, kernel_backend)
+
+
+@partial(jax.jit, static_argnames=("kernel_backend",))
+def _paged_attention(q, k_pages, v_pages, btab, lens, kernel_backend):
+    return registry.dispatch(
+        "paged_attention", kernel_backend, q, k_pages, v_pages, btab, lens)

@@ -14,11 +14,6 @@ def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def pick(use_pallas: bool | None) -> bool:
-    """Resolve a wrapper's ``use_pallas`` tri-state: None -> TPU only."""
-    return on_tpu() if use_pallas is None else use_pallas
-
-
 def interpret() -> bool:
     """Pallas interpret mode everywhere except real TPU."""
     return not on_tpu()

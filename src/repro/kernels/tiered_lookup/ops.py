@@ -1,4 +1,10 @@
-"""Jitted wrapper: two-level translation (int32 gathers) + payload gather."""
+"""Jitted wrappers + registry entries: row gather and two-level translation.
+
+``gather_rows`` is the raw scalar-prefetched row gather (ids must be
+in-range) — the primitive the consolidator's payload copies dispatch to.
+``tiered_lookup`` composes it with the precomposed gpt∘block_table
+translation and the -1/OOB masking the serving path needs.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,17 +12,93 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import runtime
+from repro.kernels import registry
 from repro.kernels.tiered_lookup import kernel as _k
 from repro.kernels.tiered_lookup import ref as _ref
 
 
-@partial(jax.jit, static_argnames=("use_pallas",))
+def _gather_rows_pallas(
+    rows: jax.Array, ids: jax.Array, *, interpret: bool = False
+) -> jax.Array:
+    flat = ids.reshape(-1).astype(jnp.int32)
+    out = _k.gather_rows(rows, flat, interpret=interpret)
+    return out.reshape(*ids.shape, rows.shape[1])
+
+
+def _gather_rows_ref(rows: jax.Array, ids: jax.Array) -> jax.Array:
+    return rows[ids]
+
+
+def _gather_oracle(rows, ids):
+    import numpy as np
+
+    return np.asarray(rows)[np.asarray(ids)]
+
+
+def _gather_example():
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((16384, 8)).astype(np.float32)
+    ids = rng.integers(0, 16384, size=4096).astype(np.int32)
+    return (jnp.asarray(rows), jnp.asarray(ids)), {}
+
+
+def _tiered_lookup_pallas(
+    rows: jax.Array, fused: jax.Array, token_ids: jax.Array,
+    *, interpret: bool = False,
+) -> jax.Array:
+    shape = token_ids.shape
+    flat = token_ids.reshape(-1)
+    valid = (flat >= 0) & (flat < fused.shape[0])
+    phys = fused[jnp.where(valid, flat, 0)].astype(jnp.int32)
+    out = _k.gather_rows(rows, phys, interpret=interpret)
+    out = jnp.where(valid[:, None], out, 0)
+    return out.reshape(*shape, rows.shape[1])
+
+
+def _lookup_oracle(rows, fused, token_ids):
+    import numpy as np
+
+    rows, fused = np.asarray(rows), np.asarray(fused)
+    flat = np.asarray(token_ids).reshape(-1)
+    out = np.zeros((flat.shape[0], rows.shape[1]), rows.dtype)
+    for i, t in enumerate(flat):
+        if 0 <= t < fused.shape[0]:
+            out[i] = rows[fused[t]]
+    return out.reshape(*np.asarray(token_ids).shape, rows.shape[1])
+
+
+def _lookup_example():
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((8192, 8)).astype(np.float32)
+    fused = rng.permutation(8192).astype(np.int32)
+    tokens = rng.integers(-1, 8192, size=2048).astype(np.int32)
+    return (jnp.asarray(rows), jnp.asarray(fused), jnp.asarray(tokens)), {}
+
+
+registry.register_kernel(
+    "gather_rows", pallas=_gather_rows_pallas, ref=_gather_rows_ref,
+    oracle=_gather_oracle, example=_gather_example,
+    description="scalar-prefetched row gather (consolidation payload copy)",
+)
+registry.register_kernel(
+    "tiered_lookup", pallas=_tiered_lookup_pallas,
+    ref=_ref.tiered_lookup_ref,
+    oracle=_lookup_oracle, example=_lookup_example,
+    description="two-level translation + payload gather (fused TLB)",
+)
+
+
 def tiered_lookup(
     rows: jax.Array,
     fused: jax.Array,
     token_ids: jax.Array,
-    use_pallas: bool | None = None,
+    use_pallas=registry._UNSET,
+    *,
+    kernel_backend: str = "auto",
 ) -> jax.Array:
     """rows[fused[token_ids]] with -1/-OOB ids producing zero rows.
 
@@ -24,12 +106,27 @@ def tiered_lookup(
     ``repro.core.address_space.fused_translation``); recomputed only after a
     consolidation/migration tick -- the beyond-paper 'fused TLB' optimization.
     """
-    if runtime.pick(use_pallas):
-        shape = token_ids.shape
-        flat = token_ids.reshape(-1)
-        valid = (flat >= 0) & (flat < fused.shape[0])
-        phys = fused[jnp.where(valid, flat, 0)].astype(jnp.int32)
-        out = _k.gather_rows(rows, phys, interpret=runtime.interpret())
-        out = jnp.where(valid[:, None], out, 0)
-        return out.reshape(*shape, rows.shape[1])
-    return _ref.tiered_lookup_ref(rows, fused, token_ids)
+    if use_pallas is not registry._UNSET:
+        kernel_backend = registry.backend_from_use_pallas(use_pallas)
+    return _tiered_lookup(rows, fused, token_ids, kernel_backend)
+
+
+@partial(jax.jit, static_argnames=("kernel_backend",))
+def _tiered_lookup(rows, fused, token_ids, kernel_backend):
+    return registry.dispatch(
+        "tiered_lookup", kernel_backend, rows, fused, token_ids)
+
+
+def gather_rows(
+    rows: jax.Array,
+    ids: jax.Array,
+    *,
+    kernel_backend: str = "auto",
+) -> jax.Array:
+    """rows[ids] for in-range ids (any id shape; trailing row axis appended)."""
+    return _gather_rows(rows, ids, kernel_backend)
+
+
+@partial(jax.jit, static_argnames=("kernel_backend",))
+def _gather_rows(rows, ids, kernel_backend):
+    return registry.dispatch("gather_rows", kernel_backend, rows, ids)

@@ -1,0 +1,1 @@
+from repro.kernels.topk.ops import topk_rows  # noqa: F401

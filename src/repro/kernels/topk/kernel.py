@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: row-wise top-k with ``jax.lax.top_k`` tie-breaking.
+
+The ragged batch filter (``filter.select_batches_from_rows``) ranks every
+guest's candidate subpages each maintenance tick — a row-wise top-k over an
+int32 score matrix. The kernel runs one grid step per row with the whole
+row resident in VMEM and peels the maximum ``k`` times: take the row max,
+find its *first* position (min index among ties — exactly ``lax.top_k``'s
+tie-break), record ``(val, idx)``, mask that lane to INT32_MIN, repeat.
+``k`` is small (``max_batches * hp_ratio`` capped by the row length) so the
+serial peel stays cheap next to streaming the row once.
+
+Bit-exactness precondition: inputs must be > INT32_MIN (the mask value).
+Engine scores are ``>= -1`` by construction, and column padding (also
+INT32_MIN) then loses every comparison, so real lanes always win while
+``k <= row_len``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = jnp.iinfo(jnp.int32).min
+
+
+def _topk_kernel(x_ref, vals_ref, idx_ref, *, k: int, width: int):
+    row = x_ref[...].astype(jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1)
+
+    def body(j, carry):
+        row, vals, idx = carry
+        m = row.max()
+        i = jnp.where(row == m, iota, width).min()
+        vals = jax.lax.dynamic_update_slice(vals, m.reshape(1, 1), (0, j))
+        idx = jax.lax.dynamic_update_slice(idx, i.reshape(1, 1), (0, j))
+        row = jnp.where(iota == i, _NEG, row)
+        return row, vals, idx
+
+    _, vals, idx = jax.lax.fori_loop(
+        0, k, body,
+        (row, jnp.zeros((1, k), jnp.int32), jnp.zeros((1, k), jnp.int32)))
+    vals_ref[...] = vals
+    idx_ref[...] = idx
+
+
+def topk_rows(
+    mat: jax.Array,  # int32[rows, width], entries > INT32_MIN
+    k: int,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """(int32[rows, k] values desc, int32[rows, k] first-index ties)."""
+    rows, width = mat.shape
+    assert 0 < k <= width, (k, width)
+    pad = (-width) % 128
+    x = mat.astype(jnp.int32)
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)), constant_values=_NEG)
+    vals, idx = pl.pallas_call(
+        partial(_topk_kernel, k=k, width=width + pad),
+        grid=(rows,),
+        in_specs=[pl.BlockSpec((1, width + pad), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+            jax.ShapeDtypeStruct((rows, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x)
+    return vals, idx

@@ -1,0 +1,47 @@
+"""Jitted wrapper + registry entry for the row-wise top-k kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import registry
+from repro.kernels.topk import kernel as _k
+from repro.kernels.topk import ref as _ref
+
+
+def _topk_pallas(mat: jax.Array, k: int, *, interpret: bool = False):
+    return _k.topk_rows(mat, k, interpret=interpret)
+
+
+def _oracle(mat, k):
+    import numpy as np
+
+    m = np.asarray(mat)
+    # stable descending sort == lax.top_k tie-break (lowest index first)
+    order = np.argsort(-m, axis=1, kind="stable")[:, :k]
+    return np.take_along_axis(m, order, axis=1), order.astype(np.int32)
+
+
+def _example():
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    mat = rng.integers(-1, 64, size=(64, 1024)).astype(np.int32)
+    return (jnp.asarray(mat), 128), {}
+
+
+registry.register_kernel(
+    "topk_rows", pallas=_topk_pallas, ref=_ref.topk_rows_ref,
+    oracle=_oracle, example=_example,
+    description="row-wise top-k, lax.top_k tie-break (ragged batch filter)",
+)
+
+
+@partial(jax.jit, static_argnames=("k", "kernel_backend"))
+def topk_rows(
+    mat: jax.Array, k: int, *, kernel_backend: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """Row-wise ``(values, indices)`` top-k; entries must be > INT32_MIN."""
+    return registry.dispatch("topk_rows", kernel_backend, mat, k)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the row-wise top-k: ``jax.lax.top_k`` itself.
+
+The filter ran this before the kernel registry, so the ``"xla"`` backend is
+the pre-registry engine path verbatim (values descending, ties resolved to
+the lowest index).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def topk_rows_ref(mat: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    return jax.lax.top_k(mat, k)

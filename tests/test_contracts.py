@@ -34,6 +34,7 @@ EXPECTED = (
     "INV-CHUNKING-INVARIANT",
     "INV-CHURN-NOOP-EXACT",
     "INV-CRASH-RECLAIM-COMPLETE",
+    "INV-KERNEL-BACKEND-EXACT",
     "INV-OWNERSHIP-MERGE-EXACT",
     "INV-PRESSURE-NO-OVERCOMMIT",
     "INV-SYNTH-DETERMINISM",

@@ -61,7 +61,7 @@ class TestLintRegistry:
     def test_catalogue(self):
         assert lint.lint_names() == (
             "REPRO-L001", "REPRO-L002", "REPRO-L003", "REPRO-L004",
-            "REPRO-L005",
+            "REPRO-L005", "REPRO-L006",
         )
 
     def test_duplicate_registration_raises(self, monkeypatch):
