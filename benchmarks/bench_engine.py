@@ -37,6 +37,14 @@ the plain driver on the same fleet (``churn_s`` / ``churn_vs_engine``), and
 asserts INV-CRASH-RECLAIM-COMPLETE on the final state
 (``reclaim_complete``).
 
+Multi-host columns (ISSUE 10, DESIGN.md §17): every at-scale grid row with
+``n_windows % 4 == 0`` also times the host-partitioned driver under a
+stride-4 overlapped arbitration exchange (``overlap_s`` /
+``overlap_speedup`` -- 4 windows ride one psum, with trace synthesis
+prefetched behind the in-flight collective), and the payload carries the
+wall clock of a small coordinated 2-process launch (``multihost_s``,
+informational).
+
 Writes ``BENCH_engine.json`` at the repo root (the perf-trajectory artifact
 CI archives) and ``experiments/benchmarks/<NAME>.json`` (``NAME`` comes from
 the shared suite registry, ``benchmarks.registry``).
@@ -133,6 +141,13 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
         return engine.run_series(spec, state, t, mesh=mesh,
                                  host_sharded=True)
 
+    def run_overlap(mg, state, t):
+        # host-partitioned near tier + stride-4 overlapped arbitration
+        # exchange (DESIGN.md §17): 4 windows ride ONE psum, and the next
+        # group's trace synthesis issues behind the in-flight collective
+        return engine.run_series(spec, state, t, mesh=mesh,
+                                 host_sharded=True, arbitration_stride=4)
+
     # on-device synthesis (DESIGN.md §12): no [n_guests, n_windows, k]
     # array anywhere. Same redis workload at the same shapes as the array
     # rows (symmetric_spec guests all carry seed=0; decorrelation comes
@@ -169,6 +184,8 @@ def _bench_case(n_guests: int, logical_per_guest: int, n_windows: int,
     if mesh is not None:
         runners.append(("engine_sharded", run_sharded))
         runners.append(("host_sharded", run_host_sharded))
+        if n_windows % 4 == 0:  # host-sharded stride must divide the chunk
+            runners.append(("overlap", run_overlap))
     if only is not None:
         runners = [(n, r) for n, r in runners if n == only]
         if not runners:
@@ -193,6 +210,11 @@ def _finalize_case(case: dict) -> None:
         # > 1 means the sharded driver beat the single-device engine
         case["sharded_speedup"] = case["engine_s"] / case["engine_sharded_s"]
         case["host_sharded_speedup"] = case["engine_s"] / case["host_sharded_s"]
+    if "overlap_s" in case:
+        # stride-4 overlapped exchange vs the single-device engine (§17);
+        # vs host_sharded_speedup this isolates what batching 4 windows
+        # into one psum buys back
+        case["overlap_speedup"] = case["engine_s"] / case["overlap_s"]
 
 
 def _pod_case(mesh) -> dict:
@@ -298,6 +320,26 @@ def _churn_case() -> dict:
     return case
 
 
+def _multihost_wall() -> dict:
+    """Wall clock of a small coordinated multi-process pod job (DESIGN.md
+    §17): 2 processes x 2 CPU devices running
+    ``scripts/pod_multihost_worker.py`` (32 guests, one live migration).
+    Informational, never gated -- the number is dominated by the two
+    workers' cold jit compiles, but its trajectory catches a broken or
+    pathologically slow distributed launch path."""
+    from repro.launch import multihost
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    worker = os.path.join(root, "scripts", "pod_multihost_worker.py")
+    t0 = time.perf_counter()
+    multihost.launch_check(worker, marker="POD MULTIHOST OK",
+                           args=("32", "1"), num_processes=2,
+                           devices_per_process=2, timeout=900.0, cwd=root)
+    return dict(multihost_s=time.perf_counter() - t0,
+                multihost_processes=2, multihost_devices_per_process=2,
+                multihost_pod_guests=32, multihost_migrations=1)
+
+
 # --------------------------------------------------------------------------
 # per-runner worker subprocesses
 # --------------------------------------------------------------------------
@@ -354,6 +396,8 @@ def run() -> dict:
         # interpreter's constant factor would dominate every larger row
         # without adding information
         row_runners = runner_names + (["pallas"] if i == 0 else [])
+        if mesh is not None and n_windows % 4 == 0:
+            row_runners = row_runners + ["overlap"]
         for runner in row_runners:
             case.update(_run_worker(dict(kind="grid", index=i, runner=runner)))
         _finalize_case(case)
@@ -363,6 +407,9 @@ def run() -> dict:
         host = (f" host_sharded {case['host_sharded_s']*1e3:8.1f} ms"
                 f" (state/dev {case['host_state_scaling']:.2f}x)"
                 if "host_sharded_s" in case else "")
+        overlap = (f" overlap[stride4] {case['overlap_s']*1e3:8.1f} ms"
+                   f" ({case['overlap_speedup']:.2f}x engine)"
+                   if "overlap_s" in case else "")
         pallas = (f" pallas {case['pallas_s']*1e3:8.1f} ms"
                   f" ({case['pallas_vs_engine']:.0f}x engine, interpret)"
                   if "pallas_s" in case else "")
@@ -370,7 +417,8 @@ def run() -> dict:
               f"windows={n_windows:3d}: reference {case['reference_s']*1e3:8.1f} ms"
               f" engine {case['engine_s']*1e3:8.1f} ms"
               f" synth {case['synth_s']*1e3:8.1f} ms"
-              f" speedup {case['speedup']:5.2f}x{sharded}{host}{pallas}")
+              f" speedup {case['speedup']:5.2f}x{sharded}{host}{overlap}"
+              f"{pallas}")
     pod = _run_worker(dict(kind="pod"))
     cases.append(pod)
     print(f"  n_guests={pod['n_guests']:3d} n_logical={pod['n_logical']:6d} "
@@ -392,6 +440,9 @@ def run() -> dict:
     host_sharded_at_scale = [
         c["host_sharded_speedup"] for c in cases
         if c["n_guests"] >= 8 and "host_sharded_speedup" in c]
+    overlap_at_scale = [
+        c["overlap_speedup"] for c in cases
+        if c["n_guests"] >= 8 and "overlap_speedup" in c]
     payload = dict(
         suite=NAME,
         description=registry.describe(NAME),
@@ -425,6 +476,16 @@ def run() -> dict:
         # partitioned carry vs the replicated path (~1/n_devices)
         payload["host_state_scaling"] = max(
             c["host_state_scaling"] for c in cases if "host_state_scaling" in c)
+    if overlap_at_scale:
+        # §17 acceptance: the stride-4 overlapped exchange recovering the
+        # at-scale sharded gap (>= 1.0 means it beats the single-device
+        # engine outright; see ROADMAP for the shared-container caveat)
+        payload["min_overlap_speedup_at_scale"] = min(overlap_at_scale)
+        payload["overlap_recovers_at_scale"] = min(overlap_at_scale) >= 1.0
+    if mesh is not None:
+        payload.update(_multihost_wall())
+        print(f"  multihost launch (2 proc x 2 dev, 32-guest pod + 1 "
+              f"migration): {payload['multihost_s']:.1f} s wall")
     with open("BENCH_engine.json", "w") as f:
         json.dump(payload, f, indent=1, default=float)
     return common.save(NAME, payload)
@@ -449,5 +510,9 @@ if __name__ == "__main__":
               f"{r['min_host_sharded_speedup_at_scale']:.2f}x; per-device "
               f"host state {r['host_state_scaling']:.2f}x of replicated on "
               f"{r['n_devices']} devices")
+    if "min_overlap_speedup_at_scale" in r:
+        print(f"overlapped exchange (stride 4) vs engine at n_guests>=8: "
+              f"{r['min_overlap_speedup_at_scale']:.2f}x -> "
+              f"{'recovered' if r['overlap_recovers_at_scale'] else 'gap'}")
     print(f"churn vs engine: {r['churn_vs_engine']:.2f}x; crash reclaim "
           f"{'complete' if r['reclaim_complete'] else 'INCOMPLETE'}")

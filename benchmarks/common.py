@@ -123,10 +123,13 @@ def default_guest_mesh():
     ``None`` on a single-device host (``engine.run_series(mesh=None)`` then
     degrades to the unsharded driver). The at-scale benchmarks thread this
     through so a multi-device host (or CI's forced
-    ``--xla_force_host_platform_device_count``) runs sharded end-to-end."""
-    from repro.core import sharding
+    ``--xla_force_host_platform_device_count``) runs sharded end-to-end.
+    Delegates to the launch layer's shared constructor, which spans *global*
+    devices -- under ``repro.launch.multihost`` the benchmarks see the
+    multi-process mesh automatically."""
+    from repro.launch import mesh as launch_mesh
 
-    return sharding.guest_mesh()
+    return launch_mesh.guest_mesh()
 
 
 def host_state_report(spec, mesh) -> dict:

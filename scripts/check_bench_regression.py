@@ -75,6 +75,30 @@ def main(baseline_path: str, fresh_path: str) -> int:
         else:
             print(f"churn fleet TCO: fresh {fresh['tco']:.4g} "
                   f"(baseline predates the tco column)")
+    if "min_overlap_speedup_at_scale" in fresh:
+        # informational only: the stride-4 overlapped-exchange column
+        # (DESIGN.md §17). Shared-CI wall clock of a collective-heavy path
+        # is too noisy to gate; the bit-exactness pin is
+        # INV-MULTIHOST-EXACT, and baselines from before the multi-host
+        # runtime have no such column
+        ov = fresh["min_overlap_speedup_at_scale"]
+        if "min_overlap_speedup_at_scale" in baseline:
+            print(f"overlap (stride-4) speedup at scale: baseline "
+                  f"{baseline['min_overlap_speedup_at_scale']:.2f}x, fresh "
+                  f"{ov:.2f}x (informational)")
+        else:
+            print(f"overlap (stride-4) speedup at scale: fresh {ov:.2f}x "
+                  f"(baseline predates the overlap column)")
+    if "multihost_s" in fresh:
+        # informational only: 2-process coordinated-launch wall clock --
+        # dominated by the workers' cold jit compiles
+        if "multihost_s" in baseline:
+            print(f"multihost launch wall: baseline "
+                  f"{baseline['multihost_s']:.1f} s, fresh "
+                  f"{fresh['multihost_s']:.1f} s (informational)")
+        else:
+            print(f"multihost launch wall: fresh {fresh['multihost_s']:.1f} s "
+                  f"(baseline predates the multihost column)")
     if "pallas_vs_engine" in fresh:
         # informational only: the pallas-interpret cost ratio (DESIGN.md
         # §16) on the smallest grid row; interpret-mode wall clock says

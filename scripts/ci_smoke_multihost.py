@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Multi-host CI smoke: a real 2-process x 2-devices-each coordinated CPU
+job (DESIGN.md §17) pinned bit-for-bit against the single-process engine.
+
+The script is BOTH the launcher and the worker. Run standalone (no
+``REPRO_*`` environment) it spawns itself twice via
+``repro.launch.multihost.launch_check`` -- two OS processes joined through
+``jax.distributed`` with gloo CPU collectives, four global devices. Each
+worker then:
+
+* runs the engine matrix (array + synth sources x both host paths) on the
+  global mesh and asserts bit-equality with ``engine.run`` on the same
+  process (INV-MULTIHOST-EXACT);
+* drives the churn stepper with crash/restart/shrink faults across the
+  mesh, performs a LIVE MIGRATION between chunks
+  (``repro.launch.migration``), and asserts the continued run matches the
+  single-process reference doing the same protocol;
+* exercises ``arbitration_stride > 1`` cross-process (the overlapped
+  exchange batches the only cross-host collective).
+
+Shared entry point for CI (``python scripts/ci_smoke_multihost.py``), the
+test suite (``pytest -m smoke``, tests/test_ci_smoke.py) and the
+INV-MULTIHOST-EXACT contract harness.
+"""
+import os
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+NUM_PROCESSES = 2
+DEVICES_PER_PROCESS = 2
+MARKER = "MULTIHOST SMOKE OK"
+
+
+def worker_main() -> int:
+    from repro.launch import multihost
+
+    info = multihost.initialize()
+
+    import jax
+    import numpy as np
+
+    from repro.core import engine, faults, sharding
+    from repro.launch import migration
+
+    assert jax.process_count() == NUM_PROCESSES, jax.process_count()
+    # lane 5 is the migration spare: same geometry/CL as source lane 0
+    guests = tuple(
+        engine.GuestSpec(
+            n_logical=64,
+            cl=(None if g % 3 == 0 or g == 5 else 3 + g % 5),
+            workload=["redis", "masim", "hash"][g % 3], seed=g)
+        for g in range(6))
+    spec, state = engine.build(
+        guests, engine.HostSpec(hp_ratio=16, near_fraction=0.4,
+                                base_elems=2, cl=6))
+    mesh = multihost.global_guest_mesh()
+    assert sharding.mesh_size(mesh) == NUM_PROCESSES * DEVICES_PER_PROCESS
+
+    sources = dict(
+        array=engine.ArrayTrace(
+            engine.guest_traces(spec, n_windows=4, accesses_per_window=128)),
+        synth=engine.SynthTrace(n_windows=4, accesses_per_window=128),
+    )
+    for src_name, source in sources.items():
+        s_ref, a = engine.run(spec, state, source)
+        for host_sharded in (False, True):
+            s_sh, b = engine.run_sharded(spec, state, source, mesh=mesh,
+                                         host_sharded=host_sharded)
+            for k in a:
+                np.testing.assert_array_equal(
+                    a[k], b[k],
+                    err_msg=f"{src_name}, host_sharded={host_sharded}: {k}")
+            for x, y in zip(jax.tree_util.tree_leaves(s_ref),
+                            jax.tree_util.tree_leaves(s_sh)):
+                np.testing.assert_array_equal(
+                    np.asarray(x), np.asarray(y),
+                    err_msg=f"{src_name}, host_sharded={host_sharded}")
+            print(f"[{info.process_id}] OK {src_name} "
+                  f"host_sharded={host_sharded}", flush=True)
+
+    # overlapped arbitration exchange across processes (stride > 1)
+    synth = engine.SynthTrace(n_windows=4, accesses_per_window=128)
+    _, a = engine.run(spec, state, synth, arbitration_stride=2)
+    _, b = engine.run_sharded(spec, state, synth, mesh=mesh,
+                              arbitration_stride=2)
+    for k in a:
+        np.testing.assert_array_equal(a[k], b[k], err_msg=f"stride: {k}")
+    print(f"[{info.process_id}] OK stride=2", flush=True)
+
+    # churn stepper + live migration between chunks, mesh vs single-process
+    fs = faults.no_faults(len(guests)).crash(2, 1).restart(3, 1)
+    active = np.ones(len(guests), bool)
+    active[5] = False  # vacant spare lane, migration destination
+    cs0 = engine.init_churn(spec, state, active=active)
+
+    def protocol(mesh):
+        cs, head = engine.run_churn(spec, cs0, synth, faults=fs, mesh=mesh)
+        cs, man = migration.migrate_guest(spec, cs, src=0, dst=5)
+        tail_src = engine.SynthTrace(n_windows=4, accesses_per_window=128)
+        cs, tail = engine.run_churn(spec, cs, tail_src, faults=fs, mesh=mesh)
+        return cs, head, tail, man
+
+    ref_cs, ref_h, ref_t, man = protocol(None)
+    sh_cs, sh_h, sh_t, man2 = protocol(mesh)
+    assert man == man2, (man, man2)
+    for a, b, what in ((ref_h, sh_h, "head"), (ref_t, sh_t, "tail")):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k],
+                                          err_msg=f"migration {what}: {k}")
+    for x, y in zip(jax.tree_util.tree_leaves(ref_cs),
+                    jax.tree_util.tree_leaves(sh_cs)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg="post-migration churn state")
+    print(f"[{info.process_id}] OK migration "
+          f"({man['total_bytes']} bytes moved)", flush=True)
+    print(f"[{info.process_id}] {MARKER}", flush=True)
+    return 0
+
+
+def main() -> int:
+    from repro.launch import multihost
+
+    if os.environ.get(multihost.ENV_NUM_PROCESSES):
+        return worker_main()  # launched: we are one coordinated worker
+    import time
+
+    t0 = time.perf_counter()
+    results = multihost.launch_check(
+        str(pathlib.Path(__file__).resolve()), marker=MARKER,
+        num_processes=NUM_PROCESSES,
+        devices_per_process=DEVICES_PER_PROCESS, cwd=str(ROOT))
+    dt = time.perf_counter() - t0
+    for r in results:
+        sys.stdout.write(r.stdout)
+    print(f"launched {len(results)} workers, wall {dt:.1f}s")
+    print("multihost smoke: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,41 @@
+"""Worker entry for ``fig9_at_scale.run_pod_multihost`` (DESIGN.md §17).
+
+``jax.distributed.initialize`` must run before the first jax computation,
+and importing the engine stack builds ``jnp`` constants at module import --
+so this entry joins the coordinated job FIRST (``repro.launch.multihost``
+is jax-free at import time) and only then imports the benchmark.
+
+Usage (spawned by :func:`multihost.launch` with the rendezvous env):
+    python scripts/pod_multihost_worker.py <n_guests> <migrations>
+"""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.launch import multihost  # noqa: E402
+
+MARKER = "POD MULTIHOST OK"
+
+
+def main() -> None:
+    n_guests = int(sys.argv[1]) if len(sys.argv) > 1 else 1024
+    migrations = int(sys.argv[2]) if len(sys.argv) > 2 else 2
+    info = multihost.initialize()
+
+    from benchmarks import fig9_at_scale
+
+    out = fig9_at_scale.run_pod(n_guests=n_guests, migrations=migrations)
+    res = out["memtierd"]
+    print(f"{MARKER} p{info.process_id}: {out['n_guests']} guests + "
+          f"{out['n_migrations']} live handoffs on {out['n_devices']} "
+          f"global devices ({info.num_processes} processes); "
+          f"hit tail {res['hit_rate_tail']:.3f}; "
+          f"migration bytes {[m['total_bytes'] for m in res['migrations']]}; "
+          f"collective {out['collective']['bytes_per_run']} B/run")
+
+
+if __name__ == "__main__":
+    main()

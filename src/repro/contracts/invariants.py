@@ -1,12 +1,14 @@
 """The registered invariant contracts (DESIGN.md §15, ledger in
 docs/contracts/INVARIANTS.md).
 
-Nine contracts distilled from six PRs of equivalence pins: the four the
+Ten contracts distilled from eight PRs of equivalence pins: the four the
 DESIGN.md §10 ledger already named (churn no-op, crash reclaim, 2-tier
 special case, pressure no-overcommit), the four that until now lived
 only as bespoke test files (ownership merge, chunking invariance, synth
-determinism, arbitration tie-break), plus the kernel-backend exactness
-pin of the Pallas hot path (DESIGN.md §16). Each ``check_fn`` takes one
+determinism, arbitration tie-break), the kernel-backend exactness
+pin of the Pallas hot path (DESIGN.md §16), plus the multi-host
+exactness pin of the distributed runtime and its overlapped arbitration
+exchange (DESIGN.md §17). Each ``check_fn`` takes one
 :class:`~repro.contracts.draws.ContractDraw` and raises ``AssertionError``
 on violation; the harness in ``tests/test_contracts.py`` drives them under
 hypothesis over the shared strategies.
@@ -155,7 +157,7 @@ def check_synth_determinism(draw: ContractDraw):
     "INV-ARBITRATION-TIEBREAK", "§11",
     drivers=("run_sharded(host_sharded=True)",),
     pins=("tests/test_host_partition_edges.py::TestArbitrationTies",),
-    max_examples=30,
+    max_examples=75,
 )
 def check_arbitration_tiebreak(draw: ContractDraw):
     """Per-partition ``nominate`` + replicated ``rank_select`` reproduces
@@ -300,7 +302,7 @@ def check_crash_reclaim_complete(draw: ContractDraw):
         "tests/test_tiers_properties.py::test_inv_tier_2specialcase_exact",
         "scripts/ci_smoke_tiers.py",
     ),
-    max_examples=20,
+    max_examples=40,
 )
 def check_tier_2specialcase_exact(draw: ContractDraw):
     """Every legacy policy tick equals its ``two_tier`` flow
@@ -330,7 +332,7 @@ def check_tier_2specialcase_exact(draw: ContractDraw):
     "INV-PRESSURE-NO-OVERCOMMIT", "§13/§14",
     drivers=("run_churn",),
     pins=("tests/test_tiers_properties.py::test_inv_pressure_no_overcommit",),
-    max_examples=20,
+    max_examples=40,
 )
 def check_pressure_no_overcommit(draw: ContractDraw):
     """The pressure controller never promotes, demotes at most ``budget``
@@ -417,3 +419,72 @@ def check_kernel_backend_exact(draw: ContractDraw):
     assert_series_equal(
         ref, {k: v for k, v in se.items() if k not in engine._CHURN_SERIES},
         "pallas run_churn series diverged")
+
+
+# --------------------------------------------------------------------------
+# §17 — multi-host exactness
+# --------------------------------------------------------------------------
+_MULTIHOST_JOB_VERIFIED = False
+
+
+@register_contract(
+    "INV-MULTIHOST-EXACT", "§17",
+    drivers=("run", "run_sharded", "run_sharded(host_sharded=True)",
+             "run_churn"),
+    pins=(
+        "tests/test_multihost.py::TestMultiprocessMatrix",
+        "scripts/ci_smoke_multihost.py",
+    ),
+    max_examples=2,
+)
+def check_multihost_exact(draw: ContractDraw):
+    """An engine run spanning OS processes, and any ``arbitration_stride``
+    batching of its exchange, is bit-identical to the single-process
+    default: stride=1 compiles to the pre-knob program, a dividing
+    stride>1 matches across ``run``/``run_sharded`` on both host paths,
+    and a coordinated 2-process job reproduces the in-process run."""
+    from repro.core import engine, sharding
+
+    spec, s0 = build_engine(draw)
+    source = trace_source(draw, spec)
+    ref_state, ref = engine.run(
+        spec, s0, source, policy=draw.policy, use_gpac=draw.use_gpac)
+    s1_state, s1 = engine.run(  # stride=1 is the exact pre-knob program
+        spec, s0, source, policy=draw.policy, use_gpac=draw.use_gpac,
+        arbitration_stride=1)
+    assert_states_equal(ref_state, s1_state, "stride=1 state diverged")
+    assert_series_equal(ref, s1, "stride=1 series diverged")
+
+    # smallest prime factor of n_windows: a dividing stride > 1 when one
+    # exists (prime window counts only get the stride=1 pin above)
+    stride = next((d for d in range(2, draw.n_windows + 1)
+                   if draw.n_windows % d == 0), 1)
+    if stride > 1:
+        st_state, st = engine.run(
+            spec, s0, source, policy=draw.policy, use_gpac=draw.use_gpac,
+            arbitration_stride=stride)
+        mesh = sharding.guest_mesh(1)  # full shard_map path on one device
+        sh_state, sh = engine.run_sharded(
+            spec, s0, source, mesh=mesh, policy=draw.policy,
+            use_gpac=draw.use_gpac, host_sharded=draw.host_sharded,
+            arbitration_stride=stride)
+        assert_states_equal(
+            st_state, sh_state, f"stride={stride} sharded state diverged")
+        assert_series_equal(
+            st, sh, f"stride={stride} sharded series diverged")
+
+    # the coordinated 2-process x 2-device job, once per test process (it
+    # pays two jax inits + compiles; the launched matrix itself asserts
+    # bit-equality against each worker's own single-process run)
+    global _MULTIHOST_JOB_VERIFIED
+    if not _MULTIHOST_JOB_VERIFIED:
+        import pathlib
+
+        from repro.launch import multihost
+
+        root = pathlib.Path(__file__).resolve().parents[3]
+        smoke = root / "scripts" / "ci_smoke_multihost.py"
+        multihost.launch_check(str(smoke), marker="MULTIHOST SMOKE OK",
+                               num_processes=2, devices_per_process=2,
+                               cwd=str(root))
+        _MULTIHOST_JOB_VERIFIED = True

@@ -158,6 +158,15 @@ class EngineSpec:
     # hot-path kernel dispatch ("xla" | "pallas" | "auto", DESIGN.md §16);
     # static, so it rides every jit cache key with the rest of the spec
     kernel_backend: str = "auto"
+    # run the host arbitration tick only every this-many windows (DESIGN.md
+    # §17): telemetry, GPAC and the pressure controller still run every
+    # window, but promotion/demotion arbitration -- and on the
+    # host-partitioned path its candidate-exchange collective -- is batched
+    # over the stride. 1 (the default) is the paper's per-window tick,
+    # bit-identical to the pre-knob engine on every driver; >1 trades
+    # arbitration latency for collective count (the HybridTier-style
+    # coarse-signal trade-off). Static, like kernel_backend.
+    arbitration_stride: int = 1
 
     @property
     def n_guests(self) -> int:
@@ -658,7 +667,10 @@ def _window(
         # tables; disjoint segments make this bit-equal to N sequential
         # per-guest gpac_maintenance calls (see run_reference)
         state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
-    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
+    state = tiering.strided_tick(
+        cfg, state, policy, stride=spec.arbitration_stride, budget=budget,
+        tiers=spec.tiers,
+    )
     state = telemetry.end_window(cfg, state)
     return state, run_collectors(spec, state, window, collect)
 
@@ -699,6 +711,7 @@ def step(
     faults_row: dict | None = None,
     mesh=None,
     slack: int = 1,
+    arbitration_stride: int | None = None,
 ) -> tuple:
     """One engine window (jitted single-window entry point).
 
@@ -712,13 +725,14 @@ def step(
             spec, state, accesses, faults_row=faults_row, mesh=mesh,
             policy=policy, backend=backend, use_gpac=use_gpac,
             max_batches=max_batches, budget=budget, slack=slack,
-            collect=tuple(collect),
+            collect=tuple(collect), arbitration_stride=arbitration_stride,
         )
     if faults_row is not None or mesh is not None:
         raise TypeError(
             "faults_row/mesh need the steady-state stepper: pass a "
             "ChurnState carry (engine.init_churn)"
         )
+    spec = _with_arbitration_stride(spec, arbitration_stride)
     return _step_impl(
         spec.canonical(), state, accesses, policy, backend, use_gpac,
         max_batches, budget, tuple(collect),
@@ -857,6 +871,23 @@ def _with_kernel_backend(spec: EngineSpec, kernel_backend: str | None) -> Engine
     return dataclasses.replace(spec, kernel_backend=kernel_backend)
 
 
+def _with_arbitration_stride(
+    spec: EngineSpec, arbitration_stride: int | None,
+) -> EngineSpec:
+    """Fold a driver-level ``arbitration_stride=`` override into the spec
+    (static field -> its own jit cache entries, like ``kernel_backend``).
+    ``None`` keeps the spec's own stride; the result always validates, so a
+    spec hand-built with a bad stride fails fast at any driver."""
+    if arbitration_stride is not None:
+        spec = dataclasses.replace(
+            spec, arbitration_stride=int(arbitration_stride))
+    s = spec.arbitration_stride
+    if not isinstance(s, int) or isinstance(s, bool) or s < 1:
+        raise ValueError(
+            f"arbitration_stride must be an int >= 1, got {s!r}")
+    return spec
+
+
 def run(
     spec: EngineSpec,
     state: TieredState,
@@ -872,6 +903,7 @@ def run(
     strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
     kernel_backend: str | None = None,
+    arbitration_stride: int | None = None,
 ) -> tuple[TieredState, dict]:
     """Drive every window through the scan-fused engine.
 
@@ -898,6 +930,7 @@ def run(
     """
     source = _coerce_source(source, traces)
     spec = _with_kernel_backend(spec, kernel_backend)
+    spec = _with_arbitration_stride(spec, arbitration_stride)
     collect = _validate_run_args(spec, source, collect)
     n_w = source.n_windows
     if n_w == 0:
@@ -951,6 +984,7 @@ def run_sharded(
     strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
     kernel_backend: str | None = None,
+    arbitration_stride: int | None = None,
 ) -> tuple[TieredState, dict]:
     """:func:`run`, device-sharded over the guest axis (DESIGN.md §9, §11).
 
@@ -986,6 +1020,7 @@ def run_sharded(
 
     source = _coerce_source(source, traces)
     spec = _with_kernel_backend(spec, kernel_backend)
+    spec = _with_arbitration_stride(spec, arbitration_stride)
     if mesh is None:
         mesh = sharding.guest_mesh()
     if mesh is None:
@@ -1021,6 +1056,23 @@ def run_sharded(
                 f"run them on the replicated host state"
             )
         tiering.sharded_tick_fns(policy)  # fail fast on unsupported policies
+        stride = spec.arbitration_stride
+        if stride > 1:
+            # the host-partitioned driver batches the candidate exchange to
+            # one collective per stride *group*, so groups must tile every
+            # chunk and start on an arbitration boundary (fresh states do:
+            # epoch 0); the replicated paths gate on the carried epoch and
+            # have no such constraint
+            if n_w % stride:
+                raise ValueError(
+                    f"host_sharded arbitration_stride={stride} must divide "
+                    f"the run's n_windows={n_w}")
+            if int(np.asarray(state.epoch)) % stride:
+                raise ValueError(
+                    f"host_sharded arbitration_stride={stride} needs the "
+                    f"state's epoch ({int(np.asarray(state.epoch))}) on an "
+                    f"arbitration boundary (epoch % stride == 0); pass "
+                    f"host_sharded=False to resume mid-stride")
         _, tables = sharding.host_tables(spec, n_shards)
 
         def chunk_fn(st, chunk):
@@ -1042,6 +1094,12 @@ def run_sharded(
             )
 
     wps = _round_wps(n_w, windows_per_step, strict_wps)
+    if host_sharded and spec.arbitration_stride > 1 and (
+            wps % spec.arbitration_stride):
+        raise ValueError(
+            f"host_sharded arbitration_stride={spec.arbitration_stride} "
+            f"must divide the chunk size (windows_per_step resolved to "
+            f"{wps}); pick a multiple of the stride")
     return _drive_chunks(chunk_fn, state, by_window, wps, collect)
 
 
@@ -1212,7 +1270,10 @@ def _churn_window(
     )
     if use_gpac:
         state = gpac.gpac_maintenance_ragged(spec, state, backend, max_batches)
-    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
+    state = tiering.strided_tick(
+        cfg, state, policy, stride=spec.arbitration_stride, budget=budget,
+        tiers=spec.tiers,
+    )
     state, engaged, press = tiering.pressure_tick(
         cfg, state, near_cap, cs.engaged, cs.pressure,
         budget=budget, slack=slack, tiers=spec.tiers,
@@ -1365,6 +1426,7 @@ def run_churn(
     strict_wps: bool = False,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
     kernel_backend: str | None = None,
+    arbitration_stride: int | None = None,
 ) -> tuple[ChurnState, dict]:
     """Drive ``source.n_windows`` windows of the steady-state churn engine.
 
@@ -1397,6 +1459,7 @@ def run_churn(
         )
     source = _coerce_source(source, None)
     spec = _with_kernel_backend(spec, kernel_backend)
+    spec = _with_arbitration_stride(spec, arbitration_stride)
     collect = _validate_run_args(spec, source, collect)
     n_w = source.n_windows
     if n_w == 0:
@@ -1477,6 +1540,7 @@ def step_churn(
     budget: int = 64,
     slack: int = 1,
     collect: tuple[str, ...] = ("hits", "near_blocks"),
+    arbitration_stride: int | None = None,
 ) -> tuple[ChurnState, dict]:
     """One churn window (the steady-state single-step entry point;
     :func:`step` dispatches here when handed a :class:`ChurnState`).
@@ -1515,6 +1579,7 @@ def step_churn(
         spec, cs, ArrayTrace(acc[:, None, :]), faults=ft, mesh=mesh,
         policy=policy, backend=backend, use_gpac=use_gpac,
         max_batches=max_batches, budget=budget, slack=slack, collect=collect,
+        arbitration_stride=arbitration_stride,
     )
     return cs, {k: v[0] for k, v in series.items()}
 

@@ -69,17 +69,62 @@ AXIS = "guest"
 
 
 # --------------------------------------------------------------------------
+# collective-volume accounting (DESIGN.md §17)
+# --------------------------------------------------------------------------
+# Per-site psum payload bytes, recorded as a plain-Python side effect while
+# the chunk function is *traced* -- tracer shapes/dtypes are concrete, so
+# the numbers are the exact per-call payloads of the compiled program.
+# Sizes persist until the next reset; a fully cache-hit rerun does not
+# retrace and therefore leaves previously recorded sites in place, so reset
+# before the run whose volume you want to attribute.
+_COLLECTIVE_BYTES: dict[str, int] = {}
+
+
+def _psum_counted(site: str, tree):
+    """``jax.lax.psum`` plus trace-time byte accounting of the payload."""
+    _COLLECTIVE_BYTES[site] = sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(tree)
+    )
+    return jax.lax.psum(tree, AXIS)
+
+
+def reset_collective_bytes() -> None:
+    """Clear the per-site psum payload record (call before the run)."""
+    _COLLECTIVE_BYTES.clear()
+
+
+def collective_bytes() -> dict[str, int]:
+    """Per-site psum payload bytes from the most recent trace.
+
+    Sites: ``merge_window`` (replicated-host paths, one psum per window;
+    the only collective the churn driver issues), ``host_exchange`` (the
+    host-partitioned arbitration exchange, one psum per stride group) and
+    ``host_chunk_exit`` (host-partitioned chunk-boundary reconstruction,
+    one psum per chunk).
+    """
+    return dict(_COLLECTIVE_BYTES)
+
+
+# --------------------------------------------------------------------------
 # mesh + padding helpers
 # --------------------------------------------------------------------------
 def guest_mesh(n_devices: int | None = None):
-    """1-D mesh over ``n_devices`` local devices along the ``"guest"`` axis.
+    """1-D mesh over ``n_devices`` devices along the ``"guest"`` axis.
 
-    ``n_devices=None`` uses every local device and returns ``None`` when only
-    one is available (the no-mesh degradation: callers fall back to the
-    unsharded driver). Pass an explicit count to force a mesh -- including a
-    1-device mesh, which exercises the full shard_map path.
+    ``n_devices=None`` uses every device and returns ``None`` when only one
+    is available (the no-mesh degradation: callers fall back to the unsharded
+    driver). Pass an explicit count to force a mesh -- including a 1-device
+    mesh, which exercises the full shard_map path.
+
+    In a multi-process job (``launch.multihost.initialize``,
+    ``jax.process_count() > 1``) the mesh spans every process's devices and
+    must cover all of them: a partial mesh would leave some processes holding
+    no shard of the SPMD program, so any ``n_devices`` below the global count
+    is rejected.
     """
-    avail = jax.local_device_count()
+    avail = jax.device_count()
+    multiproc = jax.process_count() > 1
     if n_devices is None:
         if avail == 1:
             return None
@@ -87,6 +132,12 @@ def guest_mesh(n_devices: int | None = None):
     if n_devices > avail:
         raise ValueError(
             f"guest_mesh: asked for {n_devices} devices, have {avail}"
+        )
+    if multiproc and n_devices != avail:
+        raise ValueError(
+            f"guest_mesh: a multi-process mesh must span all "
+            f"{avail} global devices ({jax.process_count()} processes), "
+            f"got n_devices={n_devices}"
         )
     return jax.make_mesh((n_devices,), (AXIS,))
 
@@ -201,7 +252,7 @@ def merge_window(
                 local.far_pool, own_slot[cfg.n_near :][:, None, None]
             ),
         )
-    merged = jax.lax.psum(contrib, AXIS)
+    merged = _psum_counted("merge_window", contrib)
     state = dataclasses.replace(
         base,
         guest_counts=merged["guest_counts"],
@@ -296,7 +347,10 @@ def _sharded_window(
     )
     near_all, far_all = merged_extras[0], merged_extras[1]
     # ---- 4. host tick + window roll (replicated) ------------------------
-    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
+    state = tiering.strided_tick(
+        cfg, state, policy, stride=spec.arbitration_stride, budget=budget,
+        tiers=spec.tiers,
+    )
     state = telemetry.end_window(cfg, state)
     window = dict(
         near_hits=near_all[: spec.n_guests],
@@ -492,7 +546,10 @@ def _churn_sharded_window(
     )
     near_all, far_all = merged_extras[0], merged_extras[1]
     # ---- 4. host + pressure ticks, window roll (replicated) --------------
-    state = tiering.tick(cfg, state, policy, budget=budget, tiers=spec.tiers)
+    state = tiering.strided_tick(
+        cfg, state, policy, stride=spec.arbitration_stride, budget=budget,
+        tiers=spec.tiers,
+    )
     state, engaged, press = tiering.pressure_tick(
         cfg, state, near_cap, cs.engaged, cs.pressure,
         budget=budget, slack=slack, tiers=spec.tiers,
@@ -651,9 +708,11 @@ def run_chunk_churn_sharded(
 #     (block_table writes); no payload crosses devices, and ``slot_owner``
 #     (the label inverse) is reconstructed once per chunk.
 #
-# Per window there is exactly ONE collective: per-partition tick candidate
-# sets (repro.core.tiering's sharded (prepare, apply) pairs), a few scalar
-# sums, and the per-guest collector rows share one psum. The full TieredState
+# Per arbitration group (``EngineSpec.arbitration_stride`` windows; one
+# window by default) there is exactly ONE collective: per-partition tick
+# candidate sets (repro.core.tiering's sharded (prepare, apply) pairs), a
+# few scalar sums, and the stacked per-window collector rows share one
+# psum. The full TieredState
 # is materialized only at chunk boundaries (slice on entry, ownership-psum on
 # exit), so per-device host-state bytes scale ~1/n_shards for the whole scan.
 # ==========================================================================
@@ -876,11 +935,11 @@ def _near_scalar_delta(cfg: GpacConfig, swaps) -> jax.Array:
     return d
 
 
-def _host_sharded_window(
+def _host_sharded_group(
     spec,
     n_shards: int,
     carry: dict,
-    accesses: jax.Array,  # int32[G_loc, k]
+    accs: jax.Array,  # int32[stride, G_loc, k]
     logical_lo: jax.Array,
     logical_pad: jax.Array,
     hp_pad: jax.Array,
@@ -893,13 +952,36 @@ def _host_sharded_window(
     max_batches: int,
     budget: int,
     collect: tuple[str, ...],
+    prefetch=None,  # SynthTrace overlap: ws -> int32[stride, G_loc, k]
+    w_next: jax.Array | None = None,
 ) -> tuple[dict, dict]:
-    """One engine window on the partitioned host state. Bit-for-bit equal to
-    ``engine._window`` on the unpadded guests; exactly one collective."""
+    """One arbitration *group* -- ``spec.arbitration_stride`` engine windows
+    -- on the partitioned host state, with exactly ONE collective for the
+    whole group. Bit-for-bit equal to ``engine._window`` at the same stride
+    on the unpadded guests (stride 1 is the classic one-window body).
+
+    Every window runs its access + GPAC phases and its telemetry roll
+    locally; only the group's last window nominates tick candidates
+    (arbitrating on the stride's accumulated telemetry). The per-window
+    collector rows -- hits, pre-tick near-block counts, tier vectors,
+    snapshot deltas -- are stacked and ride the last window's candidate
+    exchange, so ``stride`` windows cost one psum instead of ``stride``.
+    The arbitrated swap deltas correct only the last window's emissions:
+    the earlier windows ran no tick, so their pre-tick counts *are* their
+    post-window placement.
+
+    ``prefetch`` overlaps the collective with trace synthesis (DESIGN.md
+    §17): issued right after the psum, the next group's accesses
+    (``prefetch(w_next)``) depend only on replicated window indices --
+    never on the merged result -- so XLA can schedule the synthesis while
+    the exchange is in flight. Streams are counter-based on absolute
+    indices, so the overlap is bit-invisible.
+    """
     from repro.core import consolidator
     from repro.core import filter as pfilter
 
     cfg = spec.cfg
+    stride = spec.arbitration_stride
     gpt, rmap = carry["gpt"], carry["rmap"]
     gc, ih = carry["guest_counts"], carry["ipt_hist"]
     epoch, stats = carry["epoch"], dict(carry["stats"])
@@ -907,88 +989,119 @@ def _host_sharded_window(
     # replicated cumulative stats for the snapshot collector: per-device
     # deltas ride the arbitration psum, replicated tick deltas add directly
     gstats = dict(carry["gstats"]) if "gstats" in carry else None
-    stats0 = dict(stats)
-
-    # ---- 1. access phase (local: own guests touch own blocks) -----------
-    ids = jnp.where(accesses >= 0, accesses + logical_lo[:, None], -1)
-    valid = (ids >= 0) & (ids < cfg.n_logical)
-    hp = gpt[jnp.where(valid, ids, 0)] // cfg.hp_ratio
-    bt_view = _spread_hp(loc["bt"], hp_ids, cfg.n_gpa_hp, jnp.int32(cfg.n_gpa_hp))
-    slot = bt_view[hp]
-    near_loc = (valid & (slot < cfg.n_near)).sum(axis=1).astype(jnp.int32)
-    far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1).astype(jnp.int32)
+    epoch_in = epoch
     kb = spec.kernel_backend
-    h = asp.access_histogram(cfg, ids, valid, kb)
-    gc = gc + h
-    inc_full = asp.host_histogram(cfg, gpt, h, kb)
-    inc_loc = jnp.where(hp_ids >= 0, inc_full[jnp.maximum(hp_ids, 0)], 0)
-    loc["hc"] = loc["hc"] + inc_loc
-    loc["lt"] = jnp.where(inc_loc > 0, jnp.maximum(loc["lt"], epoch), loc["lt"])
-    stats["near_hits"] = stats["near_hits"] + near_loc.sum()
-    stats["far_hits"] = stats["far_hits"] + far_loc.sum()
-
-    # ---- 2. GPAC phase (own segment rows, hp-owned payload) -------------
-    if use_gpac:
-        re_view = _spread_hp(loc["re"], hp_ids, cfg.n_gpa_hp, jnp.int32(-1))
-        view = _view_state(cfg, gpt, rmap, gc, ih, re_view, epoch, stats)
-        hot = telemetry.hot_mask(cfg, view, backend)
-        score = pfilter.candidate_score(
-            cfg, view, hot, jnp.asarray(spec.cl_per_logical()), kb
-        )
-        batches = pfilter.select_batches_from_rows(
-            cfg, score, logical_pad, max_batches, kb
-        )
-        gpt, rmap, loc["data"], loc["re"], stats = (
-            consolidator.consolidate_rounds_local(
-                cfg, gpt, rmap, loc["data"], loc["re"], epoch, stats,
-                batches, hp_pad, hp_lo, kb,
-            )
-        )
-
-    # ---- 3. nominate + the window's single collective -------------------
-    alloc_full = (rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) != FREE).any(axis=1)
-    L = dict(
-        hp_ids=hp_ids, hp_lo=hp_lo, hp_hi=hp_hi, bt=loc["bt"], hc=loc["hc"],
-        hh=loc["hh"], lt=loc["lt"],
-        alloc=jnp.where(hp_ids >= 0, alloc_full[jnp.maximum(hp_ids, 0)], False),
-    )
+    tv = spec.tier_vector if "tco" in collect else None
     prepare, apply = tiering.sharded_tick_fns(policy)
     if spec.tiers is not None:
         prepare = partial(prepare, tiers=spec.tiers)
         apply = partial(apply, tiers=spec.tiers)
-    payload = prepare(cfg, L, budget)
+
+    per_win = []
+    L = payload = None
+    for j in range(stride):
+        stats0 = dict(stats)
+        accesses = accs[j]
+        # ---- 1. access phase (local: own guests touch own blocks) -------
+        ids = jnp.where(accesses >= 0, accesses + logical_lo[:, None], -1)
+        valid = (ids >= 0) & (ids < cfg.n_logical)
+        hp = gpt[jnp.where(valid, ids, 0)] // cfg.hp_ratio
+        bt_view = _spread_hp(
+            loc["bt"], hp_ids, cfg.n_gpa_hp, jnp.int32(cfg.n_gpa_hp))
+        slot = bt_view[hp]
+        near_loc = (valid & (slot < cfg.n_near)).sum(axis=1).astype(jnp.int32)
+        far_loc = (valid & (slot >= cfg.n_near)).sum(axis=1).astype(jnp.int32)
+        h = asp.access_histogram(cfg, ids, valid, kb)
+        gc = gc + h
+        inc_full = asp.host_histogram(cfg, gpt, h, kb)
+        inc_loc = jnp.where(hp_ids >= 0, inc_full[jnp.maximum(hp_ids, 0)], 0)
+        loc["hc"] = loc["hc"] + inc_loc
+        loc["lt"] = jnp.where(
+            inc_loc > 0, jnp.maximum(loc["lt"], epoch), loc["lt"])
+        stats["near_hits"] = stats["near_hits"] + near_loc.sum()
+        stats["far_hits"] = stats["far_hits"] + far_loc.sum()
+
+        # ---- 2. GPAC phase (own segment rows, hp-owned payload) ---------
+        if use_gpac:
+            re_view = _spread_hp(loc["re"], hp_ids, cfg.n_gpa_hp, jnp.int32(-1))
+            view = _view_state(cfg, gpt, rmap, gc, ih, re_view, epoch, stats)
+            hot = telemetry.hot_mask(cfg, view, backend)
+            score = pfilter.candidate_score(
+                cfg, view, hot, jnp.asarray(spec.cl_per_logical()), kb
+            )
+            batches = pfilter.select_batches_from_rows(
+                cfg, score, logical_pad, max_batches, kb
+            )
+            gpt, rmap, loc["data"], loc["re"], stats = (
+                consolidator.consolidate_rounds_local(
+                    cfg, gpt, rmap, loc["data"], loc["re"], epoch, stats,
+                    batches, hp_pad, hp_lo, kb,
+                )
+            )
+
+        # ---- 3a. this window's share of the group collective ------------
+        # local per-tier access and pre-tick block counts ride the group
+        # psum; the arbitrated swap deltas correct the last window's blocks
+        # to post-tick replicatedly, so the priced placement is
+        # bit-identical to the replicated collector's. Snapshot scalars
+        # likewise: this device's window stat deltas (access + GPAC phases;
+        # the tick's are replicated and added after arbitration) and its
+        # local allocated / allocated-near block counts.
+        alloc_full = (
+            rmap.reshape(cfg.n_gpa_hp, cfg.hp_ratio) != FREE).any(axis=1)
+        alloc_loc = jnp.where(
+            hp_ids >= 0, alloc_full[jnp.maximum(hp_ids, 0)], False)
+        contrib = dict(
+            near=_spread_rows(near_loc, n_shards),
+            far=_spread_rows(far_loc, n_shards),
+        )
+        if "near_blocks" in collect:
+            contrib["near_blocks"] = _spread_rows(
+                _near_blocks_local(cfg, alloc_loc, loc["bt"], hp_lo, hp_pad),
+                n_shards,
+            )
+        if "tco" in collect:
+            contrib["tier_hits"] = tiers_mod.tier_hit_counts(tv, slot, valid)
+            contrib["tier_blocks"] = tiers_mod.tier_block_counts(
+                tv, loc["bt"], alloc_loc)
+        if gstats is not None:
+            contrib["stat_delta"] = {k: stats[k] - stats0[k] for k in stats}
+            contrib["alloc_near"] = (
+                alloc_loc & (loc["bt"] < cfg.n_near)).sum()
+            contrib["alloc_tot"] = alloc_loc.sum()
+        per_win.append(contrib)
+
+        if j < stride - 1:
+            # tick-less window roll: arbitration waits for the group's last
+            # window, telemetry keeps accumulating across the stride
+            ih = ((ih << 1) | (gc > 0).astype(jnp.uint8)).astype(jnp.uint8)
+            loc["hh"] = ((loc["hh"] << 1)
+                         | (loc["hc"] > 0).astype(jnp.uint8)).astype(jnp.uint8)
+            gc = jnp.zeros_like(gc)
+            loc["hc"] = jnp.zeros_like(loc["hc"])
+            epoch = epoch + 1
+        else:
+            # ---- 3b. nominate on the stride's accumulated telemetry -----
+            L = dict(
+                hp_ids=hp_ids, hp_lo=hp_lo, hp_hi=hp_hi, bt=loc["bt"],
+                hc=loc["hc"], hh=loc["hh"], lt=loc["lt"], alloc=alloc_loc,
+            )
+            payload = prepare(cfg, L, budget)
+
+    # ---- 3c. the group's single collective ------------------------------
     exchange = dict(
         cands=jax.tree_util.tree_map(
             lambda x: _place_block(x, n_shards), payload["cands"]
         ),
         sums=payload["sums"],
-        near=_spread_rows(near_loc, n_shards),
-        far=_spread_rows(far_loc, n_shards),
+        win=jax.tree_util.tree_map(lambda *x: jnp.stack(x), *per_win),
     )
-    if "near_blocks" in collect:
-        exchange["near_blocks"] = _spread_rows(
-            _near_blocks_local(cfg, L["alloc"], loc["bt"], hp_lo, hp_pad),
-            n_shards,
-        )
-    if "tco" in collect:
-        # local per-tier access and pre-tick block counts ride the same
-        # psum; the arbitrated swap deltas correct blocks to post-tick
-        # replicatedly (tier_count_delta), so the priced placement is
-        # bit-identical to the replicated collector's
-        tv = spec.tier_vector
-        exchange["tier_hits"] = tiers_mod.tier_hit_counts(tv, slot, valid)
-        exchange["tier_blocks"] = tiers_mod.tier_block_counts(
-            tv, loc["bt"], L["alloc"])
-    if gstats is not None:
-        # snapshot scalars ride the same collective: this device's window
-        # stat deltas so far (access + GPAC phases; the tick's are
-        # replicated and added after arbitration) and its local allocated /
-        # allocated-near block counts (pre-tick; the arbitrated swaps
-        # correct near counts replicatedly)
-        exchange["stat_delta"] = {k: stats[k] - stats0[k] for k in stats}
-        exchange["alloc_near"] = (L["alloc"] & (loc["bt"] < cfg.n_near)).sum()
-        exchange["alloc_tot"] = L["alloc"].sum()
-    merged = jax.lax.psum(exchange, AXIS)
+    merged = _psum_counted("host_exchange", exchange)
+    if prefetch is not None:
+        # next group's accesses: no data dependency on ``merged``, so the
+        # synthesis can run while the exchange is in flight
+        acc_next = prefetch(w_next)
+    mwin = merged["win"]
 
     # ---- 4. arbitration: replicated decisions, local block-table writes -
     loc["bt"], tick_stats, swaps = apply(
@@ -997,62 +1110,69 @@ def _host_sharded_window(
     on_d0 = jax.lax.axis_index(AXIS) == 0
     for s in tick_stats:  # replicated deltas: count them on one device only
         stats[s] = stats[s] + jnp.where(on_d0, tick_stats[s], 0)
-    if gstats is not None:
-        gstats = {
-            k: gstats[k] + merged["stat_delta"][k] + tick_stats.get(k, 0)
-            for k in gstats
-        }
 
-    # ---- 5. window roll (telemetry.end_window, split by residency) ------
+    # ---- 5. last window's roll (telemetry.end_window, by residency) -----
     ih = ((ih << 1) | (gc > 0).astype(jnp.uint8)).astype(jnp.uint8)
-    loc["hh"] = ((loc["hh"] << 1) | (loc["hc"] > 0).astype(jnp.uint8)).astype(jnp.uint8)
+    loc["hh"] = ((loc["hh"] << 1)
+                 | (loc["hc"] > 0).astype(jnp.uint8)).astype(jnp.uint8)
     gc = jnp.zeros_like(gc)
     loc["hc"] = jnp.zeros_like(loc["hc"])
     epoch = epoch + 1
 
-    # ---- 6. collector outputs (host-sharded implementations) ------------
-    out = {}
-    for name in collect:
-        if name == "hits":
-            emitted = dict(
-                near_hits=merged["near"][: spec.n_guests],
-                far_hits=merged["far"][: spec.n_guests],
-            )
-        elif name == "near_blocks":
-            pre = merged["near_blocks"]
-            emitted = dict(
-                near_blocks=(pre + _near_blocks_delta(spec, swaps, pre.shape[0]))[
-                    : spec.n_guests
-                ]
-            )
-        elif name == "snapshot":
-            # metrics.device_snapshot reconstructed from the exchange: same
-            # int sums -> bit-identical float divisions
-            alloc_near = merged["alloc_near"] + _near_scalar_delta(cfg, swaps)
-            rss = jnp.maximum(merged["alloc_tot"], 1)
-            emitted = dict(
-                epoch=epoch,
-                near_usage=alloc_near / rss,
-                near_capacity_used=alloc_near / cfg.n_near,
-                hit_rate=gstats["near_hits"] / jnp.maximum(
-                    gstats["near_hits"] + gstats["far_hits"], 1),
-                **gstats,
-            )
-        elif name == "tco":
-            tv = spec.tier_vector
-            blocks = merged["tier_blocks"] + tiers_mod.tier_count_delta(
-                tv, swaps)
-            emitted = tiers_mod.tco_metrics(cfg, tv, blocks,
-                                            merged["tier_hits"])
-        else:  # pragma: no cover - engine.run_sharded validates upfront
-            raise ValueError(f"collector {name!r} has no host-sharded form")
-        clash = set(emitted) & set(out)
-        if clash:
-            raise ValueError(
-                f"collector {name!r} emits keys {sorted(clash)} already "
-                f"produced by an earlier collector in {collect}"
-            )
-        out.update(emitted)
+    # ---- 6. per-window collector outputs, stacked [stride, ...] ---------
+    n_g = spec.n_guests
+    emits = []
+    for j in range(stride):
+        last = j == stride - 1
+        out_j = {}
+        for name in collect:
+            if name == "hits":
+                emitted = dict(
+                    near_hits=mwin["near"][j][:n_g],
+                    far_hits=mwin["far"][j][:n_g],
+                )
+            elif name == "near_blocks":
+                pre = mwin["near_blocks"][j]
+                if last:
+                    pre = pre + _near_blocks_delta(spec, swaps, pre.shape[0])
+                emitted = dict(near_blocks=pre[:n_g])
+            elif name == "snapshot":
+                # metrics.device_snapshot reconstructed from the exchange:
+                # same int sums -> bit-identical float divisions
+                gstats = {
+                    k: gstats[k] + mwin["stat_delta"][k][j]
+                    + (tick_stats.get(k, 0) if last else 0)
+                    for k in gstats
+                }
+                alloc_near = mwin["alloc_near"][j] + (
+                    _near_scalar_delta(cfg, swaps) if last else 0)
+                rss = jnp.maximum(mwin["alloc_tot"][j], 1)
+                emitted = dict(
+                    epoch=epoch_in + j + 1,
+                    near_usage=alloc_near / rss,
+                    near_capacity_used=alloc_near / cfg.n_near,
+                    hit_rate=gstats["near_hits"] / jnp.maximum(
+                        gstats["near_hits"] + gstats["far_hits"], 1),
+                    **gstats,
+                )
+            elif name == "tco":
+                blocks = mwin["tier_blocks"][j]
+                if last:
+                    blocks = blocks + tiers_mod.tier_count_delta(tv, swaps)
+                emitted = tiers_mod.tco_metrics(cfg, tv, blocks,
+                                                mwin["tier_hits"][j])
+            else:  # pragma: no cover - engine.run_sharded validates upfront
+                raise ValueError(
+                    f"collector {name!r} has no host-sharded form")
+            clash = set(emitted) & set(out_j)
+            if clash:
+                raise ValueError(
+                    f"collector {name!r} emits keys {sorted(clash)} already "
+                    f"produced by an earlier collector in {collect}"
+                )
+            out_j.update(emitted)
+        emits.append(out_j)
+    out = jax.tree_util.tree_map(lambda *x: jnp.stack(x), *emits)
 
     new_carry = dict(
         gpt=gpt, rmap=rmap, guest_counts=gc, ipt_hist=ih, epoch=epoch,
@@ -1060,6 +1180,8 @@ def _host_sharded_window(
     )
     if gstats is not None:
         new_carry["gstats"] = gstats
+    if prefetch is not None:
+        new_carry["acc"] = acc_next
     return new_carry, out
 
 
@@ -1095,7 +1217,7 @@ def _merge_host_final(
         stats={k: carry["stats"][k] - base.stats[k] for k in base.stats},
         epoch=(carry["epoch"] - base.epoch) * d0,
     )
-    m = jax.lax.psum(contrib, AXIS)
+    m = _psum_counted("host_chunk_exit", contrib)
     slot_owner = jnp.zeros((cfg.n_slots,), jnp.int32).at[m["bt"]].set(
         jnp.arange(cfg.n_gpa_hp, dtype=jnp.int32)
     )
@@ -1131,14 +1253,18 @@ def _host_chunk_fn(
     plan=None,  # repro.data.traces.SynthPlan for on-device synthesis
 ):
     """Compiled host-partitioned chunk driver: slice the replicated state
-    into per-device ranges, scan the windows on the partitioned carry, merge
-    back once at the chunk boundary. With a ``plan``, each device
-    synthesizes its local guests' accesses inside the window (same
-    gid-folded key discipline as :func:`_chunk_fn`)."""
+    into per-device ranges, scan the *arbitration groups* (``spec.
+    arbitration_stride`` windows each; stride 1 = one window per group) on
+    the partitioned carry, merge back once at the chunk boundary. With a
+    ``plan``, each device synthesizes its local guests' accesses inside the
+    group (same gid-folded key discipline as :func:`_chunk_fn`) -- one
+    group *ahead*, so the synthesis of the next group's accesses overlaps
+    the in-flight candidate exchange (DESIGN.md §17)."""
     n_shards = mesh_size(mesh)
     cfg = spec.cfg
+    stride = spec.arbitration_stride
 
-    def scan_chunk(state, xs, window, hp_ids):
+    def scan_chunk(state, xs, window, hp_ids, acc0=None):
         carry = dict(
             gpt=state.gpt, rmap=state.rmap, guest_counts=state.guest_counts,
             ipt_hist=state.ipt_hist, epoch=state.epoch, stats=state.stats,
@@ -1146,22 +1272,30 @@ def _host_chunk_fn(
         )
         if "snapshot" in collect:
             carry["gstats"] = dict(state.stats)
-        return jax.lax.scan(window, carry, xs)
+        if acc0 is not None:
+            carry["acc"] = acc0
+        carry, ys = jax.lax.scan(window, carry, xs)
+        # [n_groups, stride, ...] -> [n_windows, ...]
+        ys = jax.tree_util.tree_map(
+            lambda y: y.reshape((y.shape[0] * y.shape[1],) + y.shape[2:]), ys)
+        return carry, ys
 
     if plan is None:
 
         def body(state, chunk, logical_lo, logical_pad, hp_pad,
                  hp_ids, hp_lo, hp_hi):
             hp_ids, hp_lo, hp_hi = hp_ids[0], hp_lo[0], hp_hi[0]
+            groups = chunk.reshape(
+                (chunk.shape[0] // stride, stride) + chunk.shape[1:])
 
-            def window(c, acc):
-                return _host_sharded_window(
-                    spec, n_shards, c, acc, logical_lo, logical_pad, hp_pad,
+            def window(c, accs):
+                return _host_sharded_group(
+                    spec, n_shards, c, accs, logical_lo, logical_pad, hp_pad,
                     hp_ids, hp_lo, hp_hi, policy, backend, use_gpac,
                     max_batches, budget, collect,
                 )
 
-            carry, ys = scan_chunk(state, chunk, window, hp_ids)
+            carry, ys = scan_chunk(state, groups, window, hp_ids)
             return (
                 _merge_host_final(cfg, state, carry, logical_pad, hp_pad, hp_ids),
                 ys,
@@ -1179,16 +1313,28 @@ def _host_chunk_fn(
             hp_ids, hp_lo, hp_hi = hp_ids[0], hp_lo[0], hp_hi[0]
             setup = tr.synth_setup(plan, dict(
                 seeds=seeds, gids=gids, wid=wid, n_logical=n_logical))
+            wg = widx.reshape(widx.shape[0] // stride, stride)
 
-            def window(c, w):
-                acc = tr.synth_accesses(plan, setup, w)
-                return _host_sharded_window(
-                    spec, n_shards, c, acc, logical_lo, logical_pad, hp_pad,
-                    hp_ids, hp_lo, hp_hi, policy, backend, use_gpac,
+            def synth_group(ws):
+                return jnp.stack([
+                    tr.synth_accesses(plan, setup, ws[j])
+                    for j in range(stride)
+                ])
+
+            def window(c, ws_next):
+                return _host_sharded_group(
+                    spec, n_shards, c, c["acc"], logical_lo, logical_pad,
+                    hp_pad, hp_ids, hp_lo, hp_hi, policy, backend, use_gpac,
                     max_batches, budget, collect,
+                    prefetch=synth_group, w_next=ws_next,
                 )
 
-            carry, ys = scan_chunk(state, widx, window, hp_ids)
+            # the scan consumes the carry's pre-synthesized group and
+            # prefetches the *next* one behind the psum; the trailing dummy
+            # indices (last group + stride) synthesize one discarded group
+            w_next = jnp.concatenate([wg[1:], wg[-1:] + stride], axis=0)
+            carry, ys = scan_chunk(
+                state, w_next, window, hp_ids, acc0=synth_group(wg[0]))
             return (
                 _merge_host_final(cfg, state, carry, logical_pad, hp_pad, hp_ids),
                 ys,

@@ -306,6 +306,29 @@ def tick(
     return fn(cfg, state, **kw)
 
 
+def strided_tick(
+    cfg: GpacConfig, state: TieredState, policy: str, *, stride: int,
+    budget: int, tiers=None,
+) -> TieredState:
+    """:func:`tick`, gated by ``EngineSpec.arbitration_stride``: the
+    arbitration runs only on windows whose post-window telemetry epoch is a
+    multiple of ``stride`` (``(state.epoch + 1) % stride == 0`` at tick
+    time, so the gate is chunking- and resume-invariant -- the epoch rides
+    the carry). ``stride=1`` is a static branch compiling to exactly
+    :func:`tick`, keeping the default path's program unchanged. The skipped
+    branch is the identity, so telemetry keeps accumulating across the
+    stride and the batched tick arbitrates on the longer history (DESIGN.md
+    §17)."""
+    if stride == 1:
+        return tick(cfg, state, policy, budget=budget, tiers=tiers)
+    return jax.lax.cond(
+        (state.epoch + 1) % stride == 0,
+        lambda s: tick(cfg, s, policy, budget=budget, tiers=tiers),
+        lambda s: s,
+        state,
+    )
+
+
 # --------------------------------------------------------------------------
 # near-memory pressure controller (graceful degradation under churn/shrink)
 # --------------------------------------------------------------------------

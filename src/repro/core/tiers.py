@@ -700,6 +700,24 @@ def tier_count_delta(tv: TierVector, swaps) -> jax.Array:
     return d
 
 
+def amat_per_hit_ns(cfg: GpacConfig, s: TierSpec) -> float:
+    """Per-hit AMAT cost of one tier: latency plus the base-page transfer
+    time at the tier's bandwidth (1 GB/s moves one byte per ns, so
+    ``base_bytes / bandwidth_gbps`` is already in ns -- a slow far tier pays
+    per-byte, not just per-touch), quantized to sixteenth-ns.
+
+    The quantization is load-bearing for bit-reproducibility, not cosmetic:
+    XLA may contract ``hits * cost + acc`` into an FMA, and whether it does
+    differs between compiled programs (``engine.run``'s scan vs the sharded
+    drivers), so a full-mantissa fractional cost yields 1-ulp AMAT drift
+    across paths. With ``cost = k / 16`` the product ``hits * cost`` and
+    every fixed-order partial sum are exactly representable in float32
+    (while ``hits * k < 2**24``, i.e. up to ~1M quantized ns-weighted hits
+    per tier per window), and an FMA over exact operands equals the
+    separate mul+add -- contraction becomes invisible."""
+    return round(16.0 * (s.latency_ns + cfg.base_bytes / s.bandwidth_gbps)) / 16.0
+
+
 def tco_metrics(
     cfg: GpacConfig, tv: TierVector,
     tier_blocks: jax.Array, tier_hits: jax.Array,
@@ -708,8 +726,10 @@ def tco_metrics(
     AMAT. ``tco = sum_t blocks_t * GB/block * cost_t / compression_t``
     (a compressed tier stores ``compression`` blocks per physical block's
     GB, so its blocks are cheap); ``amat_ns`` charges each tier's hits at
-    its latency. Identical fixed python loop order on every path, so the
-    float accumulation is bit-reproducible."""
+    :func:`amat_per_hit_ns` -- latency plus bandwidth-priced transfer,
+    sixteenth-ns quantized so the fixed python-loop accumulation is exact
+    in float32 and therefore bit-reproducible on every driver path (see
+    the helper's docstring for why fixed order alone is not enough)."""
     gb_per_block = cfg.hp_bytes / float(1 << 30)
     tco = jnp.float32(0.0)
     amat = jnp.float32(0.0)
@@ -718,7 +738,7 @@ def tco_metrics(
         tco = tco + tier_blocks[t].astype(jnp.float32) * jnp.float32(
             gb_per_block * s.cost_per_gb / s.compression)
         amat = amat + tier_hits[t].astype(jnp.float32) * jnp.float32(
-            s.latency_ns)
+            amat_per_hit_ns(cfg, s))
     total = tier_hits.sum().astype(jnp.float32)
     return dict(
         tco=tco,

@@ -1,0 +1,251 @@
+"""Live guest migration: mid-flight state handoff between host partitions.
+
+DESIGN.md §17. A guest is migrated by re-homing its *lane*: the compiled
+geometry never changes (the same static-shape discipline as the churn
+engine's crash/restart faults), the guest's state simply moves from its
+source lane to a vacant destination lane -- on a sharded mesh, a lane in a
+different device partition. The protocol is four host-side phases on the
+replicated state, run between driver calls:
+
+  1. **quiesce** -- flip the source lane inactive in the :class:`~repro.
+     core.engine.ChurnState` activity mask, optionally drive drain windows
+     so in-flight telemetry rolls out (the stepper masks a quiesced lane's
+     accesses to -1, the same value-exact silencing churn uses).
+  2. **extract** -- package the lane's segment-relative state: mappings
+     (``gpt``/``rmap``), guest + host telemetry rows, and the hp-owned
+     payload read through the block table (``data[h] = pools[bt[h]]``, the
+     partitioned path's layout invariant).
+  3. **release** -- crash-style reclaim of the source lane
+     (:func:`repro.core.faults.apply_guest_faults`): its blocks read
+     unallocated the same window, so the tier policies treat them as
+     victims immediately (INV-CRASH-RECLAIM-COMPLETE).
+  4. **inject + resume** -- write the package into the destination lane's
+     existing block-table slots and flip it active. ``block_table`` is a
+     permutation (every huge page owns a slot, allocated or not), so
+     injection needs NO slot allocation; placement restarts wherever the
+     destination's slots sit, while the migrated access histories let the
+     policies re-promote the hot set within an ``ipt_windows`` horizon.
+
+All edits are row copies on the replicated state, so a migration composes
+with any mesh (the next chunk sees the same replicated state regardless of
+how it is driven), with fault schedules, and with the pressure controller
+(whose scalars ride the ChurnState untouched).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import faults as faults_mod
+from repro.core.types import FREE, TieredState
+
+
+@dataclasses.dataclass(frozen=True)
+class GuestPackage:
+    """One extracted lane, segment-relative: every index is rebased to the
+    lane's own segment start, so injection into any geometry-compatible
+    lane is a pure offset add. ``manifest`` is the bytes accounting the
+    at-scale harness reports (payload vs mapping vs telemetry)."""
+
+    source: int
+    n_logical: int
+    hp_size: int
+    gpt: np.ndarray  # int32[n_logical]    segment-relative gpa page ids
+    rmap: np.ndarray  # int32[hp_size*ratio] segment-relative logical | FREE
+    guest_counts: np.ndarray  # int32[n_logical]
+    ipt_hist: np.ndarray  # uint8[n_logical]
+    host_counts: np.ndarray  # int32[hp_size]
+    host_hist: np.ndarray  # uint8[hp_size]
+    last_touch_epoch: np.ndarray  # int32[hp_size]
+    region_epoch: np.ndarray  # int32[hp_size]
+    payload: np.ndarray  # dtype[hp_size, hp_ratio, base_elems]
+
+    @property
+    def manifest(self) -> dict:
+        mapping = self.gpt.nbytes + self.rmap.nbytes
+        telemetry = (
+            self.guest_counts.nbytes + self.ipt_hist.nbytes
+            + self.host_counts.nbytes + self.host_hist.nbytes
+            + self.last_touch_epoch.nbytes + self.region_epoch.nbytes
+        )
+        return dict(
+            payload_bytes=int(self.payload.nbytes),
+            mapping_bytes=int(mapping),
+            telemetry_bytes=int(telemetry),
+            total_bytes=int(self.payload.nbytes + mapping + telemetry),
+        )
+
+
+def _check_lane(spec, g: int, what: str) -> None:
+    if not 0 <= g < spec.n_guests:
+        raise ValueError(
+            f"{what} lane {g} outside [0, {spec.n_guests})")
+
+
+def _compatible(spec, src: int, dst: int) -> None:
+    if src == dst:
+        raise ValueError(f"migration source and destination are both lane {src}")
+    s, d = spec.guests[src], spec.guests[dst]
+    if s.n_logical != d.n_logical:
+        raise ValueError(
+            f"lane geometry mismatch: source lane {src} has n_logical="
+            f"{s.n_logical}, destination lane {dst} has {d.n_logical}")
+    if spec.guest_cl(src) != spec.guest_cl(dst):
+        raise ValueError(
+            f"lane CL mismatch: source lane {src} has cl="
+            f"{spec.guest_cl(src)}, destination lane {dst} has "
+            f"{spec.guest_cl(dst)}")
+
+
+def _pool_rows(cfg, state: TieredState, slots: jnp.ndarray) -> jnp.ndarray:
+    """Payload rows of the given slots, whichever pool they live in."""
+    is_near = slots < cfg.n_near
+    near = state.near_pool[jnp.where(is_near, slots, 0)]
+    far = state.far_pool[jnp.where(is_near, 0, slots - cfg.n_near)]
+    return jnp.where(is_near[:, None, None], near, far)
+
+
+def extract_guest(spec, state: TieredState, g: int) -> GuestPackage:
+    """Package lane ``g``'s state, segment-relative (phase 2)."""
+    _check_lane(spec, g, "source")
+    cfg = spec.cfg
+    lo, hi = spec.logical_range(g)
+    hp_lo, hp_hi = spec.hp_range(g)
+    gpa_lo, gpa_hi = hp_lo * cfg.hp_ratio, hp_hi * cfg.hp_ratio
+    rmap = np.asarray(state.rmap[gpa_lo:gpa_hi])
+    slots = state.block_table[hp_lo:hp_hi]
+    return GuestPackage(
+        source=g,
+        n_logical=hi - lo,
+        hp_size=hp_hi - hp_lo,
+        gpt=np.asarray(state.gpt[lo:hi]) - gpa_lo,
+        rmap=np.where(rmap == int(FREE), int(FREE), rmap - lo).astype(np.int32),
+        guest_counts=np.asarray(state.guest_counts[lo:hi]),
+        ipt_hist=np.asarray(state.ipt_hist[lo:hi]),
+        host_counts=np.asarray(state.host_counts[hp_lo:hp_hi]),
+        host_hist=np.asarray(state.host_hist[hp_lo:hp_hi]),
+        last_touch_epoch=np.asarray(state.last_touch_epoch[hp_lo:hp_hi]),
+        region_epoch=np.asarray(state.region_epoch[hp_lo:hp_hi]),
+        payload=np.asarray(_pool_rows(cfg, state, slots)),
+    )
+
+
+def release_guest(spec, state: TieredState, g: int) -> TieredState:
+    """Crash-style reclaim of lane ``g`` (phase 3): segment freed, telemetry
+    cleared, payload wiped -- the exact fault-engine transition, so the
+    reclaim-completeness contract carries over."""
+    _check_lane(spec, g, "source")
+    n_g = spec.n_guests
+    one_hot = jnp.zeros((n_g,), bool).at[g].set(True)
+    state, _ = faults_mod.apply_guest_faults(
+        spec.canonical(), state, jnp.ones((n_g,), bool), one_hot,
+        jnp.zeros((n_g,), bool),
+    )
+    return state
+
+
+def inject_guest(
+    spec, state: TieredState, g: int, pkg: GuestPackage,
+) -> TieredState:
+    """Re-home a package into vacant lane ``g`` (phase 4): offset-translated
+    mapping/telemetry row writes, payload written through the lane's
+    *existing* block-table slots (the permutation means every huge page
+    already owns one -- no allocation step exists)."""
+    _check_lane(spec, g, "destination")
+    if pkg.source != g:
+        _compatible(spec, pkg.source, g)
+    cfg = spec.cfg
+    lo, hi = spec.logical_range(g)
+    hp_lo, hp_hi = spec.hp_range(g)
+    if hi - lo != pkg.n_logical or hp_hi - hp_lo != pkg.hp_size:
+        raise ValueError(
+            f"package geometry ({pkg.n_logical} logical, {pkg.hp_size} hp) "
+            f"does not fit lane {g} ({hi - lo} logical, "
+            f"{hp_hi - hp_lo} hp)")
+    gpa_lo = hp_lo * cfg.hp_ratio
+    vacant = np.asarray(
+        state.rmap[gpa_lo: hp_hi * cfg.hp_ratio] == FREE).all()
+    if not vacant:
+        raise ValueError(
+            f"destination lane {g} still holds allocated pages; release or "
+            f"crash it before injecting")
+    rmap_abs = jnp.where(
+        jnp.asarray(pkg.rmap) == FREE, FREE, jnp.asarray(pkg.rmap) + lo)
+    slots = state.block_table[hp_lo:hp_hi]
+    is_near = slots < cfg.n_near
+    payload = jnp.asarray(pkg.payload)
+    near_pool = state.near_pool.at[
+        jnp.where(is_near, slots, cfg.n_near)
+    ].set(payload, mode="drop")
+    far_pool = state.far_pool.at[
+        jnp.where(is_near, cfg.n_far, slots - cfg.n_near)
+    ].set(payload, mode="drop")
+    return dataclasses.replace(
+        state,
+        gpt=state.gpt.at[lo:hi].set(jnp.asarray(pkg.gpt) + gpa_lo),
+        rmap=state.rmap.at[gpa_lo: hp_hi * cfg.hp_ratio].set(rmap_abs),
+        guest_counts=state.guest_counts.at[lo:hi].set(
+            jnp.asarray(pkg.guest_counts)),
+        ipt_hist=state.ipt_hist.at[lo:hi].set(jnp.asarray(pkg.ipt_hist)),
+        host_counts=state.host_counts.at[hp_lo:hp_hi].set(
+            jnp.asarray(pkg.host_counts)),
+        host_hist=state.host_hist.at[hp_lo:hp_hi].set(
+            jnp.asarray(pkg.host_hist)),
+        last_touch_epoch=state.last_touch_epoch.at[hp_lo:hp_hi].set(
+            jnp.asarray(pkg.last_touch_epoch)),
+        region_epoch=state.region_epoch.at[hp_lo:hp_hi].set(
+            jnp.asarray(pkg.region_epoch)),
+        near_pool=near_pool,
+        far_pool=far_pool,
+    )
+
+
+def quiesce(cs, g: int):
+    """Flip lane ``g`` inactive in a ChurnState (phase 1). The state is
+    untouched: drive drain windows afterwards if in-flight telemetry should
+    roll out before extraction."""
+    return dataclasses.replace(
+        cs, active=cs.active.at[g].set(False))
+
+
+def resume(cs, g: int):
+    """Flip lane ``g`` active again (end of phase 4)."""
+    return dataclasses.replace(
+        cs, active=cs.active.at[g].set(True))
+
+
+def migrate_guest(spec, cs, src: int, dst: int):
+    """The full live-migration protocol on a ChurnState carry:
+    quiesce(src) -> extract -> release(src) -> inject(dst) -> resume(dst).
+
+    Returns ``(cs, manifest)``: the carry with the guest re-homed and the
+    bytes accounting of the handoff. The destination lane must be vacant
+    (inactive -- a spare lane from ``init_churn(active=...)`` or a crashed
+    one); the source must be active. Runs between driver calls; the next
+    ``run_churn``/``step`` continues with the migrated lane live, on any
+    mesh.
+    """
+    from repro.core.engine import ChurnState
+
+    if not isinstance(cs, ChurnState):
+        raise TypeError(
+            f"migrate_guest needs a ChurnState carry, got {type(cs).__name__}")
+    _check_lane(spec, src, "source")
+    _check_lane(spec, dst, "destination")
+    _compatible(spec, src, dst)
+    active = np.asarray(cs.active)
+    if not active[src]:
+        raise ValueError(f"source lane {src} is not active")
+    if active[dst]:
+        raise ValueError(
+            f"destination lane {dst} is active; migrate into a vacant "
+            f"(inactive) lane")
+    cs = quiesce(cs, src)
+    pkg = extract_guest(spec, cs.state, src)
+    state = release_guest(spec, cs.state, src)
+    state = inject_guest(spec, state, dst, pkg)
+    cs = dataclasses.replace(
+        cs, state=state, active=cs.active.at[dst].set(True))
+    return cs, pkg.manifest

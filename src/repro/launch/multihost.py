@@ -1,0 +1,216 @@
+"""Multi-host runtime: distributed init, global guest mesh, process launcher.
+
+DESIGN.md §17. Three pieces turn the single-process engine into a
+multi-host SPMD program:
+
+* :func:`initialize` -- a ``jax.distributed`` wrapper driven by arguments or
+  the ``REPRO_*`` environment the launcher exports. It must run **before any
+  jax computation** (the CPU client is created on first device query): it
+  selects the cross-process CPU collectives implementation (gloo TCP -- the
+  stock CPU backend refuses multi-process programs outright) and joins the
+  coordination service. A no-op when ``num_processes <= 1``, so worker
+  entry points run unchanged standalone.
+* :func:`global_guest_mesh` -- the engine's ``"guest"``-axis mesh over every
+  process's devices. ``engine.run_sharded``/``run_churn`` on this mesh span
+  hosts with the per-window candidate-exchange psum as the only cross-host
+  collective (host state is range-partitioned and traces synthesize
+  on-device, PR 4/5), bit-identical to the single-process run on the same
+  global mesh (INV-MULTIHOST-EXACT).
+* :func:`launch` -- a subprocess launcher for tests/CI: spawns N coordinated
+  CPU processes, each with ``--xla_force_host_platform_device_count=K``
+  forced local devices and the rendezvous environment, and collects their
+  output. ``launch_check`` is the assertion form the smoke script and the
+  contract harness share.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import socket
+import subprocess
+import sys
+import time
+
+ENV_COORDINATOR = "REPRO_COORDINATOR"
+ENV_NUM_PROCESSES = "REPRO_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_PROCESS_ID"
+ENV_CPU_COLLECTIVES = "REPRO_CPU_COLLECTIVES"
+
+DEFAULT_CPU_COLLECTIVES = "gloo"
+
+
+@dataclasses.dataclass(frozen=True)
+class ProcessInfo:
+    """What :func:`initialize` resolved: this process's slot in the job."""
+
+    process_id: int
+    num_processes: int
+    coordinator_address: str | None
+    local_devices: int
+    global_devices: int
+
+    @property
+    def is_coordinator(self) -> bool:
+        return self.process_id == 0
+
+
+def initialize(coordinator_address: str | None = None,
+               num_processes: int | None = None,
+               process_id: int | None = None,
+               *, cpu_collectives: str | None = None) -> ProcessInfo:
+    """Join (or skip) the distributed job; returns the resolved slot.
+
+    Arguments default to the ``REPRO_COORDINATOR`` / ``REPRO_NUM_PROCESSES``
+    / ``REPRO_PROCESS_ID`` / ``REPRO_CPU_COLLECTIVES`` environment the
+    launcher exports, so a worker entry point is just
+    ``info = multihost.initialize()`` before its first jax call -- run
+    standalone (no environment), that is a no-op and the worker stays a
+    normal single-process program.
+    """
+    env = os.environ
+    if coordinator_address is None:
+        coordinator_address = env.get(ENV_COORDINATOR)
+    if num_processes is None:
+        num_processes = int(env.get(ENV_NUM_PROCESSES, "1"))
+    if process_id is None:
+        process_id = int(env.get(ENV_PROCESS_ID, "0"))
+    if cpu_collectives is None:
+        cpu_collectives = env.get(ENV_CPU_COLLECTIVES,
+                                  DEFAULT_CPU_COLLECTIVES)
+
+    import jax
+
+    if num_processes <= 1:
+        return ProcessInfo(0, 1, None, jax.local_device_count(),
+                           jax.device_count())
+    if coordinator_address is None:
+        raise ValueError(
+            f"multihost.initialize: num_processes={num_processes} needs a "
+            f"coordinator address (argument or ${ENV_COORDINATOR})")
+    if not 0 <= process_id < num_processes:
+        raise ValueError(
+            f"multihost.initialize: process_id={process_id} outside "
+            f"[0, {num_processes})")
+    # The stock XLA CPU client refuses cross-process programs
+    # ("Multiprocess computations aren't implemented on the CPU backend");
+    # the gloo TCP collectives implementation must be selected before the
+    # client exists. Env-var spelling is not read by this flag -- only
+    # config.update works, which is why initialize() must precede any jax
+    # device query.
+    jax.config.update("jax_cpu_collectives_implementation", cpu_collectives)
+    jax.distributed.initialize(coordinator_address=coordinator_address,
+                               num_processes=num_processes,
+                               process_id=process_id)
+    return ProcessInfo(process_id, num_processes, coordinator_address,
+                       jax.local_device_count(), jax.device_count())
+
+
+def global_guest_mesh(n_devices: int | None = None):
+    """The engine's ``"guest"``-axis mesh over every device of every process
+    in the job (after :func:`initialize`). Single-process this is exactly
+    ``sharding.guest_mesh``; multi-process it must span all global devices
+    (partial meshes are rejected there -- a process holding no shard cannot
+    participate in the SPMD program)."""
+    from repro.core import sharding
+
+    return sharding.guest_mesh(n_devices)
+
+
+# --------------------------------------------------------------------------
+# subprocess launcher (tests / CI: N coordinated CPU processes on one box)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LaunchResult:
+    process_id: int
+    returncode: int
+    stdout: str
+
+
+def free_port() -> int:
+    s = socket.socket()
+    try:
+        s.bind(("127.0.0.1", 0))
+        return s.getsockname()[1]
+    finally:
+        s.close()
+
+
+def worker_env(base: dict | None = None, *, coordinator: str,
+               num_processes: int, process_id: int,
+               devices_per_process: int,
+               cpu_collectives: str = DEFAULT_CPU_COLLECTIVES,
+               pythonpath: str = "src") -> dict:
+    """Environment for one coordinated CPU worker: rendezvous variables for
+    :func:`initialize`, forced local device count (fixed at jax init, hence
+    subprocesses), CPU platform pin, and ``src`` on PYTHONPATH."""
+    env = dict(os.environ if base is None else base)
+    env[ENV_COORDINATOR] = coordinator
+    env[ENV_NUM_PROCESSES] = str(num_processes)
+    env[ENV_PROCESS_ID] = str(process_id)
+    env[ENV_CPU_COLLECTIVES] = cpu_collectives
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices_per_process}")
+    env["JAX_PLATFORMS"] = "cpu"
+    prev = env.get("PYTHONPATH")
+    env["PYTHONPATH"] = f"{pythonpath}:{prev}" if prev else pythonpath
+    return env
+
+
+def launch(worker: str, *, num_processes: int = 2,
+           devices_per_process: int = 2, args: tuple = (),
+           timeout: float = 600.0, cwd: str | None = None,
+           env: dict | None = None,
+           cpu_collectives: str = DEFAULT_CPU_COLLECTIVES,
+           ) -> list[LaunchResult]:
+    """Spawn ``num_processes`` coordinated CPU workers running
+    ``python worker *args`` and wait for all of them.
+
+    Every worker gets the same argv; its slot arrives via the ``REPRO_*``
+    environment (:func:`worker_env`), consumed by :func:`initialize` at the
+    top of the worker. Stdout+stderr are captured per process. On timeout
+    every worker is killed and ``TimeoutError`` raised -- a hung collective
+    in one process would otherwise hang the whole launch.
+    """
+    if num_processes < 1:
+        raise ValueError(f"launch: num_processes must be >= 1, "
+                         f"got {num_processes}")
+    coordinator = f"127.0.0.1:{free_port()}"
+    procs = []
+    for i in range(num_processes):
+        wenv = worker_env(env, coordinator=coordinator,
+                          num_processes=num_processes, process_id=i,
+                          devices_per_process=devices_per_process,
+                          cpu_collectives=cpu_collectives)
+        procs.append(subprocess.Popen(
+            [sys.executable, worker, *map(str, args)],
+            stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+            text=True, env=wenv, cwd=cwd))
+    deadline = time.monotonic() + timeout
+    results = []
+    try:
+        for i, p in enumerate(procs):
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise subprocess.TimeoutExpired(p.args, timeout)
+            out, _ = p.communicate(timeout=remaining)
+            results.append(LaunchResult(i, p.returncode, out))
+    except subprocess.TimeoutExpired:
+        for p in procs:
+            p.kill()
+        raise TimeoutError(
+            f"multihost.launch: {num_processes}-process job exceeded "
+            f"{timeout}s") from None
+    return results
+
+
+def launch_check(worker: str, *, marker: str, **kw) -> list[LaunchResult]:
+    """:func:`launch` + assert every worker exited 0 with ``marker`` in its
+    output; failures re-raise with the failing worker's full output."""
+    results = launch(worker, **kw)
+    for r in results:
+        if r.returncode != 0 or marker not in r.stdout:
+            raise AssertionError(
+                f"multihost worker {r.process_id} "
+                f"{'failed' if r.returncode else 'missing marker'} "
+                f"(rc={r.returncode}, marker={marker!r}):\n{r.stdout}")
+    return results

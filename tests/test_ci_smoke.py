@@ -70,6 +70,20 @@ def test_tiers_smoke_runs_on_forced_mesh():
     assert "tiers smoke OK" in proc.stdout
 
 
+def test_multihost_smoke_launches_coordinated_job():
+    """The multi-host smoke self-launches its 2-process x 2-device job; run
+    it from a clean parent process exactly as CI's smoke step does (the
+    launcher must not inherit a forced device count or live jax client)."""
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, "ci_smoke_multihost.py")],
+        env=dict(os.environ), cwd=ROOT, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert proc.returncode == 0, (
+        f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+    assert "multihost smoke: OK" in proc.stdout
+
+
 def test_tiers_smoke_refuses_wrong_device_count():
     import jax
 

@@ -35,6 +35,7 @@ EXPECTED = (
     "INV-CHURN-NOOP-EXACT",
     "INV-CRASH-RECLAIM-COMPLETE",
     "INV-KERNEL-BACKEND-EXACT",
+    "INV-MULTIHOST-EXACT",
     "INV-OWNERSHIP-MERGE-EXACT",
     "INV-PRESSURE-NO-OVERCOMMIT",
     "INV-SYNTH-DETERMINISM",

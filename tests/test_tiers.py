@@ -375,13 +375,36 @@ class TestTcoCollector:
         assert out["tier_blocks"].shape == (3, tv.n_tiers)
         assert out["tier_hits"].shape == (3, tv.n_tiers)
         assert (out["tco"] > 0).all()
-        lats = [s.latency_ns for s in tv.tiers]
+        # per-hit cost per tier = latency + base-page transfer at bandwidth
+        costs = [tiers.amat_per_hit_ns(spec.cfg, s) for s in tv.tiers]
         live = out["amat_ns"][out["tier_hits"].sum(axis=1) > 0]
-        assert (live >= min(lats)).all() and (live <= max(lats)).all()
+        assert (live >= min(costs)).all() and (live <= max(costs)).all()
         # per-tier hit split sums to the total hit count (hits are per-guest)
         np.testing.assert_array_equal(
             out["tier_hits"].sum(axis=1),
             (out["near_hits"] + out["far_hits"]).sum(axis=1))
+
+    def test_bandwidth_prices_amat_transfer_term(self):
+        """Halving one tier's bandwidth raises AMAT by exactly that tier's
+        share of the extra base-page transfer time; tco (a capacity price,
+        not a traffic price) is untouched."""
+        cfg = small_cfg()
+        fast = tiers.compressed_specs(0.2, 0.2)
+        slow = tuple(
+            dataclasses.replace(s, bandwidth_gbps=s.bandwidth_gbps / 2)
+            if t == 2 else s for t, s in enumerate(fast))
+        tvf = tiers.resolve(fast, cfg.n_slots, cfg.n_gpa_hp)
+        tvs = tiers.TierVector(tiers=slow, boundaries=tvf.boundaries)
+        blocks = jnp.asarray([3, 4, 3], jnp.int32)
+        hits = jnp.asarray([50, 30, 20], jnp.int32)
+        mf = tiers.tco_metrics(cfg, tvf, blocks, hits)
+        ms = tiers.tco_metrics(cfg, tvs, blocks, hits)
+        extra = (int(hits[2]) / int(hits.sum())
+                 * (tiers.amat_per_hit_ns(cfg, slow[2])
+                    - tiers.amat_per_hit_ns(cfg, fast[2])))
+        np.testing.assert_allclose(
+            float(ms["amat_ns"]) - float(mf["amat_ns"]), extra, rtol=2e-3)
+        assert float(ms["tco"]) == float(mf["tco"])
 
     def test_compression_lowers_tco_at_equal_capacity(self):
         """The TCO objective orders configurations: compressing the middle
